@@ -1,0 +1,30 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def save_rows(name: str, rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

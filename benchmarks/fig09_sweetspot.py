@@ -1,0 +1,60 @@
+"""Paper Fig. 9: the TATP parallel-degree sweet spot.
+
+One GPT-3 175B layer distributed across N dies (weights streamed, the base
+TSPP design): compute scales 1/N, streamed communication stays ~constant, so
+throughput peaks once communication binds; power efficiency peaks earlier.
+Paper claim: throughput sweet spot N≈8–16, power sweet spot N≈4–8.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.simulator import ParallelDegrees, simulate_step
+from repro.wafer.topology import Wafer, WaferSpec
+
+
+def run(batch: int = 4, seq: int = 2048) -> list[dict]:
+    wafer = Wafer(WaferSpec())
+    cfg, _ = TABLE_II["gpt3-175b"]
+    one_layer = replace(cfg, n_layers=1)
+    rows = []
+    for n in (1, 2, 4, 8, 16, 32):
+        r = simulate_step(wafer, one_layer, batch, seq,
+                          ParallelDegrees(dp=1, tatp=n), "tcme",
+                          stream="weights", dies=list(range(n)))
+        rows.append({
+            "n": n,
+            "throughput": r.throughput,
+            "throughput_per_die": r.throughput / n,
+            "power_eff": r.power_eff,
+            "mem_per_die_gb": r.mem_per_die / 1e9,
+            "comp_ms": r.breakdown["comp_layer"] * 1e3,
+            "p2p_ms": r.breakdown["p2p_layer"] * 1e3,
+        })
+    save_rows("fig09_sweetspot", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    # knee: first N where compute no longer dominates (comm-bound onset)
+    knee = next((r["n"] for r in rows if r["p2p_ms"] >= r["comp_ms"]),
+                rows[-1]["n"])
+    pe = [r["power_eff"] for r in rows]
+    pe_peak = rows[int(np.argmax(pe))]["n"]
+    print(csv_row("fig09/sweet_spot", knee * 1e6,
+                  f"comm_bound_at_N={knee} power_eff_peak_N={pe_peak} "
+                  f"mem_scaling={'1/N' if rows[-1]['mem_per_die_gb'] < rows[1]['mem_per_die_gb'] else '??'}"))
+    for r in rows:
+        print(csv_row(f"fig09/N{r['n']}", r["comp_ms"] * 1e3,
+                      f"thr={r['throughput']:.0f} p2p_ms={r['p2p_ms']:.2f} "
+                      f"peff={r['power_eff']:.1f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Fig. 13: training throughput + peak memory, TEMP vs the six
+baselines (Mega/MeSP/FSDP × SMap/GMap) across the Table II models."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.simulator import best_config
+from repro.wafer.topology import Wafer, WaferSpec
+
+BASELINES = [("mega", "smap"), ("mega", "gmap"), ("mesp", "smap"),
+             ("mesp", "gmap"), ("fsdp", "smap"), ("fsdp", "gmap")]
+
+
+def run() -> list[dict]:
+    wafer = Wafer(WaferSpec())
+    rows = []
+    for name, (cfg, shape) in TABLE_II.items():
+        temp = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                           "temp", "tcme")
+        rec = {
+            "model": name,
+            "temp_throughput": temp.throughput,
+            "temp_config": temp.degrees.as_tuple(),
+            "temp_mem_gb": temp.mem_per_die / 1e9,
+            "temp_oom": temp.oom,
+            "temp_collective_frac": temp.breakdown["collective_frac"],
+        }
+        for space, engine in BASELINES:
+            r = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                            space, engine)
+            key = f"{space}+{engine}"
+            rec[f"{key}_throughput"] = r.throughput
+            rec[f"{key}_oom"] = r.oom
+            rec[f"{key}_mem_gb"] = r.mem_per_die / 1e9
+            rec[f"{key}_speedup"] = (temp.throughput / r.throughput
+                                     if r.throughput else float("inf"))
+            rec[f"{key}_collective_frac"] = r.breakdown["collective_frac"]
+        rows.append(rec)
+    save_rows("fig13_throughput", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for space, engine in BASELINES:
+        key = f"{space}+{engine}"
+        sus = [r[f"{key}_speedup"] for r in rows
+               if not r[f"{key}_oom"] and not r["temp_oom"]
+               and np.isfinite(r[f"{key}_speedup"])]
+        mems = [r["temp_mem_gb"] / r[f"{key}_mem_gb"] for r in rows
+                if not r[f"{key}_oom"] and not r["temp_oom"]]
+        collred = [1 - r["temp_collective_frac"]
+                   / max(r[f"{key}_collective_frac"], 1e-9) for r in rows
+                   if not r[f"{key}_oom"]]
+        out.append(csv_row(
+            f"fig13/speedup_vs_{key}", float(np.mean(sus)) * 1e6 if sus
+            else 0.0,
+            f"speedup={np.mean(sus):.2f}x mem_ratio={np.mean(mems):.2f} "
+            f"coll_red={np.mean(collred):.0%}" if sus else "all-OOM"))
+    return out
+
+
+def main():
+    rows = run()
+    for line in summarize(rows):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Fig. 14: power efficiency (throughput per Watt) comparison."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from benchmarks.fig13_throughput import BASELINES
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.simulator import best_config
+from repro.wafer.topology import Wafer, WaferSpec
+
+
+def run() -> list[dict]:
+    wafer = Wafer(WaferSpec())
+    rows = []
+    for name, (cfg, shape) in TABLE_II.items():
+        temp = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                           "temp", "tcme")
+        rec = {"model": name, "temp_power_w": temp.power,
+               "temp_power_eff": temp.power_eff,
+               "temp_e_d2d": temp.breakdown["e_d2d"],
+               "temp_oom": temp.oom}
+        for space, engine in BASELINES:
+            r = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                            space, engine)
+            key = f"{space}+{engine}"
+            rec[f"{key}_power_w"] = r.power
+            rec[f"{key}_power_eff"] = r.power_eff
+            rec[f"{key}_e_d2d"] = r.breakdown["e_d2d"]
+            rec[f"{key}_oom"] = r.oom
+            rec[f"{key}_peff_gain"] = (temp.power_eff / r.power_eff
+                                       if r.power_eff else float("inf"))
+            rec[f"{key}_power_ratio"] = (temp.power / r.power
+                                         if r.power else float("inf"))
+            rec[f"{key}_comm_energy_red"] = 1 - (
+                temp.breakdown["e_d2d"] / max(r.breakdown["e_d2d"], 1e-9))
+        rows.append(rec)
+    save_rows("fig14_power", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    for space, engine in BASELINES:
+        key = f"{space}+{engine}"
+        gains = [r[f"{key}_peff_gain"] for r in rows
+                 if not r[f"{key}_oom"] and not r["temp_oom"]
+                 and np.isfinite(r[f"{key}_peff_gain"])]
+        ratios = [r[f"{key}_power_ratio"] for r in rows
+                  if not r[f"{key}_oom"] and not r["temp_oom"]]
+        if gains:
+            print(csv_row(f"fig14/peff_vs_{key}", np.mean(gains) * 1e6,
+                          f"peff_gain={np.mean(gains):.2f}x "
+                          f"power_ratio={np.mean(ratios):.2f}"))
+
+
+if __name__ == "__main__":
+    main()

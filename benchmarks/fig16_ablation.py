@@ -1,0 +1,58 @@
+"""Paper Fig. 16: ablation — FSDP+SMap baseline, +TATP, +TCME.
+
+Paper claim: +TATP averages 1.21×, +TCME adds 1.14×, gains grow with model
+size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.simulator import best_config
+from repro.wafer.topology import Wafer, WaferSpec
+
+
+def run() -> list[dict]:
+    wafer = Wafer(WaferSpec())
+    rows = []
+    for name, (cfg, shape) in TABLE_II.items():
+        base = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                           "fsdp", "smap")
+        tatp = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                           "fsdp+tatp", "smap")
+        full = best_config(wafer, cfg, shape.global_batch, shape.seq_len,
+                           "temp", "tcme")
+        rows.append({
+            "model": name,
+            "params": cfg.param_count(),
+            "base": base.throughput, "base_oom": base.oom,
+            "plus_tatp": tatp.throughput, "tatp_oom": tatp.oom,
+            "plus_tcme": full.throughput, "full_oom": full.oom,
+            "tatp_gain": tatp.throughput / base.throughput,
+            "tcme_gain": full.throughput / tatp.throughput,
+        })
+    save_rows("fig16_ablation", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    ok = [r for r in rows if not (r["base_oom"] or r["tatp_oom"]
+                                  or r["full_oom"])]
+    tg = float(np.mean([r["tatp_gain"] for r in ok]))
+    cg = float(np.mean([r["tcme_gain"] for r in ok]))
+    big = sorted(ok, key=lambda r: r["params"])
+    grow = (big[-1]["tatp_gain"] * big[-1]["tcme_gain"]
+            >= big[0]["tatp_gain"] * big[0]["tcme_gain"])
+    print(csv_row("fig16/ablation", tg * 1e6,
+                  f"tatp_gain={tg:.2f}x tcme_gain={cg:.2f}x "
+                  f"grows_with_size={grow}"))
+    for r in rows:
+        print(csv_row(f"fig16/{r['model']}", r["tatp_gain"] * 1e6,
+                      f"+tatp={r['tatp_gain']:.2f} +tcme={r['tcme_gain']:.2f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 17/18: mixed-parallelism analysis.
+
+Fig. 17: Llama2-7B on 32 dies at short (2k) and long (16k) sequences across
+(dp, tp, sp, tatp) configurations — the optimum mixes TATP (degree 8–16)
+with DP for short sequences and SP/TP for long.
+Fig. 18: GPT-3 {6.7B, 76B, 175B} × {2k, 16k}: optimal TATP degree
+consistently 8–16; gain vs the best no-TATP config.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.simulator import (ParallelDegrees, best_config,
+                                   candidate_degrees, simulate_step)
+from repro.wafer.topology import Wafer, WaferSpec
+
+
+def sweep(cfg, batch, seq, wafer) -> list[dict]:
+    rows = []
+    for deg in candidate_degrees(32, {"dp": True, "tp": True, "sp": True,
+                                      "tatp": True}):
+        r = simulate_step(wafer, cfg, batch, seq, deg, "tcme")
+        rows.append({"config": deg.as_tuple(), "throughput": r.throughput,
+                     "oom": r.oom, "mem_gb": r.mem_per_die / 1e9})
+    return sorted(rows, key=lambda r: -r["throughput"])
+
+
+def run() -> dict:
+    wafer = Wafer(WaferSpec())
+    out = {}
+    cfg7, _ = TABLE_II["llama2-7b"]
+    out["llama2_7b_s2k"] = sweep(cfg7, 128, 2048, wafer)[:10]
+    out["llama2_7b_s16k"] = sweep(cfg7, 32, 16384, wafer)[:10]
+    for name in ("gpt3-6.7b", "gpt3-76b", "gpt3-175b"):
+        cfg, _ = TABLE_II[name]
+        for seq, batch in ((2048, 128), (16384, 16)):
+            key = f"{name}_s{seq//1024}k"
+            ranked = sweep(cfg, batch, seq, wafer)
+            best = next((r for r in ranked if not r["oom"]), ranked[0])
+            no_tatp = [r for r in ranked if r["config"][3] == 1
+                       and not r["oom"]]
+            out[key] = {
+                "best": best,
+                "best_tatp_degree": best["config"][3],
+                "gain_vs_no_tatp": (best["throughput"]
+                                    / no_tatp[0]["throughput"])
+                if no_tatp else float("inf"),
+            }
+    save_rows("fig17_18_mixed", out)
+    return out
+
+
+def main():
+    out = run()
+    for key in ("llama2_7b_s2k", "llama2_7b_s16k"):
+        top = out[key][0]
+        print(csv_row(f"fig17/{key}", top["throughput"],
+                      f"best={top['config']}"))
+    degs = []
+    for key, v in out.items():
+        if key.startswith("gpt3"):
+            degs.append(v["best_tatp_degree"])
+            print(csv_row(f"fig18/{key}", v["gain_vs_no_tatp"] * 1e6,
+                          f"best={v['best']['config']} "
+                          f"gain_vs_no_tatp={v['gain_vs_no_tatp']:.2f}x"))
+    inside = sum(1 for d in degs if 8 <= d <= 32)
+    print(csv_row("fig18/tatp_degree_convergence", float(np.median(degs)),
+                  f"median_tatp={np.median(degs)} in_8_32={inside}/{len(degs)}"))
+
+
+if __name__ == "__main__":
+    main()

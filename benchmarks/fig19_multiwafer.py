@@ -1,0 +1,75 @@
+"""Paper Fig. 19: multi-wafer scaling (GPT-3 175B ×2, Grok-1 341B ×4,
+Llama3 405B ×4, GPT-3 504B ×6 wafers) with pipeline parallelism between
+wafers.
+
+TEMP's TATP lets each wafer hold a *larger* model shard efficiently, so the
+pipeline degree can stay at the wafer count (pp = N_wafers) instead of a
+multiple of it — fewer pipeline bubbles (paper: 1.2–1.6× over baselines).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import MULTI_WAFER
+from repro.wafer.simulator import best_config
+from repro.wafer.topology import Wafer, WaferSpec
+
+INTER_WAFER_BW = 9e12  # paper Takeaway 3: ~9 TB/s between wafers
+
+
+def pipeline_time(per_stage_step: float, pp: int, n_micro: int,
+                  stage_act_bytes: float) -> float:
+    """GPipe schedule: (n_micro + pp − 1) micro-steps + inter-stage P2P."""
+    micro = per_stage_step / n_micro
+    p2p = stage_act_bytes / INTER_WAFER_BW
+    return (n_micro + pp - 1) * (micro + p2p)
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, ((cfg, shape), n_wafers) in MULTI_WAFER.items():
+        wafer = Wafer(WaferSpec())
+        n_micro = 8
+        from dataclasses import replace
+        stage_cfg = replace(cfg, n_layers=max(1, cfg.n_layers // n_wafers))
+        act_bytes = shape.global_batch * shape.seq_len * cfg.d_model * 2
+        rec = {"model": name, "wafers": n_wafers}
+        for label, space, engine, pp_mult in (
+                ("temp", "temp", "tcme", 1),
+                ("mesp+gmap", "mesp", "gmap", 2),
+                ("fsdp+gmap", "fsdp", "gmap", 2)):
+            pp = n_wafers * pp_mult
+            sub_cfg = replace(cfg, n_layers=max(1, cfg.n_layers // pp))
+            intra = best_config(wafer, sub_cfg, shape.global_batch,
+                                shape.seq_len, space, engine)
+            t = pipeline_time(intra.step_time * pp, pp, n_micro, act_bytes)
+            bubble = (pp - 1) / (n_micro + pp - 1)
+            rec[f"{label}_time"] = t
+            rec[f"{label}_bubble"] = bubble
+            rec[f"{label}_pp"] = pp
+            rec[f"{label}_oom"] = intra.oom
+        rec["speedup_vs_mesp"] = rec["mesp+gmap_time"] / rec["temp_time"]
+        rec["speedup_vs_fsdp"] = rec["fsdp+gmap_time"] / rec["temp_time"]
+        rec["bubble_reduction"] = (rec["mesp+gmap_bubble"]
+                                   - rec["temp_bubble"])
+        rows.append(rec)
+    save_rows("fig19_multiwafer", rows)
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(csv_row(
+            f"fig19/{r['model']}", r["temp_time"] * 1e6,
+            f"x{r['wafers']}wafers speedup_mesp={r['speedup_vs_mesp']:.2f} "
+            f"speedup_fsdp={r['speedup_vs_fsdp']:.2f} "
+            f"bubble_red={r['bubble_reduction']:.2f}"))
+    avg = np.mean([r["speedup_vs_mesp"] for r in rows])
+    print(csv_row("fig19/avg_speedup", avg * 1e6, f"avg={avg:.2f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 20: fault tolerance — normalized throughput vs link/core
+fault rate.  Paper: resilient to core faults (≈80% at 25%), link-fault
+cliff near 35%."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.fault import throughput_vs_fault_rate
+from repro.wafer.topology import Wafer, WaferSpec
+
+
+def run() -> dict:
+    wafer = Wafer(WaferSpec())
+    cfg, shape = TABLE_II["gpt3-6.7b"]
+    out = {
+        "core": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
+                                         kind="core"),
+        "link": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
+                                         kind="link"),
+    }
+    save_rows("fig20_fault", out)
+    return out
+
+
+def main():
+    out = run()
+    for kind in ("core", "link"):
+        for r in out[kind]:
+            print(csv_row(f"fig20/{kind}@{r['rate']:.2f}",
+                          r["normalized"] * 1e6,
+                          f"norm_thr={r['normalized']:.2f} alive={r['alive']}"))
+        at25 = next(r for r in out[kind] if abs(r["rate"] - 0.25) < 1e-9)
+        print(csv_row(f"fig20/{kind}_resilience", at25["normalized"] * 1e6,
+                      f"norm_thr_at_25pct={at25['normalized']:.2f}"))
+
+
+if __name__ == "__main__":
+    main()

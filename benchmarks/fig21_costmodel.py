@@ -1,0 +1,61 @@
+"""Paper Fig. 21 + §VIII-G: DNN cost-model accuracy vs multivariate linear
+regression on 500 held-out cases; plus the lookup-vs-simulate speedup."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows
+from repro.configs.paper_models import TABLE_II
+from repro.wafer.dnn_cost import (evaluate, featurize, fit_linear,
+                                  make_dataset, train_dnn)
+from repro.wafer.simulator import ParallelDegrees, simulate_step
+from repro.wafer.topology import Wafer, WaferSpec
+
+
+def run(n_cases: int = 500) -> dict:
+    wafer = Wafer(WaferSpec())
+    cfgs = [TABLE_II[k][0] for k in ("gpt3-6.7b", "llama2-7b", "gpt3-175b")]
+    xs, ys = make_dataset(wafer, cfgs, n=n_cases, seed=0)
+    n_tr = int(0.8 * len(xs))
+    dnn = train_dnn(xs[:n_tr], ys[:n_tr], epochs=500)
+    lin = fit_linear(xs[:n_tr], ys[:n_tr])
+    dnn_m = evaluate(dnn.predict(xs[n_tr:]), ys[n_tr:])
+    lin_m = evaluate(lin(xs[n_tr:]), ys[n_tr:])
+
+    # lookup vs simulation latency
+    cfg = cfgs[0]
+    deg = ParallelDegrees(dp=2, tatp=16)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        simulate_step(wafer, cfg, 64, 2048, deg, "tcme")
+    t_sim = (time.perf_counter() - t0) / 20
+    x = featurize(cfg, 64, 2048, deg, "tcme")[None]
+    dnn.predict(x)  # warm
+    t0 = time.perf_counter()
+    for _ in range(200):
+        dnn.predict(x)
+    t_dnn = (time.perf_counter() - t0) / 200
+
+    out = {"dnn": dnn_m, "linear": lin_m, "n_cases": len(xs),
+           "t_simulate_s": t_sim, "t_lookup_s": t_dnn,
+           "lookup_speedup": t_sim / t_dnn}
+    save_rows("fig21_costmodel", out)
+    return out
+
+
+def main():
+    out = run()
+    for tgt in ("log_step", "log_comp", "log_comm", "log_overlap"):
+        d, l = out["dnn"][tgt], out["linear"][tgt]
+        print(csv_row(f"fig21/{tgt}", d["rel_err"] * 1e6,
+                      f"dnn_corr={d['corr']:.3f} dnn_err={d['rel_err']:.1%} "
+                      f"lin_corr={l['corr']:.3f} lin_err={l['rel_err']:.1%}"))
+    print(csv_row("fig21/lookup_speedup", out["t_lookup_s"] * 1e6,
+                  f"{out['lookup_speedup']:.0f}x faster than simulation"))
+
+
+if __name__ == "__main__":
+    main()

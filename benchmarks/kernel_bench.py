@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: wall-clock per call (CPU; interpret-mode numbers
+are correctness artifacts — TPU perf comes from the roofline analysis)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, save_rows, timed
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd_chunked_fast
+from repro.kernels.tatp_matmul.ref import matmul_ref
+
+
+def run() -> list[dict]:
+    rng = np.random.RandomState(0)
+    rows = []
+
+    # TATP per-round GEMM (XLA:CPU reference path)
+    for m, n, k in ((256, 512, 512), (512, 1024, 1024)):
+        a = jnp.asarray(rng.randn(m, n), jnp.float32)
+        b = jnp.asarray(rng.randn(n, k), jnp.float32)
+        f = jax.jit(matmul_ref)
+        dt, _ = timed(lambda: jax.block_until_ready(f(a, b)))
+        flops = 2 * m * n * k
+        rows.append({"name": f"tatp_gemm_{m}x{n}x{k}", "us": dt * 1e6,
+                     "derived": f"{flops/dt/1e9:.1f}GFLOP/s"})
+
+    # attention reference
+    q = jnp.asarray(rng.randn(1, 8, 512, 64), jnp.float32)
+    kv = jnp.asarray(rng.randn(1, 8, 512, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    dt, _ = timed(lambda: jax.block_until_ready(f(q, kv, kv)))
+    rows.append({"name": "attention_b1h8s512d64", "us": dt * 1e6,
+                 "derived": ""})
+
+    # SSD chunked
+    x = jnp.asarray(rng.randn(2, 256, 8, 64), jnp.float32)
+    dtt = jnp.asarray(np.abs(rng.randn(2, 256, 8)) * 0.1, jnp.float32)
+    a_ = -jnp.asarray(np.abs(rng.randn(8)) + 0.1, jnp.float32)
+    bm = jnp.asarray(rng.randn(2, 256, 64), jnp.float32)
+    dt, _ = timed(lambda: jax.block_until_ready(
+        ssd_chunked_fast(x, dtt, a_, bm, bm, 64, use_kernel=False).y))
+    rows.append({"name": "ssd_b2l256h8", "us": dt * 1e6, "derived": ""})
+
+    save_rows("kernel_bench", rows)
+    return rows
+
+
+def main():
+    for r in run():
+        print(csv_row(f"kernel/{r['name']}", r["us"], r["derived"]))
+
+
+if __name__ == "__main__":
+    main()

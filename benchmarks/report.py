@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md data tables from results/ artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        name = os.path.basename(path)[:-5]
+        if name.count("__") > 2:  # variant records listed in §Perf instead
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        rows.append(r)
+    lines = ["| cell | mesh | status | compile_s | HLO GFLOPs/dev | "
+             "coll GB/dev | peak GiB/dev |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        cell = f"{r['arch']} × {r['shape']}"
+        if r.get("status") != "ok":
+            lines.append(f"| {cell} | {r['mesh']} | {r['status']} | — | — | "
+                         f"— | — |")
+            continue
+        lines.append(
+            f"| {cell} | {r['mesh']} | ok | {r['compile_s']} | "
+            f"{r['flops']/1e9:.0f} | "
+            f"{r['collectives']['total_bytes']/1e9:.1f} | "
+            f"{r['memory']['peak_bytes']/2**30:.2f} |")
+    n_ok = sum(1 for r in rows if r.get("status") == "ok")
+    n_skip = sum(1 for r in rows if r.get("status") == "skipped")
+    lines.append("")
+    lines.append(f"cells: {n_ok} compiled ok, {n_skip} skipped "
+                 f"(long_500k × full-attention archs), "
+                 f"{len(rows) - n_ok - n_skip} errors")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "pod") -> str:
+    sys.path.insert(0, os.path.dirname(__file__) + "/..")
+    from benchmarks.roofline import load_all
+    rows = [r for r in load_all() if r.get("status") == "ok"
+            and r["mesh"] == mesh and r.get("variant", "baseline")
+            == "baseline"]
+    lines = ["| cell | compute s | memory s (fused est.) | HLO-raw mem s | "
+             "collective s | dominant | MODEL/HLO | roofline |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: x["cell"]):
+        lines.append(
+            f"| {r['arch']} × {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_memory_hlo_raw_s']:.2f} | "
+            f"{r['t_collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {100*r['roofline_fraction']:.1f}% |")
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    """Baseline vs variant comparison for the hillclimbed cells."""
+    cells = {}
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        cells.setdefault(key, {})[r.get("variant", "baseline")] = r
+    from benchmarks.roofline import analyze_record
+    lines = ["| cell | variant | compute s | collective s | coll GB | "
+             "peak GiB | roofline |",
+             "|---|---|---|---|---|---|---|"]
+    for key, variants in sorted(cells.items()):
+        if len(variants) < 2:
+            continue
+        for vname in sorted(variants, key=lambda v: (v != "baseline", v)):
+            r = variants[vname]
+            a = analyze_record(r)
+            lines.append(
+                f"| {key[0]} × {key[1]} | {vname} | "
+                f"{a['t_compute_s']:.3f} | {a['t_collective_s']:.3f} | "
+                f"{a['collective_gb']:.0f} | {a['peak_gib']:.2f} | "
+                f"{100*a['roofline_fraction']:.1f}% |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if which in ("roofline", "all"):
+        print("\n## Roofline (single-pod)\n")
+        print(roofline_table())
+    if which in ("perf", "all"):
+        print("\n## Perf variants\n")
+        print(perf_table())

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo contract; detailed
+records land in results/bench/*.json.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+BENCHES = [
+    "fig09_sweetspot",
+    "fig13_throughput",
+    "fig14_power",
+    "fig16_ablation",
+    "fig17_mixed",
+    "fig19_multiwafer",
+    "fig20_fault",
+    "fig21_costmodel",
+    "search_time",
+    "kernel_bench",
+]
+
+
+def main() -> None:
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in BENCHES:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,ERROR")
+    # roofline table comes from the dry-run artifacts when present
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_all()
+        ok = [r for r in rows if r.get("status") == "ok"]
+        if ok:
+            frac = sum(r["roofline_fraction"] for r in ok) / len(ok)
+            print(f"roofline/mean_fraction,{frac*1e6:.1f},"
+                  f"mean_roofline={frac:.2%} cells={len(ok)}")
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the TEMP stack in five minutes (single CPU device).
+
+1. Pick an assigned architecture (reduced config for CPU).
+2. Run one TATP training step through the public API.
+3. Solve a wafer mapping with TCME + DLWS and print the plan.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs import get_reduced
+from repro.configs.base import ParallelConfig, ShapeConfig
+from repro.core.dist import Dist, make_mesh
+from repro.train.data import SyntheticDataset
+from repro.train.train_loop import make_train_step
+
+
+def main():
+    # --- 1. model + mesh ---------------------------------------------------
+    cfg = get_reduced("qwen2-72b")  # same family, CPU-sized
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dist = Dist(mesh)
+    par = ParallelConfig(strategy="tatp", remat=False)
+    shape = ShapeConfig("quickstart", "train", seq_len=64, global_batch=4)
+
+    # --- 2. one training step ------------------------------------------------
+    bundle = make_train_step(cfg, par, dist, shape)
+    params, opt_state = bundle.init_fn(jax.random.key(0))
+    data = SyntheticDataset(cfg, shape, dist)
+    for step in range(3):
+        batch = data.batch(step, bundle.bspecs)
+        params, opt_state, metrics = bundle.step_fn(params, opt_state, batch)
+        print(f"step {step}: loss={float(metrics['loss']):.4f} "
+              f"gnorm={float(metrics['grad_norm']):.3f}")
+
+    # --- 3. wafer mapping plan ----------------------------------------------
+    from repro.configs.paper_models import TABLE_II
+    from repro.wafer.solver import dlws_solve
+    from repro.wafer.topology import Wafer, WaferSpec
+
+    wafer = Wafer(WaferSpec())
+    gpt, gshape = TABLE_II["gpt3-6.7b"]
+    sol = dlws_solve(wafer, gpt, gshape.global_batch, gshape.seq_len)
+    print(f"\nDLWS plan for GPT-3 6.7B on the 4x8 wafer: "
+          f"(dp,tp,sp,tatp)={sol.config.as_tuple()} "
+          f"throughput={sol.best.throughput/1e6:.2f} Mtok/s "
+          f"({sol.search_time_s:.2f}s search, {sol.evaluated} sims)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serve a small model with batched requests: prefill + token-by-token
+decode against the context-parallel sharded cache layout.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import subprocess
+import sys
+
+
+def main():
+    # the serving driver is the public entry point; run it on two archs,
+    # including the hybrid (SSM-state) cache path
+    for arch in ("deepseek-7b", "zamba2-2.7b"):
+        print(f"== {arch} ==")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--reduced", "--batch", "4", "--prompt-len", "16",
+             "--gen", "8"],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+            cwd=".",
+        )
+        print(out.stdout.strip() or out.stderr[-500:])
+
+
+if __name__ == "__main__":
+    main()

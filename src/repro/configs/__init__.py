@@ -1,0 +1,67 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+    SHAPES,
+    reduced_config,
+    shape_applicable,
+)
+
+# arch id -> module name
+ARCHITECTURES: dict[str, str] = {
+    "qwen2-72b": "qwen2_72b",
+    "deepseek-7b": "deepseek_7b",
+    "gemma-7b": "gemma_7b",
+    "gemma2-9b": "gemma2_9b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "internvl2-1b": "internvl2_1b",
+    "mamba2-780m": "mamba2_780m",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHITECTURES)}")
+    return importlib.import_module(f"repro.configs.{ARCHITECTURES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def all_cells():
+    """Every (arch, shape) cell in the assignment — 40 total.
+
+    Yields (arch_id, ModelConfig, ShapeConfig, runnable: bool).
+    """
+    for arch in ARCHITECTURES:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            yield arch, cfg, shape, shape_applicable(cfg, shape)
+
+
+__all__ = [
+    "ARCHITECTURES",
+    "ModelConfig",
+    "ParallelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "all_cells",
+    "get_config",
+    "get_reduced",
+    "reduced_config",
+    "shape_applicable",
+]

@@ -1,0 +1,241 @@
+"""Config dataclasses for models, shapes and parallelism.
+
+Every assigned architecture gets one module in ``repro.configs`` exposing
+``CONFIG`` (the exact published configuration) and ``reduced()`` (a tiny
+same-family config used by CPU smoke tests).  The full configs are exercised
+only through the dry-run (ShapeDtypeStruct; no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    # attention options -----------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    attn_softcap: Optional[float] = None  # gemma2 attn logit soft-capping
+    logit_softcap: Optional[float] = None  # gemma2 final logit soft-capping
+    sliding_window: Optional[int] = None  # window size for local layers
+    layer_pattern: str = "G"  # per-layer kinds, tiled over n_layers:
+    #   G global attn · L local (sliding window) attn · M mamba2 ·
+    #   S shared-attention block (zamba2: weights shared across S slots)
+    # mlp options -------------------------------------------------------------
+    act: str = "swiglu"  # swiglu | geglu | gelu
+    # MoE ---------------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01  # load-balance loss weight (computed per shard)
+    # (for MoE archs, d_ff is the PER-EXPERT hidden dim, as published)
+    # SSM (mamba2 / zamba2) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # encoder-decoder ---------------------------------------------------------
+    n_enc_layers: int = 0
+    # modality frontend stub --------------------------------------------------
+    frontend: Optional[str] = None  # vision | audio
+    frontend_tokens: int = 0  # stub embeddings prepended/consumed (per item)
+    # misc --------------------------------------------------------------------
+    tie_embeddings: bool = True
+    scale_embed: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    source: str = ""  # provenance note
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        if not self.n_heads:  # attention-free (mamba2)
+            return 0
+        return self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def pattern_for_layers(self) -> str:
+        """Expand layer_pattern to exactly n_layers characters."""
+        p = self.layer_pattern
+        reps = (self.n_layers + len(p) - 1) // len(p)
+        return (p * reps)[: self.n_layers]
+
+    # -- parameter counting (used by roofline MODEL_FLOPS and memory budgets) --
+    def param_count(self, active_only: bool = False) -> int:
+        d, h = self.d_model, self.head_dim
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            attn += self.q_dim + 2 * self.kv_dim
+        if self.act in ("swiglu", "geglu"):
+            mlp_dense = 3 * d * self.d_ff
+        else:
+            mlp_dense = 2 * d * self.d_ff
+        n_params = 0
+        pat = self.pattern_for_layers()
+        shared_attn_counted = False
+        for kind in pat:
+            if kind in ("G", "L"):
+                n_params += attn + self.norm_params()
+                if self.is_moe:
+                    experts = self.n_experts if not active_only else self.top_k
+                    n_params += experts * 3 * d * self.d_ff + d * self.n_experts
+                else:
+                    n_params += mlp_dense
+            elif kind == "M":
+                di, ns = self.d_inner, self.ssm_state
+                nh = self.ssm_heads
+                # in_proj: d -> 2*di + 2*ns + nh (z, x, B, C, dt)
+                n_params += d * (2 * di + 2 * ns + nh) + di * d + self.norm_params()
+                n_params += nh * 2 + di  # A_log, D, dt_bias-ish / conv skipped
+            elif kind == "S":
+                if not shared_attn_counted or active_only:
+                    n_params += attn + mlp_dense + self.norm_params()
+                    shared_attn_counted = True
+        # encoder stack (same block shape as decoder global layers)
+        n_params += self.n_enc_layers * (attn + mlp_dense + self.norm_params())
+        # embeddings (+ output head if untied)
+        n_params += self.vocab_size * d
+        if not self.tie_embeddings:
+            n_params += self.vocab_size * d
+        n_params += d  # final norm
+        return n_params
+
+    def norm_params(self) -> int:
+        return 2 * self.d_model
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in SUBQUADRATIC_FAMILIES
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Parallelism configuration (the paper's unified representation, runnable side)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Degrees of each parallel dimension (paper §VI-A coordinates).
+
+    ``dp * tatp`` must equal the mesh size for the runnable system; the wafer
+    simulator additionally supports tp/sp/cp/pp as modelling dimensions.
+    """
+
+    dp: int = 1
+    tp: int = 1
+    sp: int = 1
+    cp: int = 1
+    tatp: int = 1
+    pp: int = 1
+
+    strategy: str = "tatp"  # tatp | megatron | fsdp  (runnable strategies)
+    stream: str = "auto"  # TATP selective transfer: weights | inputs | auto
+    bidirectional: bool = True  # TATP orchestration (False = naive TSPP ring)
+    stream_dtype: str = "native"  # native | fp8 — wire format of the TATP
+    # weight streams and ring-attention KV blocks (per-block scaled e4m3)
+    ssm_scan_mode: str = "seq"  # seq (1-hop chain) | log (Hillis-Steele)
+    ssm_state_wire: str = "fp32"  # fp32 | bf16 relay precision
+    remat: bool = True
+    remat_policy: str = "full"  # full | tatp_outputs (save streamed-linear
+    # outputs so backward remat does not re-stream weight blocks)
+    zigzag: bool = False  # zigzag causal ring attention (halved compute)
+    zero1: bool = True  # shard optimizer state over the data axis
+    grad_compress: bool = False  # int8 DP-gradient compression
+    unroll_scan: bool = False  # unroll the layer scan (cost-probe variants)
+
+    @property
+    def degree(self) -> int:
+        return self.dp * self.tp * self.sp * self.cp * self.tatp * self.pp
+
+    def as_tuple(self) -> Tuple[int, int, int, int]:
+        """(dp, tp, sp, tatp) — the paper's Fig.18 notation."""
+        return (self.dp, self.tp, self.sp, self.tatp)
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    pat = cfg.layer_pattern
+    small = dict(
+        n_layers=max(2, min(4, len(pat))),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=16,
+        d_ff=128,
+        vocab_size=128,
+        sliding_window=16 if cfg.sliding_window else None,
+        n_experts=4 if cfg.n_experts else 0,
+        top_k=min(2, cfg.top_k) if cfg.top_k else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        ssm_chunk=8 if cfg.ssm_state else 256,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        frontend_tokens=4 if cfg.frontend else 0,
+        dtype="float32",
+    )
+    small.update(overrides)
+    return replace(cfg, name=cfg.name + "-smoke", **small)

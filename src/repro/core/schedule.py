@@ -1,0 +1,229 @@
+"""Tensor-stream orchestration schedules (paper §V, Alg. 1).
+
+Two schedule families are modelled:
+
+* ``line_schedule(N)`` — the paper's Bidirectional Tensor Stream Orchestration
+  (Alg. 1) for an *open line* of dies (a wafer row has no wrap-around link).
+  Die ``i`` computes one sub-output per round; sub-tensors stream
+  simultaneously in both directions with relays; every transfer is one
+  physical hop.  Lower-half dies consume ascending block indices (arriving
+  from the right), upper-half dies descending (arriving from the left).
+
+* ``ring_schedule(N, bidirectional)`` — the closed-ring (torus) realization
+  used by the SPMD ``shard_map`` implementation in :mod:`repro.core.tatp`.
+  With ``bidirectional=True`` both directions deliver a fresh block every
+  round (two computes per round, ⌈(N−1)/2⌉+… rounds); with ``False`` it is the
+  naive unidirectional TSPP ring (one block per round, N−1 shifts, requires
+  the wrap link).
+
+Both are *executable* descriptions: :func:`simulate` runs a schedule on a
+virtual die array and checks feasibility (a die only ever computes/relays a
+block it holds), the one-hop property, coverage (every die computes every
+block exactly once) and peak buffer occupancy.  The property tests in
+``tests/test_schedule.py`` sweep these with hypothesis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Event:
+    t: int  # round index
+    die: int
+    kind: str  # "compute" | "send"
+    block: int
+    dst: int = -1  # for sends
+
+
+@dataclass
+class Schedule:
+    n_dies: int
+    n_rounds: int
+    topology: str  # "line" | "ring"
+    events: list[Event] = field(default_factory=list)
+
+    def computes(self, die: int) -> list[tuple[int, int]]:
+        return [(e.t, e.block) for e in self.events
+                if e.kind == "compute" and e.die == die]
+
+    def sends_at(self, t: int) -> list[Event]:
+        return [e for e in self.events if e.kind == "send" and e.t == t]
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — open line, bidirectional redundant-transfer orchestration
+# ---------------------------------------------------------------------------
+
+
+def line_schedule(n: int) -> Schedule:
+    """Paper Alg. 1 (constructive form).
+
+    Possession model: block ``b`` originates on die ``b`` and streams one hop
+    per round in both directions (leftward stream serves / relays toward die
+    0, rightward toward die n−1).  Compute rule (Alg. 1 lines 2–4)::
+
+        die i, round t:  block (i + t) mod n   if i < n/2
+                         block (i − t) mod n   otherwise
+
+    Send rule (lines 5–9, constructive): die ``d`` relays at round ``t`` the
+    block arriving on each stream — leftward stream carries block ``d + t``
+    (while it exists), rightward carries ``d − t`` — so each die performs at
+    most one send per direction per round and **every send is one hop**.
+    Blocks whose compute round is later than their arrival round wait in the
+    die's stream buffer (bounded; asserted by :func:`simulate`).
+    """
+    if n < 2 or n % 2:
+        raise ValueError("line_schedule requires an even die count >= 2")
+    ev: list[Event] = []
+    for t in range(n):
+        for i in range(n):
+            b = (i + t) % n if i < n // 2 else (i - t) % n
+            ev.append(Event(t, i, "compute", b))
+        if t == n - 1:
+            break  # last round: nothing left to send
+        for d in range(n):
+            # leftward stream: block d+t sits on die d at round t (it left die
+            # d+t at round 0 heading left); relay to d-1.
+            b_left = d + t
+            if b_left < n and d - 1 >= 0:
+                ev.append(Event(t, d, "send", b_left, d - 1))
+            # rightward stream: block d−t relayed to d+1.
+            b_right = d - t
+            if b_right >= 0 and d + 1 < n:
+                ev.append(Event(t, d, "send", b_right, d + 1))
+    return Schedule(n, n, "line", ev)
+
+
+# ---------------------------------------------------------------------------
+# Closed-ring schedules (the shard_map/torus realization)
+# ---------------------------------------------------------------------------
+
+
+def ring_schedule(n: int, bidirectional: bool = True) -> Schedule:
+    if n < 1:
+        raise ValueError("n >= 1")
+    ev: list[Event] = []
+    if not bidirectional:
+        # naive TSPP: block (i+t) mod n computed at round t, single stream.
+        for t in range(n):
+            for i in range(n):
+                ev.append(Event(t, i, "compute", (i + t) % n))
+                if t < n - 1:
+                    # send current block to the left neighbour (ring)
+                    ev.append(Event(t, i, "send", (i + t) % n, (i - 1) % n))
+        return Schedule(n, n, "ring", ev)
+
+    # bidirectional: round 0 computes the local block; round t>=1 computes the
+    # two blocks at ring distance t (one per direction); even n has a single
+    # antipodal block at the final round.
+    n_rounds = n // 2 + 1 if n % 2 == 0 else (n + 1) // 2
+    for t in range(n_rounds):
+        for i in range(n):
+            up = (i + t) % n
+            dn = (i - t) % n
+            if t == 0:
+                ev.append(Event(t, i, "compute", i))
+            elif up == dn:  # antipodal (even n, t == n/2)
+                ev.append(Event(t, i, "compute", up))
+            else:
+                ev.append(Event(t, i, "compute", up))
+                ev.append(Event(t, i, "compute", dn))
+            if t < n_rounds - 1:
+                # relay both streams one hop
+                ev.append(Event(t, i, "send", up, (i - 1) % n))
+                ev.append(Event(t, i, "send", dn, (i + 1) % n))
+    return Schedule(n, n_rounds, "ring", ev)
+
+
+# ---------------------------------------------------------------------------
+# Feasibility simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimReport:
+    ok: bool
+    n_rounds: int
+    peak_buffer_blocks: int
+    max_hop: int
+    computes_per_die_per_round: int
+    errors: list[str] = field(default_factory=list)
+
+
+def simulate(sched: Schedule, *, drop_after_use: bool = True) -> SimReport:
+    """Execute a schedule on a virtual die array and verify its invariants."""
+    n = sched.n_dies
+    holds: list[set[int]] = [{i} for i in range(n)]
+    computed: list[set[int]] = [set() for _ in range(n)]
+    errors: list[str] = []
+    peak = 1
+    max_hop = 0
+    max_cpr = 0
+
+    for t in range(sched.n_rounds):
+        round_ev = [e for e in sched.events if e.t == t]
+        # computes
+        per_die = {}
+        for e in round_ev:
+            if e.kind != "compute":
+                continue
+            per_die[e.die] = per_die.get(e.die, 0) + 1
+            if e.block not in holds[e.die]:
+                errors.append(f"t={t} die{e.die} computes {e.block} w/o holding")
+            if e.block in computed[e.die]:
+                errors.append(f"t={t} die{e.die} recomputes {e.block}")
+            computed[e.die].add(e.block)
+        max_cpr = max(max_cpr, *per_die.values()) if per_die else max_cpr
+        # sends (verify possession + hop distance), then deliver
+        inbox: list[set[int]] = [set() for _ in range(n)]
+        for e in round_ev:
+            if e.kind != "send":
+                continue
+            if e.block not in holds[e.die]:
+                errors.append(f"t={t} die{e.die} sends {e.block} w/o holding")
+            if sched.topology == "line":
+                hop = abs(e.dst - e.die)
+            else:
+                hop = min((e.dst - e.die) % n, (e.die - e.dst) % n)
+            max_hop = max(max_hop, hop)
+            if not (0 <= e.dst < n):
+                errors.append(f"t={t} die{e.die} sends to invalid die {e.dst}")
+            else:
+                inbox[e.dst].add(e.block)
+        # deliver; optionally drop blocks that are computed AND already
+        # relayed past (memory-minimising policy)
+        for d in range(n):
+            holds[d] |= inbox[d]
+            if drop_after_use:
+                sends_next = {e.block for e in sched.events
+                              if e.kind == "send" and e.die == d and e.t > t}
+                holds[d] = {b for b in holds[d]
+                            if b not in computed[d] or b in sends_next}
+            peak = max(peak, len(holds[d]))
+
+    for d in range(n):
+        if computed[d] != set(range(n)):
+            missing = set(range(n)) - computed[d]
+            errors.append(f"die{d} missing blocks {sorted(missing)}")
+
+    return SimReport(
+        ok=not errors,
+        n_rounds=sched.n_rounds,
+        peak_buffer_blocks=peak,
+        max_hop=max_hop,
+        computes_per_die_per_round=max_cpr,
+        errors=errors[:20],
+    )
+
+
+def tail_latency_rounds(n: int, topology: str, bidirectional: bool) -> int:
+    """Worst-case extra hops suffered by any single transfer (paper Fig. 5a).
+
+    A naive TSPP ring mapped on an open line incurs an (n−1)-hop wrap
+    transfer; TATP keeps every transfer at one hop.
+    """
+    if topology == "line" and not bidirectional:
+        return n - 1
+    return 1

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (paper Fig. 12 operators 4–7).
+
+Online-softmax attention with BlockSpec VMEM tiling, supporting GQA head
+groups, causal masks, sliding windows (gemma2 local layers) and attention
+logit soft-capping.  Fully-masked key blocks above the causal diagonal are
+skipped with ``pl.when`` so the causal case does ~half the work.
+
+Layout: q [B, Hq, Sq, D] · k/v [B, Hkv, Skv, D]; grid (B·Hq, Sq/bq, Skv/bk)
+with the KV step innermost; running (m, l, acc) live in VMEM scratch and the
+output block is written once on the last KV step.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window, cap, bq: int, bk: int,
+                  n_kv: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal skip: key block strictly above the diagonal contributes nothing
+    run = True
+    if causal:
+        run = jk * bk <= iq * bq + bq - 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if cap is not None:
+            s = jnp.tanh(s / cap) * cap
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None, cap=None,
+                    scale=None, bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D] (Hq a multiple of Hkv)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    q3 = q.reshape(b * hq, sq, d)
+    k3 = k.reshape(b * hkv, skv, d)
+    v3 = v.reshape(b * hkv, skv, d)
+
+    def kv_map(h, i, j):
+        return ((h // hq) * hkv + (h % hq) // g, j, 0)
+
+    out = pl.pallas_call(
+        partial(_flash_kernel, scale=scale, causal=causal, window=window,
+                cap=cap, bq=bq, bk=bk, n_kv=skv // bk),
+        grid=(b * hq, sq // bq, skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(b, hq, sq, d)

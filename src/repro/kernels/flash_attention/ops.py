@@ -1,0 +1,25 @@
+"""Jit'd wrapper dispatching to the Pallas flash kernel when tileable."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "scale",
+                                   "interpret"))
+def attention(q, k, v, *, causal=True, window=None, cap=None, scale=None,
+              interpret: bool = False):
+    sq, skv, d = q.shape[2], k.shape[2], q.shape[3]
+    tileable = (sq % 128 == 0 and skv % 128 == 0 and d in (64, 128, 256)
+                and q.shape[1] % k.shape[1] == 0)
+    if not tileable:
+        return attention_ref(q, k, v, causal=causal, window=window, cap=cap,
+                             scale=scale)
+    return flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                           scale=scale, bq=min(256, sq), bk=min(256, skv),
+                           interpret=interpret)

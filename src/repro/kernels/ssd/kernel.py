@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk pass (arXiv:2405.21060).
+
+Computes, per (batch, chunk, head-block) grid cell, the quadratic
+intra-chunk output, the chunk's outgoing state contribution, and the chunk
+decay — the three quantities the (cheap, jnp-level) inter-chunk recurrence in
+``ops.py`` stitches together.  This mirrors how the reference CUDA/Triton
+implementation splits into chunk_scan / chunk_state kernels, re-tiled for
+VMEM: with (Q=256, bh=8, P=64, N≤128) the working set is ≈6 MB fp32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, g_ref, *,
+                chunk: int):
+    x = x_ref[0].astype(jnp.float32)      # [Q, bh, P]
+    dt = dt_ref[0].astype(jnp.float32)    # [Q, bh]
+    a = a_ref[...].astype(jnp.float32)    # [bh]
+    bm = b_ref[0].astype(jnp.float32)     # [Q, N]
+    cm = c_ref[0].astype(jnp.float32)     # [Q, N]
+
+    da = dt * a[None, :]                  # [Q, bh]
+    cum = jnp.cumsum(da, axis=0)          # [Q, bh]
+
+    # intra-chunk quadratic part
+    rel = cum[:, None, :] - cum[None, :, :]          # [q, s, bh]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (si <= qi)[..., None]
+    decay = jnp.where(tri, jnp.exp(rel), 0.0)        # [q, s, bh]
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [q, s]
+    m = cb[..., None] * decay * dt[None, :, :]        # [q, s, bh]
+    # y[q,h,p] = sum_s m[q,s,h] x[s,h,p]  — batched over h
+    y = jax.lax.dot_general(
+        m.transpose(2, 0, 1), x.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # [bh, q, P]
+    y_ref[0] = y.transpose(1, 0, 2).astype(y_ref.dtype)
+
+    # chunk state: st[h,p,n] = sum_s exp(cum_Q - cum_s) dt_s x[s,h,p] B[s,n]
+    dec_out = jnp.exp(cum[-1:, :] - cum) * dt         # [Q, bh]
+    xw = x * dec_out[:, :, None]                      # [Q, bh, P]
+    st = jax.lax.dot_general(
+        xw.transpose(1, 2, 0), bm, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # [bh, P, N]
+    st_ref[0] = st.astype(st_ref.dtype)
+    g_ref[0] = jnp.exp(cum[-1, :]).astype(g_ref.dtype)
+
+
+def ssd_intra_chunk(x, dt, a, bmat, cmat, *, bh: int = 8,
+                    interpret: bool = False):
+    """x: [B, L, H, P] · dt: [B, L, H] · a: [H] · bmat/cmat: [B, L, N].
+
+    L must be a multiple of ``chunk`` = the caller's chunk size — here the
+    grid is (B·nc, H/bh) with one chunk per grid row, so the caller reshapes
+    L into chunks first.  Returns (y_intra [B,L,H,P], states [B,nc,H,P,N],
+    decays [B,nc,H]).
+    """
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = l  # caller pre-chunks: one call handles [B*nc, chunk, ...]
+    bh = min(bh, h)
+    assert h % bh == 0
+
+    grid = (b, h // bh)
+    y, st, g = pl.pallas_call(
+        partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, chunk, bh), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, bh, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, chunk, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)
+    return y, st, g

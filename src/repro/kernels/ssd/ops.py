@@ -1,0 +1,55 @@
+"""Jit'd wrapper: full chunked SSD using the Pallas intra-chunk kernel plus
+the (cheap) jnp inter-chunk recurrence — a drop-in replacement for
+``repro.models.ssm.ssd_chunked``."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ssd.kernel import ssd_intra_chunk
+from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+from repro.models.ssm import SSDOut
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def ssd_chunked_fast(x, dt, a, bmat, cmat, chunk: int,
+                     use_kernel: bool = True, interpret: bool = False):
+    """Chunked SSD; see repro.models.ssm.ssd_chunked for semantics."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(b * nc, chunk, h, p)
+    dtc = dt.reshape(b * nc, chunk, h)
+    bc = bmat.reshape(b * nc, chunk, n)
+    cc = cmat.reshape(b * nc, chunk, n)
+
+    if use_kernel and chunk % 8 == 0 and p % 8 == 0:
+        y_i, st, g = ssd_intra_chunk(xc, dtc, a, bc, cc, interpret=interpret)
+    else:
+        y_i, st, g = ssd_intra_chunk_ref(xc, dtc, a, bc, cc)
+
+    y_i = y_i.reshape(b, nc, chunk, h, p)
+    st = st.reshape(b, nc, h, p, n)
+    g = g.reshape(b, nc, h)
+
+    def step(hprev, inp):
+        gc, sc = inp
+        return gc[:, :, None, None] * hprev + sc, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfin, hprevs = lax.scan(step, h0, (jnp.moveaxis(g, 1, 0),
+                                       jnp.moveaxis(st, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)  # [B, nc, H, P, N]
+
+    da = dt.astype(jnp.float32) * a[None, None, :]
+    cum = jnp.cumsum(da.reshape(b, nc, chunk, h), axis=2)
+    y_x = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                     cmat.reshape(b, nc, chunk, n).astype(jnp.float32),
+                     jnp.exp(cum), hprevs)
+    y = (y_i + y_x).reshape(b, l, h, p)
+    total_decay = jnp.exp(jnp.sum(da, axis=1))
+    return SSDOut(y, hfin, total_decay)

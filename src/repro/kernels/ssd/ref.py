@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors
+repro.models.ssm.ssd_chunked's intra-chunk math on a single chunk batch)."""
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(x, dt, a, bmat, cmat):
+    """x: [B, Q, H, P] · dt: [B, Q, H] · a: [H] · bmat/cmat: [B, Q, N].
+
+    Returns (y_intra [B,Q,H,P], state [B,H,P,N], decay [B,H]).
+    """
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    q = x.shape[1]
+    da = dt * a[None, None, :]
+    cum = jnp.cumsum(da, axis=1)  # [B, Q, H]
+    rel = cum[:, :, None, :] - cum[:, None, :, :]  # [B,q,s,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bqn,bsn->bqs", cmat, bmat)
+    m = cb[..., None] * decay * dt[:, None, :, :]
+    y = jnp.einsum("bqsh,bshp->bqhp", m, x)
+    dec_out = jnp.exp(cum[:, -1:, :] - cum)
+    st = jnp.einsum("bsh,bsn,bshp->bhpn", dt * dec_out, bmat, x)
+    g = jnp.exp(cum[:, -1, :])
+    return y, st, g

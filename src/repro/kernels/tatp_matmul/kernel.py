@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: the per-round TATP GEMM.
+
+The TATP ring computes one ``[m_loc, N] × [N, kb]`` tile per round; this
+kernel is the MXU-tiled implementation of that tile.  Block sizes default to
+MXU-aligned 128/512 multiples; the fp32 accumulator lives in VMEM scratch and
+is spilled to the output only on the last contraction step, so each output
+block is written exactly once (HBM-traffic-minimal).
+
+VMEM working set: bm·bn + bn·bk + 2·bm·bk fp32 ≤ ~2.5 MB at the default
+(256, 512, 256) tiling — comfortably inside a v5e core's 128 MB VMEM while
+leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 512,
+           bk: int = 256, out_dtype=None, interpret: bool = False):
+    """C[M, K] = A[M, N] @ B[N, K] with (bm, bn, bk) VMEM tiling."""
+    m, n = a.shape
+    n2, k = b.shape
+    assert n == n2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape ({m},{n},{k}) not divisible by tile ({bm},{bn},{bk})"
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        partial(_matmul_kernel, n_steps=n // bn),
+        grid=(m // bm, k // bk, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bn, bk), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        interpret=interpret,
+    )(a, b)

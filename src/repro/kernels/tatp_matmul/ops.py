@@ -1,0 +1,40 @@
+"""Jit'd public wrapper for the TATP per-round GEMM kernel.
+
+``tatp_dot`` is a drop-in for the ``dot`` hook of
+:func:`repro.core.tatp.ag_matmul_stream_w`: it dispatches to the Pallas
+kernel when shapes are MXU-tileable and to plain ``jnp.dot`` otherwise
+(tiny smoke shapes, CPU fallbacks).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tatp_matmul.kernel import matmul
+from repro.kernels.tatp_matmul.ref import matmul_ref
+
+_MIN_TILE = 128
+
+
+def _pick(x: int, prefs: tuple[int, ...]):
+    for t in prefs:
+        if x % t == 0:
+            return t
+    return None
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def tatp_dot(a: jax.Array, b: jax.Array, interpret: bool = False):
+    n = a.shape[-1]
+    k = b.shape[-1]
+    a2 = a.reshape(-1, n)
+    bm = _pick(a2.shape[0], (256, 128))
+    bn = _pick(n, (512, 256, 128))
+    bk = _pick(k, (512, 256, 128))
+    if bm is None or bn is None or bk is None:
+        return matmul_ref(a, b)
+    out = matmul(a2, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out.reshape(*a.shape[:-1], k)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the TATP per-round GEMM."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and extract memory / FLOP / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Single-pod mesh: (data=16, model=16) = 256 chips.
+Multi-pod mesh:  (pod=2, data=16, model=16) = 512 chips.
+
+Per cell this emits a JSON record into results/dryrun/ containing
+``memory_analysis`` (proves the cell fits), ``cost_analysis`` (FLOPs/bytes
+for §Roofline) and the per-collective wire-byte census parsed from the
+compiled HLO (the collective roofline term).
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _mesh(kind: str):
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=(kind == "multipod"))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective census
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dt]
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, from per-shard HLO shapes.
+
+    Inside shard_map all shapes are per-shard, so:
+      collective-permute → out bytes (each device sends its block one hop)
+      all-gather         → out − in bytes received per device
+      all-reduce         → 2× bytes (ring: reduce-scatter + all-gather)
+      reduce-scatter     → in − out bytes
+      all-to-all         → bytes ((R−1)/R ≈ 1 of the buffer crosses links)
+    """
+    census = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+ = ", s)
+        if not m:
+            continue
+        body = s[m.end():]
+        kind = next((k for k in _COLL_KINDS
+                     if body.startswith(k + "(")
+                     or re.match(rf"\(?[\w\[\],\s*{{}}]*\)?\s*{k}\(", body)
+                     or f" {k}(" in body.split("(")[0] + "("), None)
+        # robust: look for "= <shapes> kind(" pattern
+        if kind is None:
+            mm = re.search(r"\)?\s(" + "|".join(_COLL_KINDS) +
+                           r")(?:-start|-done)?\(", s)
+            if mm and not s.strip().startswith("ROOT tuple"):
+                kind = mm.group(1)
+                if "-done(" in s:
+                    continue  # counted at -start
+        if kind is None:
+            continue
+        shapes = list(_SHAPE_RE.finditer(s.split("=", 1)[1]))
+        if not shapes:
+            continue
+        # first shape(s) = output, shapes inside kind(...) = operands
+        pre, _, post = s.split("=", 1)[1].partition(kind)
+        outs = [_shape_bytes(x) for x in _SHAPE_RE.finditer(pre)]
+        ins = [_shape_bytes(x) for x in _SHAPE_RE.finditer(post)]
+        out_b, in_b = sum(outs), sum(ins)
+        if kind == "collective-permute":
+            b = out_b
+        elif kind == "all-gather":
+            b = max(out_b - in_b, 0)
+        elif kind == "all-reduce":
+            b = 2 * out_b
+        elif kind == "reduce-scatter":
+            b = max(in_b - out_b, 0)
+        else:  # all-to-all
+            b = out_b
+        census[kind]["count"] += 1
+        census[kind]["bytes"] += int(b)
+    census["total_bytes"] = int(sum(v["bytes"] for v in census.values()
+                                    if isinstance(v, dict)))
+    return census
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _build_lowered(cfg, shape, mesh, strategy, bidirectional,
+                   unroll_scan=False, par_overrides=None):
+    from dataclasses import replace as dc_replace
+
+    from repro.configs.base import ParallelConfig
+    from repro.core.dist import Dist
+    from repro.models.transformer import param_shapes
+    from repro.train.train_loop import (cache_shapes, global_batch_shapes,
+                                        make_serve_fns, make_train_step)
+
+    dist = Dist(mesh)
+    par = ParallelConfig(strategy=strategy, bidirectional=bidirectional,
+                         unroll_scan=unroll_scan)
+    if par_overrides:
+        par = dc_replace(par, **par_overrides)
+    p_struct = param_shapes(cfg)
+    if shape.kind == "train":
+        bundle = make_train_step(cfg, par, dist, shape)
+        o_struct = jax.eval_shape(
+            jax.shard_map(bundle.opt.init, mesh=mesh,
+                          in_specs=(bundle.pspecs,), out_specs=bundle.ospecs,
+                          check_vma=False), p_struct)
+        b_struct = global_batch_shapes(cfg, shape)
+        return bundle.step_fn.lower(p_struct, o_struct, b_struct)
+    if shape.kind == "prefill":
+        sb = make_serve_fns(cfg, par, dist, shape)
+        b_struct = global_batch_shapes(cfg, shape)
+        return sb.prefill_fn.lower(p_struct, b_struct)
+    sb = make_serve_fns(cfg, par, dist, shape)
+    c_struct = cache_shapes(cfg, shape, dist)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    return sb.decode_fn.lower(p_struct, tok, c_struct, clen)
+
+
+def _cost_of(cfg, shape, mesh, strategy, bidirectional, par_overrides=None):
+    # unrolled so every layer's FLOPs/bytes/collectives are in the HLO text
+    lowered = _build_lowered(cfg, shape, mesh, strategy, bidirectional,
+                             unroll_scan=True, par_overrides=par_overrides)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    census = collective_census(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), census)
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               strategy: str = "tatp", bidirectional: bool = True,
+               extrapolate: bool = True, variant: str = "baseline",
+               par_overrides: dict | None = None):
+    from dataclasses import replace as dc_replace
+
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.models.transformer import _unit_and_reps
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic sequence mixing "
+                          "(see DESIGN.md §Arch-applicability)"}
+
+    mesh = _mesh(mesh_kind)
+    t0 = time.time()
+    lowered = _build_lowered(cfg, shape, mesh, strategy, bidirectional,
+                             par_overrides=par_overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    census = collective_census(hlo)
+
+    flops_raw = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+    flops_total, bytes_total = flops_raw, bytes_raw
+    # XLA's cost_analysis and the HLO text both count while-loop bodies once;
+    # reconstruct true totals (incl. per-collective bytes) from 1-rep and
+    # 2-rep variants — the scan body is rep-invariant, so totals are affine
+    # in the rep count.
+    unit, reps = _unit_and_reps(cfg)
+    if extrapolate and reps >= 2:
+        def variant_cfg(k):
+            return dc_replace(cfg, n_layers=len(unit) * k,
+                              n_enc_layers=(k if cfg.n_enc_layers else 0))
+        f1, b1, c1 = _cost_of(variant_cfg(1), shape, mesh, strategy,
+                               bidirectional, par_overrides)
+        f2, b2, c2 = _cost_of(variant_cfg(2), shape, mesh, strategy,
+                               bidirectional, par_overrides)
+        fb, bb = f2 - f1, b2 - b1  # per-rep body cost
+        flops_total = (f1 - fb) + reps * fb
+        bytes_total = (b1 - bb) + reps * bb
+        for kind in _COLL_KINDS:
+            for fld in ("count", "bytes"):
+                body = c2[kind][fld] - c1[kind][fld]
+                census[kind][fld] = int((c1[kind][fld] - body) + reps * body)
+        census["total_bytes"] = int(sum(census[k]["bytes"]
+                                        for k in _COLL_KINDS))
+        census["extrapolated"] = True
+
+    n_dev = int(np.prod(mesh.devices.shape))
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "strategy": strategy, "bidirectional": bidirectional,
+        "variant": variant, "par_overrides": par_overrides or {},
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_raw": flops_raw,
+        "hlo_bytes_raw": bytes_raw,
+        "flops": flops_total,
+        "hlo_bytes": bytes_total,
+        "collectives": census,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.param_count(active_only=True),
+    }
+    return rec
+
+
+def cell_id(arch, shape, mesh):
+    return f"{arch}__{shape}__{mesh}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--strategy", default="tatp")
+    ap.add_argument("--unidirectional", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="label for perf-iteration records")
+    ap.add_argument("--zigzag", action="store_true")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=[None, "full", "tatp_outputs"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--fp8", action="store_true",
+                    help="fp8 wire for TATP weight + ring-KV streams")
+    ap.add_argument("--ssm-log", action="store_true",
+                    help="log2(R) Hillis-Steele SSM state relay")
+    ap.add_argument("--ssm-wire-bf16", action="store_true")
+    args = ap.parse_args()
+    par_overrides = {}
+    if args.zigzag:
+        par_overrides["zigzag"] = True
+    if args.remat_policy:
+        par_overrides["remat_policy"] = args.remat_policy
+    if args.no_remat:
+        par_overrides["remat"] = False
+    if args.fp8:
+        par_overrides["stream_dtype"] = "fp8"
+    if args.ssm_log:
+        par_overrides["ssm_scan_mode"] = "log"
+    if args.ssm_wire_bf16:
+        par_overrides["ssm_state_wire"] = "bf16"
+
+    from repro.configs import ARCHITECTURES, SHAPES
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s, m) for a in ARCHITECTURES for s in SHAPES
+                 for m in meshes]
+    else:
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, mesh_kind in cells:
+        suffix = "" if args.variant == "baseline" else f"__{args.variant}"
+        path = os.path.join(args.out, cell_id(arch, shape, mesh_kind)
+                            + suffix + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {path}")
+            continue
+        print(f"=== {arch} × {shape} × {mesh_kind} [{args.variant}] ===",
+              flush=True)
+        try:
+            rec = lower_cell(arch, shape, mesh_kind,
+                             strategy=args.strategy,
+                             bidirectional=not args.unidirectional,
+                             variant=args.variant,
+                             par_overrides=par_overrides or None)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            c = rec["collectives"]["total_bytes"]
+            print(f"  ok: lower={rec['lower_s']}s compile={rec['compile_s']}s"
+                  f" flops={rec['flops']:.3g}"
+                  f" coll={c/1e6:.1f}MB"
+                  f" peak={rec['memory']['peak_bytes']/2**30:.2f}GiB",
+                  flush=True)
+        else:
+            print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}",
+                  flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction (+ TCME-informed device ordering).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+from repro.core.dist import Dist
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices)
+
+
+def make_wafer_ordered_mesh(order: np.ndarray, *,
+                            multi_pod: bool = False) -> Mesh:
+    """Build the production mesh with an explicit device permutation.
+
+    ``order`` is the flat device permutation produced by the TCME ring
+    embedding (repro.wafer.mapping) so that every TATP ring maps onto
+    physically contiguous devices (snake order on the 2D grid).
+    """
+    devs = np.asarray(jax.devices())[np.asarray(order)]
+    return make_production_mesh(multi_pod=multi_pod, devices=devs)
+
+
+def dist_for(mesh) -> Dist:
+    return Dist(mesh)

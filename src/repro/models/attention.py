@@ -1,0 +1,333 @@
+"""Attention cores (per-shard SPMD).
+
+Three execution shapes:
+
+* :func:`ring_attention` — training/prefill with the sequence sharded over
+  the TATP ring axis.  KV blocks stream around the ring with one-hop
+  ``ppermute`` (bidirectionally by default, mirroring TATP's orchestration)
+  while a flash-style online-softmax accumulator absorbs each block.  This is
+  the paper's tensor-stream idea applied to the attention operator (their
+  CP/SP synergy, §VIII-D), with no KV replication.
+
+* :func:`decode_attention` — one-token decoding against a KV cache whose
+  *sequence* dim is sharded over the ring axis (context-parallel cache).
+  Every die computes a partial flash accumulator over its cache slice; the
+  partials merge with a numerically-stable (max, sum, acc) psum combine.
+
+* :func:`local_attention` — plain single-die attention (baselines, smoke
+  tests, encoder blocks when the sequence is unsharded).
+
+All support GQA (kv-head groups), causal masks, sliding windows (gemma2
+local layers), attention-logit softcapping, and an optional Pallas flash
+kernel for the per-block compute.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import softcap
+
+NEG_INF = -1e30
+
+
+def _block_update(q, k, v, m, l, acc, qpos, kpos, *, scale, causal,
+                  window: Optional[int], cap: Optional[float],
+                  valid_len=None):
+    """One online-softmax block update.
+
+    q: [B, sq, Hk, G, dh]   (G = q heads per kv head)
+    k/v: [B, sk, Hk, dh]
+    m/l: [B, Hk, G, sq]     acc: [B, Hk, G, sq, dh]
+    qpos: [sq] global query positions; kpos: [sk] global key positions.
+    valid_len: optional scalar — keys with kpos > valid_len are masked
+    (decode: cache fill level).
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if valid_len is not None:
+        mask &= (kpos[None, :] <= valid_len)
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # guard fully-masked rows
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def _init_state(b, hk, g, sq, dh):
+    m = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, hk, g, sq), jnp.float32)
+    acc = jnp.zeros((b, hk, g, sq, dh), jnp.float32)
+    return m, l, acc
+
+
+def _finish(m, l, acc, dtype):
+    l = jnp.maximum(l, 1e-20)
+    out = acc / l[..., None]  # [B, Hk, G, sq, dh]
+    b, hk, g, sq, dh = out.shape
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, hk * g, dh)
+    return out.astype(dtype)
+
+
+def _group(q, n_kv):
+    b, sq, hq, dh = q.shape
+    return q.reshape(b, sq, n_kv, hq // n_kv, dh)
+
+
+# ---------------------------------------------------------------------------
+
+
+def local_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    q_offset=0, scale=None, valid_len=None):
+    """q: [B, sq, Hq, dh], k/v: [B, sk, Hkv, dh] — all local."""
+    b, sq, hq, dh = q.shape
+    hk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = _group(q, hk)
+    m, l, acc = _init_state(b, hk, hq // hk, sq, dh)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    m, l, acc = _block_update(qg, k, v, m, l, acc, qpos, kpos, scale=scale,
+                              causal=causal, window=window, cap=cap,
+                              valid_len=valid_len)
+    return _finish(m, l, acc, q.dtype)
+
+
+def zigzag_local_positions(axis: str, axis_size: int, s_loc: int):
+    """Positions of this die's tokens under the zigzag chunk layout: device
+    i owns global sequence chunks ``i`` and ``2R−1−i`` (c = s_loc/2 each)."""
+    c = s_loc // 2
+    i = lax.axis_index(axis) if axis_size > 1 else 0
+    pos_a = i * c + jnp.arange(c)
+    pos_b = (2 * axis_size - 1 - i) * c + jnp.arange(c)
+    return jnp.concatenate([pos_a, pos_b])
+
+
+def zigzag_permutation(axis_size: int, seq_len: int):
+    """Host-side permutation of the global sequence dim so that sharding dim
+    1 over the ring delivers zigzag chunks: [chunk_i ‖ chunk_{2R−1−i}]."""
+    import numpy as _np
+    r = axis_size
+    c = seq_len // (2 * r)
+    idx = []
+    for i in range(r):
+        idx.append(_np.arange(i * c, (i + 1) * c))
+        j = 2 * r - 1 - i
+        idx.append(_np.arange(j * c, (j + 1) * c))
+    return _np.concatenate(idx)
+
+
+def zigzag_ring_attention(q, k, v, *, axis: str, axis_size: int,
+                          window=None, cap=None, bidirectional=True,
+                          scale=None, wire: str = "native"):
+    """Causal ring attention over the zigzag chunk layout (beyond-paper).
+
+    q/k/v: [B, s_loc, H(,kv), dh] with local tokens = global chunks
+    (i, 2R−1−i).  Each streamed source costs exactly two (c × c)
+    online-softmax updates — half the contiguous layout's compute, with
+    uniform per-device work (no causal tail imbalance).
+    """
+    r = axis_size
+    b, sl, hq, dh = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    c = sl // 2
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    if r == 1:
+        return local_attention(q, k, v, causal=True, window=window, cap=cap,
+                               scale=scale)
+    i = lax.axis_index(axis)
+    pos_a = i * c + jnp.arange(c)
+    pos_b = (2 * r - 1 - i) * c + jnp.arange(c)
+    my_pos = jnp.concatenate([pos_a, pos_b])
+
+    qg = _group(q, hk)  # [B, 2c, Hk, G, dh]
+    m, l, acc = _init_state(b, hk, g, sl, dh)
+
+    def half_update(state, q_rows, kk, vv, qpos, kpos, row0):
+        """Online update restricted to q rows [row0, row0+c)."""
+        m, l, acc = state
+        ms = lax.dynamic_slice_in_dim(m, row0, c, axis=3)
+        ls = lax.dynamic_slice_in_dim(l, row0, c, axis=3)
+        accs = lax.dynamic_slice_in_dim(acc, row0, c, axis=3)
+        ms, ls, accs = _block_update(q_rows, kk, vv, ms, ls, accs, qpos,
+                                     kpos, scale=scale, causal=True,
+                                     window=window, cap=cap)
+        return (lax.dynamic_update_slice_in_dim(m, ms, row0, axis=3),
+                lax.dynamic_update_slice_in_dim(l, ls, row0, axis=3),
+                lax.dynamic_update_slice_in_dim(acc, accs, row0, axis=3))
+
+    from repro.core.tatp import wire_relay
+
+    def source_update(state, kv_blk, j):
+        """Zigzag selection: exactly two (c × c) updates per source rank."""
+        kk, vv = kv_blk
+        k_a, k_b = kk[:, :c], kk[:, c:]
+        v_a, v_b = vv[:, :c], vv[:, c:]
+        src_a = j * c + jnp.arange(c)
+        src_b = (2 * r - 1 - j) * c + jnp.arange(c)
+        past = j < i
+        # update 1: (q_A if past else q_B) × source chunk A
+        row0 = jnp.where(past, 0, c)
+        q1 = jnp.where(past, qg[:, :c], qg[:, c:])
+        qpos1 = jnp.where(past, pos_a, pos_b)
+        state = half_update(state, q1, k_a, v_a, qpos1, src_a, row0)
+        # update 2: q_B × (source chunk A if past else chunk B)
+        k2 = jnp.where(past, k_a, k_b)
+        v2 = jnp.where(past, v_a, v_b)
+        kpos2 = jnp.where(past, src_a, src_b)
+        state = half_update(state, qg[:, c:], k2, v2, pos_b, kpos2, c)
+        return state
+
+    # round 0: full local block (causal mask handles the A×B corner)
+    state = _block_update(qg, k, v, m, l, acc, my_pos, my_pos, scale=scale,
+                          causal=True, window=window, cap=cap)
+
+    def relay(kv, shift):
+        return (wire_relay(kv[0], axis, r, shift, wire),
+                wire_relay(kv[1], axis, r, shift, wire))
+
+    if not bidirectional:
+        blk = (k, v)
+        for t in range(1, r):
+            blk = relay(blk, +1)
+            state = source_update(state, blk, lax.rem(i - t + r, r))
+    else:
+        up, dn = (k, v), (k, v)
+        n_rounds = r // 2 + 1 if r % 2 == 0 else (r + 1) // 2
+        for t in range(1, n_rounds):
+            antipodal = (r % 2 == 0) and (t == r // 2)
+            up = relay(up, -1)
+            state = source_update(state, up, lax.rem(i + t, r))
+            if not antipodal:
+                dn = relay(dn, +1)
+                state = source_update(state, dn, lax.rem(i - t + r, r))
+    m, l, acc = state
+    return _finish(m, l, acc, q.dtype)
+
+
+def ring_attention(q, k, v, *, axis: str, axis_size: int, causal=True,
+                   window=None, cap=None, bidirectional=True, scale=None,
+                   wire: str = "native"):
+    """Sequence-sharded attention; KV blocks stream around the ring.
+
+    q/k/v: [B, s_loc, H(,kv), dh] — this die's token block (index
+    ``axis_index(axis)``); global position of local token t is
+    ``axis_index*s_loc + t``.  ``wire="fp8"`` streams KV blocks in
+    per-block-scaled e4m3 (half the ring traffic).
+    """
+    from repro.core.tatp import wire_relay
+
+    r = axis_size
+    b, sl, hq, dh = q.shape
+    hk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    if r == 1:
+        return local_attention(q, k, v, causal=causal, window=window, cap=cap,
+                               scale=scale)
+
+    i = lax.axis_index(axis)
+    qg = _group(q, hk)
+    qpos = i * sl + jnp.arange(sl)
+    m, l, acc = _init_state(b, hk, hq // hk, sl, dh)
+
+    def upd(state, kv, j):
+        m, l, acc = state
+        kk, vv = kv
+        kpos = j * sl + jnp.arange(sl)
+        return _block_update(qg, kk, vv, m, l, acc, qpos, kpos, scale=scale,
+                             causal=causal, window=window, cap=cap)
+
+    def relay(kv, shift):  # narrow wire fwd, exact inverse-permute bwd
+        return (wire_relay(kv[0], axis, r, shift, wire),
+                wire_relay(kv[1], axis, r, shift, wire))
+
+    state = upd((m, l, acc), (k, v), i)
+    if not bidirectional:
+        blk = (k, v)
+        for t in range(1, r):
+            blk = relay(blk, -1)  # block index grows
+            state = upd(state, blk, lax.rem(i + t, r))
+    else:
+        up, dn = (k, v), (k, v)
+        n_rounds = r // 2 + 1 if r % 2 == 0 else (r + 1) // 2
+        for t in range(1, n_rounds):
+            antipodal = (r % 2 == 0) and (t == r // 2)
+            up = relay(up, -1)
+            state = upd(state, up, lax.rem(i + t, r))
+            if not antipodal:
+                dn = relay(dn, +1)
+                state = upd(state, dn, lax.rem(i - t + r, r))
+    m, l, acc = state
+    return _finish(m, l, acc, q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, axis: str,
+                     axis_size: int, window=None, cap=None, scale=None):
+    """One-step decoding against a sequence-sharded KV cache.
+
+    q: [B, 1, Hq, dh] (replicated over the ring axis);
+    k_cache/v_cache: [B, S_loc, Hkv, dh] — this die's context slice;
+    cache_len: scalar int — number of valid positions *including* the token
+    written this step.
+    """
+    r = axis_size
+    b, sq, hq, dh = q.shape
+    hk = k_cache.shape[2]
+    sloc = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    if r == 1:
+        return local_attention(q, k_cache, v_cache, causal=False,
+                               window=window, cap=cap, scale=scale,
+                               valid_len=cache_len - 1)
+
+    i = lax.axis_index(axis)
+    qg = _group(q, hk)
+    kpos = i * sloc + jnp.arange(sloc)
+    qpos = jnp.full((sq,), cache_len - 1)
+    m, l, acc = _init_state(b, hk, hq // hk, sq, dh)
+    m, l, acc = _block_update(qg, k_cache, v_cache, m, l, acc, qpos, kpos,
+                              scale=scale, causal=False, window=window,
+                              cap=cap, valid_len=cache_len - 1)
+    # distributed (max, sum, acc) combine over the ring axis
+    m_g = lax.pmax(m, axis)
+    alpha = jnp.exp(m - m_g)
+    num = lax.psum(acc * alpha[..., None], axis)
+    den = lax.psum(l * alpha, axis)
+    return _finish(m_g, den, num, q.dtype)
+
+
+def write_kv_cache(k_cache, v_cache, k_new, v_new, pos, *, axis: str,
+                   axis_size: int):
+    """Insert this step's K/V (replicated) into the sharded cache at global
+    position ``pos``; only the owning die writes."""
+    sloc = k_cache.shape[1]
+    if axis_size == 1:
+        kc = lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)
+        return kc, vc
+    i = lax.axis_index(axis)
+    owner = pos // sloc
+    local_pos = jnp.where(owner == i, pos - i * sloc, 0)
+    kc = lax.dynamic_update_slice_in_dim(k_cache, k_new, local_pos, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(v_cache, v_new, local_pos, axis=1)
+    keep = (owner == i)
+    kc = jnp.where(keep, kc, k_cache)
+    vc = jnp.where(keep, vc, v_cache)
+    return kc, vc

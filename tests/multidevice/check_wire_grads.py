@@ -1,0 +1,72 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "/root/repo/src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, ShapeConfig, reduced_config
+from repro.core.dist import Dist, make_mesh
+from repro.models import lm
+from repro.models.transformer import RunCtx, init_params, param_specs
+from repro.train.train_loop import batch_specs, token_axes, reduce_model_axis_grads
+
+def grads_for(arch, overrides, par):
+    cfg = reduced_config(get_config(arch), **overrides)
+    B, S = 4, 32
+    mesh = make_mesh((2, 4), ("data", "model"))
+    dist = Dist(mesh)
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, cfg.vocab_size, (B, S + 1)).astype(np.int32)
+    host = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    params = init_params(jax.random.key(0), cfg)
+    pspecs = param_specs(cfg, "tatp")
+    params_sh = jax.device_put(params, jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs))
+    ctx = RunCtx(cfg, par, dist)
+    shp = ShapeConfig("t", "train", S, B)
+    bspecs = batch_specs(cfg, shp, par, dist)
+    batch = {k: jax.device_put(jnp.asarray(v), NamedSharding(mesh, bspecs[k])) for k, v in host.items()}
+    tax = token_axes(par, dist)
+    def local(p, bt):
+        nll, cnt, _ = lm.loss_fn(ctx, p, bt)
+        cg = cnt
+        for a in tax: cg = jax.lax.psum(cg, a)
+        return nll / jax.lax.stop_gradient(cg)
+    def step(p, bt):
+        g = jax.grad(local)(p, bt)
+        g = jax.tree.map(lambda x: jax.lax.psum(x, "data"), g)
+        return reduce_model_axis_grads(g, pspecs, par, dist)
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(pspecs, bspecs), out_specs=pspecs, check_vma=False))
+    return jax.device_get(f(params_sh, batch))
+
+def cmp(name, a, b, tol):
+    worst, wkey = 0.0, ""
+    for (kp, x), (_, y) in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                               jax.tree_util.tree_flatten_with_path(b)[0]):
+        x, y = np.asarray(x, np.float32), np.asarray(y, np.float32)
+        d = np.abs(x - y).max() / max(np.abs(x).max(), 1e-4)
+        if d > worst: worst, wkey = d, jax.tree_util.keystr(kp)
+    status = "OK " if worst < tol else "FAIL"
+    print(f"{status} {name}: worst grad rel diff {worst:.3g} at {wkey}")
+    return worst < tol
+
+ds_over = dict(vocab_size=128, d_model=64, d_ff=128, n_heads=4, n_kv_heads=4, d_head=16)
+mb_over = dict(vocab_size=128, d_model=64, n_heads=0, n_kv_heads=0, d_ff=0, ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+base_ds = grads_for("deepseek-7b", ds_over, ParallelConfig(strategy="tatp", remat=False))
+fp8_ds = grads_for("deepseek-7b", ds_over, ParallelConfig(strategy="tatp", remat=False, stream_dtype="fp8"))
+ok1 = cmp("deepseek fp8 grads", base_ds, fp8_ds, 0.30)  # lossy wire: close, not severed
+# detect severed grads: ratio of grad norms
+n1 = np.sqrt(sum((np.asarray(g, np.float32)**2).sum() for g in jax.tree.leaves(base_ds)))
+n2 = np.sqrt(sum((np.asarray(g, np.float32)**2).sum() for g in jax.tree.leaves(fp8_ds)))
+print(f"grad norms: base={n1:.4f} fp8={n2:.4f} ratio={n2/n1:.3f}")
+assert 0.9 < n2/n1 < 1.1, "fp8 wire severed gradients"
+assert ok1
+
+base_mb = grads_for("mamba2-780m", mb_over, ParallelConfig(strategy="tatp", remat=False))
+bf16_mb = grads_for("mamba2-780m", mb_over, ParallelConfig(strategy="tatp", remat=False, ssm_state_wire="bf16"))
+ok2 = cmp("mamba bf16-wire grads", base_mb, bf16_mb, 0.05)
+n1 = np.sqrt(sum((np.asarray(g, np.float32)**2).sum() for g in jax.tree.leaves(base_mb)))
+n2 = np.sqrt(sum((np.asarray(g, np.float32)**2).sum() for g in jax.tree.leaves(bf16_mb)))
+print(f"grad norms: base={n1:.4f} bf16={n2:.4f} ratio={n2/n1:.3f}")
+assert 0.95 < n2/n1 < 1.05 and ok2
+print("WIRE GRAD CHECKS PASSED")

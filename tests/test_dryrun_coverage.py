@@ -1,0 +1,59 @@
+"""Assert the 40-cell × 2-mesh dry-run artifact set is complete and healthy
+(runs against results/dryrun; skipped if the sweep hasn't been run)."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHITECTURES, SHAPES, get_config, shape_applicable
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(DRYRUN, "*.json")),
+                    reason="dry-run sweep not executed")
+def test_all_cells_present_and_ok():
+    missing, bad = [], []
+    n_ok = n_skip = 0
+    for arch in ARCHITECTURES:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            for mesh in ("pod", "multipod"):
+                path = os.path.join(
+                    DRYRUN, f"{arch}__{shape.name}__{mesh}.json")
+                if not os.path.exists(path):
+                    missing.append(path)
+                    continue
+                with open(path) as f:
+                    rec = json.load(f)
+                if shape_applicable(cfg, shape):
+                    if rec.get("status") != "ok":
+                        bad.append((path, rec.get("status"),
+                                    rec.get("error")))
+                    else:
+                        n_ok += 1
+                        assert rec["flops"] > 0
+                        assert rec["n_devices"] == (512 if mesh == "multipod"
+                                                    else 256)
+                else:
+                    assert rec.get("status") == "skipped", path
+                    n_skip += 1
+    assert not missing, missing[:5]
+    assert not bad, bad[:5]
+    assert n_ok == 64  # 32 runnable cells × 2 meshes
+    assert n_skip == 16  # 8 long_500k skips × 2 meshes
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(DRYRUN, "*.json")),
+                    reason="dry-run sweep not executed")
+def test_roofline_analysis_runs():
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import load_all
+    rows = [r for r in load_all(DRYRUN) if r.get("status") == "ok"]
+    assert len(rows) >= 64
+    for r in rows:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= r["roofline_fraction"] <= 1.5

@@ -1,0 +1,148 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+sweeping shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.kernel import ssd_intra_chunk
+from repro.kernels.ssd.ops import ssd_chunked_fast
+from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+from repro.kernels.tatp_matmul.kernel import matmul
+from repro.kernels.tatp_matmul.ref import matmul_ref
+from repro.models.ssm import ssd_chunked
+
+
+def _tol(dtype):
+    # different accumulation order than jnp.dot -> small fp drift
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# tatp matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 384, 512),
+                                   (512, 256, 128), (128, 1024, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tatp_matmul(m, n, k, dtype):
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(m, n), dtype)
+    b = jnp.asarray(rng.randn(n, k), dtype)
+    got = matmul(a, b, bm=128, bn=128, bk=128, interpret=True)
+    ref = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               **_tol(dtype))
+
+
+def test_tatp_matmul_rejects_untileable():
+    a = jnp.zeros((96, 128))
+    b = jnp.zeros((128, 128))
+    with pytest.raises(AssertionError):
+        matmul(a, b, bm=64, bn=128, bk=128, interpret=True)
+
+
+def test_tatp_dot_fallback():
+    """ops-level dispatch: untileable shapes fall back to the oracle."""
+    from repro.kernels.tatp_matmul.ops import tatp_dot
+    rng = np.random.RandomState(7)
+    a = jnp.asarray(rng.randn(5, 24), jnp.float32)
+    b = jnp.asarray(rng.randn(24, 40), jnp.float32)
+    np.testing.assert_allclose(np.asarray(tatp_dot(a, b)),
+                               np.asarray(matmul_ref(a, b)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 64, None), (True, None, 50.0),
+    (False, None, None),
+])
+def test_flash_attention(hq, hkv, causal, window, cap):
+    rng = np.random.RandomState(1)
+    b, s, d = 2, 256, 64
+    q = jnp.asarray(rng.randn(b, hq, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                          bq=128, bk=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    rng = np.random.RandomState(2)
+    b, h, s, d = 1, 2, 256, 128
+    q = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    k = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    v = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    got = flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_rect():
+    """Sq != Skv (chunked prefill shape)."""
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 512, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 512, 64), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, bq=128, bk=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,p,n", [(8, 16, 16), (16, 64, 32), (8, 64, 128)])
+def test_ssd_intra_chunk(h, p, n):
+    rng = np.random.RandomState(4)
+    b, q = 3, 32
+    x = jnp.asarray(rng.randn(b, q, h, p), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(b, q, h)) * 0.1, jnp.float32)
+    a = -jnp.asarray(np.abs(rng.randn(h)) + 0.1, jnp.float32)
+    bm = jnp.asarray(rng.randn(b, q, n), jnp.float32)
+    cm = jnp.asarray(rng.randn(b, q, n), jnp.float32)
+    got = ssd_intra_chunk(x, dt, a, bm, cm, interpret=True)
+    ref = ssd_intra_chunk_ref(x, dt, a, bm, cm)
+    for g, r, name in zip(got, ref, ("y", "state", "decay")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_ssd_full_vs_model_ref():
+    """Kernel-backed chunked SSD == model-substrate oracle end to end."""
+    rng = np.random.RandomState(5)
+    b, l, h, p, n, chunk = 2, 64, 8, 16, 16, 16
+    x = jnp.asarray(rng.randn(b, l, h, p), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(b, l, h)) * 0.1, jnp.float32)
+    a = -jnp.asarray(np.abs(rng.randn(h)) + 0.1, jnp.float32)
+    bm = jnp.asarray(rng.randn(b, l, n), jnp.float32)
+    cm = jnp.asarray(rng.randn(b, l, n), jnp.float32)
+    got = ssd_chunked_fast(x, dt, a, bm, cm, chunk, use_kernel=True,
+                           interpret=True)
+    ref = ssd_chunked(x, dt, a, bm, cm, chunk)
+    np.testing.assert_allclose(np.asarray(got.y), np.asarray(ref.y),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.state), np.asarray(ref.state),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode step
+on CPU (single device), asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, get_reduced
+from repro.configs.base import ParallelConfig
+from repro.core.dist import Dist, make_mesh
+from repro.models import lm
+from repro.models.transformer import RunCtx, init_params, padded_vocab
+
+
+def _ctx(cfg, **par_overrides):
+    mesh = make_mesh((1,), ("model",))
+    par = ParallelConfig(strategy="tatp", remat=False, **par_overrides)
+    return RunCtx(cfg, par, Dist(mesh), phase="train")
+
+
+def _batch(cfg, b=2, s=32):
+    rng = np.random.RandomState(0)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s))),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s))),
+    }
+    if cfg.frontend:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.randn(b, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.n_enc_layers:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.randn(b, 16, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHITECTURES))
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    ctx = _ctx(cfg)
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+
+    def loss(p):
+        nll, cnt, aux = lm.loss_fn(ctx, p, batch)
+        return nll / cnt + aux
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val)), f"{arch}: non-finite loss {val}"
+    # plausible initial loss: close to ln(V)
+    assert float(val) < 2 * np.log(cfg.vocab_size) + 2.0
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHITECTURES))
+def test_prefill_decode_smoke(arch):
+    cfg = get_reduced(arch)
+    if cfg.n_enc_layers:
+        enc_len = 16
+    else:
+        enc_len = None
+    ctx = _ctx(cfg)
+    params = init_params(jax.random.key(0), cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+
+    caches, logits = jax.jit(
+        lambda p, bt: lm.prefill(ctx, p, bt))(params, batch)
+    assert logits.shape == (b, 1, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # decode needs a cache sized for future positions: rebuild a larger one
+    # and refill it by prefilling into the bigger layout (here: reuse shapes
+    # from init_cache and copy the prefill results in).
+    max_seq = 2 * s
+    big = lm.init_cache(ctx, b, max_seq, enc_len=enc_len)
+
+    def graft(dst, src):
+        if dst.ndim >= 3 and dst.shape[2] == src.shape[2] and \
+                dst.dtype == src.dtype and dst.shape[1] == src.shape[1]:
+            pass
+        return dst
+
+    # write prefill K/V into the front of the big cache
+    def merge(d, s_):
+        if d.shape == s_.shape:
+            return s_
+        if d.ndim == s_.ndim and s_.shape[2:] == d.shape[2:] and \
+                s_.shape[:2] == d.shape[:2]:
+            return d
+        # attn caches: [reps, B, S, H, hd] — copy prompt positions
+        sl = [slice(None)] * d.ndim
+        sl[2] = slice(0, s_.shape[2])
+        return d.at[tuple(sl)].set(s_.astype(d.dtype))
+
+    caches = jax.tree.map(merge, big, caches)
+
+    tok = jnp.asarray(np.random.RandomState(1).randint(0, cfg.vocab_size,
+                                                       (b, 1)))
+    step = jax.jit(lambda p, t, c, n: lm.decode_step(ctx, p, t, c, n))
+    cache_len = jnp.int32(s + 1)
+    nxt, logits2, caches = step(params, tok, caches, cache_len)
+    assert nxt.shape == (b, 1)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    assert (np.asarray(nxt) >= 0).all() and \
+        (np.asarray(nxt) < cfg.vocab_size).all()
+    # a second step keeps shapes/dtypes stable (scan-compatible caches)
+    nxt2, _, _ = step(params, nxt, caches, cache_len + 1)
+    assert nxt2.shape == (b, 1)

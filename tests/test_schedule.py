@@ -1,0 +1,54 @@
+"""Property tests (hypothesis) for the TSPP/TATP orchestration schedules."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schedule import (line_schedule, ring_schedule, simulate,
+                                 tail_latency_rounds)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=12).map(lambda k: 2 * k))
+def test_line_schedule_invariants(n):
+    """Alg. 1 on an open line: feasible, one-hop, one compute per round,
+    buffer bounded by N/2 blocks."""
+    rep = simulate(line_schedule(n))
+    assert rep.ok, rep.errors
+    assert rep.max_hop == 1
+    assert rep.computes_per_die_per_round == 1
+    assert rep.n_rounds == n
+    assert rep.peak_buffer_blocks <= n // 2 + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=24),
+       st.booleans())
+def test_ring_schedule_invariants(n, bidirectional):
+    rep = simulate(ring_schedule(n, bidirectional))
+    assert rep.ok, rep.errors
+    assert rep.max_hop <= 1
+    if bidirectional:
+        # half the rounds, O(1) buffers
+        assert rep.n_rounds <= n // 2 + 1
+        assert rep.peak_buffer_blocks <= 2
+        assert rep.computes_per_die_per_round <= 2
+    else:
+        assert rep.n_rounds == n
+        assert rep.peak_buffer_blocks <= 1
+        assert rep.computes_per_die_per_round == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=32))
+def test_tail_latency_claim(n):
+    """Naive TSPP on a line pays an O(N)-hop wrap; TATP stays at one hop
+    (paper Fig. 5a)."""
+    assert tail_latency_rounds(n, "line", bidirectional=False) == n - 1
+    assert tail_latency_rounds(n, "line", bidirectional=True) == 1
+    assert tail_latency_rounds(n, "ring", bidirectional=True) == 1
+
+
+def test_line_requires_even():
+    import pytest
+    with pytest.raises(ValueError):
+        line_schedule(5)

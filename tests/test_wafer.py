@@ -1,0 +1,227 @@
+"""Wafer-engine tests: topology/routing, mapping contiguity, TCME
+contention reduction, simulator invariants, DLWS solver quality, fault
+recovery, and the DNN cost surrogate."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import TABLE_II
+from repro.wafer import mapping as wmap
+from repro.wafer.simulator import (ParallelDegrees, best_config,
+                                   candidate_degrees, simulate_step)
+from repro.wafer.tcme import optimize_phase
+from repro.wafer.topology import Wafer, WaferSpec
+from repro.wafer.traffic import CommOp, link_loads, max_ring_hops, phase_time
+
+WAFER = Wafer(WaferSpec())
+CFG, SHAPE = TABLE_II["gpt3-6.7b"]
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+
+def test_xy_yx_paths():
+    a, b = WAFER.die(0, 0), WAFER.die(3, 5)
+    xy = WAFER.xy_path(a, b)
+    yx = WAFER.yx_path(a, b)
+    assert len(xy) == len(yx) == WAFER.hops(a, b) == 8
+    assert xy != yx  # different intermediate links
+    # contiguity of each path
+    for path in (xy, yx):
+        cur = a
+        for s, d in path:
+            assert s == cur and d in WAFER.neighbors(s)
+            cur = d
+        assert cur == b
+
+
+def test_detour_avoids_faults():
+    a, b = WAFER.die(0, 0), WAFER.die(0, 3)
+    w = WAFER.with_faults(links=[(WAFER.die(0, 1), WAFER.die(0, 2))])
+    path = w.detour_path(a, b)
+    assert path is not None
+    assert (WAFER.die(0, 1), WAFER.die(0, 2)) not in path
+    assert len(path) > 3  # longer than the direct route
+
+
+def test_dead_die_unroutable_through():
+    w = WAFER.with_faults(dies=[WAFER.die(0, 1)])
+    path = w.detour_path(WAFER.die(0, 0), WAFER.die(0, 2))
+    assert path is not None
+    assert all(s != WAFER.die(0, 1) and d != WAFER.die(0, 1)
+               for s, d in path)
+
+
+# ---------------------------------------------------------------------------
+# mapping: snake rings are contiguous, row-major rings are not (Fig. 7a)
+# ---------------------------------------------------------------------------
+
+
+def test_snake_vs_rowmajor_contiguity():
+    snake = wmap.make_groups(WAFER, 16, "tcme")
+    rowm = wmap.make_groups(WAFER, 16, "smap")
+    s_stats = wmap.ring_contiguity_stats(snake, WAFER)
+    r_stats = wmap.ring_contiguity_stats(rowm, WAFER)
+    assert s_stats["max_hops"] == 1, s_stats
+    assert r_stats["max_hops"] > 1, r_stats  # the tetris effect
+
+
+def test_hierarchical_map_shapes():
+    groups = wmap.hierarchical_map(WAFER, {"dp": 2, "tatp": 16}, "tcme")
+    assert len(groups["tatp"]) == 2 and len(groups["tatp"][0]) == 16
+    assert len(groups["dp"]) == 16 and len(groups["dp"][0]) == 2
+    # every die appears exactly once per axis partition
+    for axis in ("tatp", "dp"):
+        seen = [d for g in groups[axis] for d in g]
+        assert sorted(seen) == sorted(WAFER.alive_dies())
+
+
+# ---------------------------------------------------------------------------
+# TCME optimizer (paper Fig. 11)
+# ---------------------------------------------------------------------------
+
+
+def _contended_ops():
+    """FSDP all-gathers + TATP P2P rings sharing links (Fig. 11a)."""
+    ops = []
+    for g in wmap.make_groups(WAFER, 4, "smap"):
+        ops.append(CommOp("allgather", g, 100e6, tag="fsdp"))
+    # crossing rings: column-strided groups (non-contiguous)
+    cols = WAFER.spec.cols
+    for c in range(4):
+        g = tuple(WAFER.die(r, c) for r in range(4))
+        ops.append(CommOp("p2p_ring", g, 100e6, tag="tatp"))
+    return ops
+
+
+def test_tcme_reduces_bottleneck():
+    ops = _contended_ops()
+    report = optimize_phase(ops, WAFER)
+    assert report.final_max_load <= report.initial_max_load
+    assert report.iterations >= 1
+
+
+def test_phase_time_contention_visible():
+    # the same TATP ring takes longer when FSDP all-gathers share its links
+    ring = CommOp("p2p_ring",
+                  tuple(WAFER.die(r, 0) for r in range(4)), 100e6)
+    alone = phase_time([ring], WAFER)
+    with_bg = phase_time(_contended_ops() + [ring], WAFER)
+    assert with_bg > alone
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_tatp_bidirectional_beats_naive():
+    deg = ParallelDegrees(dp=2, tatp=16)
+    fast = simulate_step(WAFER, CFG, 8, 2048, deg, "tcme",
+                         stream="weights", tatp_bidirectional=True)
+    slow = simulate_step(WAFER, CFG, 8, 2048, deg, "tcme",
+                         stream="weights", tatp_bidirectional=False)
+    assert fast.breakdown["p2p_layer"] < slow.breakdown["p2p_layer"]
+
+
+def test_tcme_mapping_beats_smap_for_tatp():
+    deg = ParallelDegrees(dp=2, tatp=16)
+    good = simulate_step(WAFER, CFG, 64, 2048, deg, "tcme")
+    bad = simulate_step(WAFER, CFG, 64, 2048, deg, "smap",
+                        run_tcme_optimizer=False)
+    assert good.breakdown["hop_factor"] == 1
+    assert bad.breakdown["hop_factor"] > 1
+    assert good.step_time <= bad.step_time
+
+
+def test_memory_decreases_with_tatp_degree():
+    mems = []
+    for n in (2, 4, 8, 16):
+        r = simulate_step(WAFER, CFG, SHAPE.global_batch, SHAPE.seq_len,
+                          ParallelDegrees(dp=32 // n, tatp=n), "tcme")
+        mems.append(r.mem_per_die)
+    assert all(a > b for a, b in zip(mems, mems[1:]))
+
+
+def test_temp_beats_all_baselines():
+    rt = best_config(WAFER, CFG, SHAPE.global_batch, SHAPE.seq_len,
+                     "temp", "tcme")
+    for space, engine in [("mega", "smap"), ("mega", "gmap"),
+                          ("mesp", "smap"), ("mesp", "gmap"),
+                          ("fsdp", "smap"), ("fsdp", "gmap")]:
+        r = best_config(WAFER, CFG, SHAPE.global_batch, SHAPE.seq_len,
+                        space, engine)
+        assert rt.throughput >= r.throughput, (space, engine)
+
+
+def test_candidate_degrees_partition():
+    for d in candidate_degrees(32, {"dp": True, "tp": True, "tatp": True}):
+        assert d.total == 32
+
+
+# ---------------------------------------------------------------------------
+# DLWS solver
+# ---------------------------------------------------------------------------
+
+
+def test_dlws_matches_exhaustive_quality():
+    from repro.wafer.solver import dlws_solve
+    sol = dlws_solve(WAFER, CFG, 32, 2048, space="temp")
+    ref = best_config(WAFER, CFG, 32, 2048, "temp", "tcme")
+    assert sol.best.throughput >= 0.95 * ref.throughput
+    # and far fewer evaluations than the joint space
+    assert sol.evaluated < 300
+
+
+def test_dlws_faster_than_ilp():
+    from repro.wafer.solver import dlws_solve, ilp_search
+    sol = dlws_solve(WAFER, CFG, 8, 2048, space="temp")
+    ilp = ilp_search(WAFER, CFG, 8, 2048, space="temp")
+    assert ilp.evaluated > 10 * sol.evaluated
+    assert sol.best.throughput >= 0.9 * ilp.best.throughput
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance (Fig. 20)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_recovery_core():
+    from repro.wafer.fault import inject_faults, recover
+    rep = inject_faults(WAFER, die_rate=0.2, seed=3)
+    assert rep.classify() == "core"
+    res = recover(WAFER, rep, CFG, 16, 2048)
+    assert res.ok and res.throughput > 0
+
+
+def test_fault_curve_shapes():
+    from repro.wafer.fault import throughput_vs_fault_rate
+    core = throughput_vs_fault_rate(WAFER, CFG, 16, 2048, kind="core",
+                                    rates=(0.0, 0.25))
+    link = throughput_vs_fault_rate(WAFER, CFG, 16, 2048, kind="link",
+                                    rates=(0.0, 0.25))
+    # resilient to core faults (paper: ~80% at 25% core-fault rate)
+    assert core[-1]["normalized"] >= 0.4
+    assert link[-1]["normalized"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# DNN cost model (Fig. 21)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_dnn_cost_model_beats_regression():
+    from repro.wafer.dnn_cost import (evaluate, fit_linear, make_dataset,
+                                      train_dnn)
+    xs, ys = make_dataset(WAFER, [CFG], n=220, seed=0)
+    xtr, xte = xs[:180], xs[180:]
+    ytr, yte = ys[:180], ys[180:]
+    dnn = train_dnn(xtr, ytr, epochs=300)
+    lin = fit_linear(xtr, ytr)
+    dnn_m = evaluate(dnn.predict(xte), yte)
+    lin_m = evaluate(lin(xte), yte)
+    assert dnn_m["log_step"]["corr"] > 0.97
+    assert dnn_m["log_step"]["rel_err"] < lin_m["log_step"]["rel_err"] * 1.1
