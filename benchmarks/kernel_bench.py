@@ -1,5 +1,10 @@
 """Kernel microbenchmarks: wall-clock per call (CPU; interpret-mode numbers
-are correctness artifacts — TPU perf comes from the roofline analysis)."""
+are correctness artifacts — TPU perf comes from the roofline analysis).
+
+Each reference (XLA:CPU) implementation is timed next to its Pallas kernel
+in interpret mode, so kernel-side regressions show up in the same unified
+report even without TPU hardware.
+"""
 
 from __future__ import annotations
 
@@ -8,9 +13,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, save_rows, timed
+from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ops import ssd_chunked_fast
+from repro.kernels.tatp_matmul.kernel import matmul
 from repro.kernels.tatp_matmul.ref import matmul_ref
+
+# interpret mode pays a large constant per program instance; keep the
+# sweeps small so the whole suite stays CI-friendly
+INTERP_ITERS = 2
 
 
 def run() -> list[dict]:
@@ -27,6 +38,16 @@ def run() -> list[dict]:
         rows.append({"name": f"tatp_gemm_{m}x{n}x{k}", "us": dt * 1e6,
                      "derived": f"{flops/dt/1e9:.1f}GFLOP/s"})
 
+    # TATP GEMM — Pallas kernel, interpret mode
+    m, n, k = 256, 512, 512
+    a = jnp.asarray(rng.randn(m, n), jnp.float32)
+    b = jnp.asarray(rng.randn(n, k), jnp.float32)
+    dt, _ = timed(lambda: jax.block_until_ready(
+        matmul(a, b, bm=128, bn=128, bk=128, interpret=True)),
+        iters=INTERP_ITERS)
+    rows.append({"name": f"tatp_gemm_{m}x{n}x{k}_pallas_interp",
+                 "us": dt * 1e6, "derived": "interpret"})
+
     # attention reference
     q = jnp.asarray(rng.randn(1, 8, 512, 64), jnp.float32)
     kv = jnp.asarray(rng.randn(1, 8, 512, 64), jnp.float32)
@@ -34,6 +55,13 @@ def run() -> list[dict]:
     dt, _ = timed(lambda: jax.block_until_ready(f(q, kv, kv)))
     rows.append({"name": "attention_b1h8s512d64", "us": dt * 1e6,
                  "derived": ""})
+
+    # flash attention — Pallas kernel, interpret mode (same shape)
+    dt, _ = timed(lambda: jax.block_until_ready(
+        flash_attention(q, kv, kv, causal=True, bq=128, bk=128,
+                        interpret=True)), iters=INTERP_ITERS)
+    rows.append({"name": "attention_b1h8s512d64_pallas_interp",
+                 "us": dt * 1e6, "derived": "interpret"})
 
     # SSD chunked
     x = jnp.asarray(rng.randn(2, 256, 8, 64), jnp.float32)
@@ -43,6 +71,13 @@ def run() -> list[dict]:
     dt, _ = timed(lambda: jax.block_until_ready(
         ssd_chunked_fast(x, dtt, a_, bm, bm, 64, use_kernel=False).y))
     rows.append({"name": "ssd_b2l256h8", "us": dt * 1e6, "derived": ""})
+
+    # SSD chunked — Pallas intra-chunk kernel, interpret mode
+    dt, _ = timed(lambda: jax.block_until_ready(
+        ssd_chunked_fast(x, dtt, a_, bm, bm, 64, use_kernel=True,
+                         interpret=True).y), iters=INTERP_ITERS)
+    rows.append({"name": "ssd_b2l256h8_pallas_interp", "us": dt * 1e6,
+                 "derived": "interpret"})
 
     save_rows("kernel_bench", rows)
     return rows

@@ -47,6 +47,26 @@ def main() -> None:
                   f"mean_roofline={frac:.2%} cells={len(ok)}")
     except Exception:
         traceback.print_exc()
+    # cost-engine baseline: surface the *recorded* speedup baseline (the
+    # "baseline" key survives reruns; "summary" is the run that just wrote
+    # the file) so drift against BENCH_search.json stays visible
+    try:
+        import json
+        from benchmarks.common import csv_row
+        from benchmarks.search_time import BENCH_PATH
+        with open(BENCH_PATH) as f:
+            data = json.load(f)
+        base = data.get("baseline") or data["summary"]
+        print(csv_row("search/engine_baseline",
+                      base["avg_engine_speedup"] * 1e6,
+                      f"avg_speedup={base['avg_engine_speedup']:.1f}x "
+                      f"min={base['min_engine_speedup']:.1f}x "
+                      f"evals/s={base['avg_evals_per_s']:.0f} "
+                      f"identical={base['all_identical_to_scalar']}"))
+    except FileNotFoundError:
+        pass
+    except Exception:
+        traceback.print_exc()
     if failures:
         sys.exit(1)
 

@@ -51,11 +51,12 @@ def main():
           f"({rep.improvement:.2f}x, {rep.rerouted_pairs} reroutes, "
           f"{rep.merged_ops} multicast merges)")
 
-    print("\n== 3. DLWS vs ILP ==")
+    print("\n== 3. DLWS vs ILP (batched two-tier cost engine) ==")
     dls = dlws_solve(wafer, cfg, shape.global_batch, shape.seq_len)
     ilp = ilp_search(wafer, cfg, shape.global_batch, shape.seq_len)
-    print(f" DLWS: {dls.config.as_tuple()} in {dls.search_time_s:.2f}s "
-          f"({dls.evaluated} sims)")
+    print(f" DLWS: {dls.config.as_tuple()} in {dls.search_time_s*1e3:.1f}ms "
+          f"({dls.evaluated} sims, "
+          f"{dls.evaluated/max(dls.search_time_s,1e-9):.0f} evals/s)")
     print(f" ILP : {ilp.config.as_tuple()} in {ilp.search_time_s:.2f}s "
           f"({ilp.evaluated} sims) -> "
           f"{ilp.search_time_s/max(dls.search_time_s,1e-9):.0f}x slower")

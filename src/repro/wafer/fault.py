@@ -22,7 +22,8 @@ import random
 from dataclasses import dataclass, field
 
 from repro.configs.base import ModelConfig
-from repro.wafer.simulator import ParallelDegrees, SimResult, simulate_step
+from repro.wafer.simulator import (ParallelDegrees, SimResult,
+                                   StepCostContext, simulate_step)
 from repro.wafer.solver import dlws_solve
 from repro.wafer.topology import Wafer
 
@@ -73,18 +74,15 @@ def recover(wafer: Wafer, report: FaultReport, cfg: ModelConfig, batch: int,
     degraded = wafer.with_faults(report.failed_dies, report.failed_links)
     alive = degraded.alive_dies()
     usable = largest_usable_count(len(alive))
-    # adaptive partitioning: re-solve on the power-of-two usable subset
-    # (the snake embedding skips the holes; spares stay idle)
+    # adaptive partitioning: re-solve on the usable subset (the snake
+    # embedding skips the holes; spares stay idle)
     sub = alive[:usable]
-    # quick re-solve (DP only — GA omitted for speed in the fault loop)
+    # quick re-solve (DP only — GA omitted for speed in the fault loop);
+    # the context pins the evaluation cache to this degraded die subset
     from repro.wafer.solver import dp_refine
-    cache: dict = {}
-    counter = [0]
-    deg = dp_refine(degraded, cfg, batch, seq,
-                    ParallelDegrees(dp=usable), engine, False, cache,
-                    counter, dies=sub)
-    res = simulate_step(degraded, cfg, batch, seq, deg, engine, dies=sub)
-    return res
+    ctx = StepCostContext(degraded, cfg, batch, seq, engine, dies=sub)
+    deg = dp_refine(ctx, ParallelDegrees(dp=usable))
+    return ctx.evaluate(deg, final=True)
 
 
 def throughput_vs_fault_rate(wafer: Wafer, cfg: ModelConfig, batch: int,

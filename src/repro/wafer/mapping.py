@@ -17,20 +17,27 @@ for ``jax.make_mesh`` — the deployable output of TCME on TPU meshes.
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import numpy as np
 
 from repro.wafer.topology import Wafer
 
 
-def snake_order(rows: int, cols: int) -> list[int]:
-    """Boustrophedon enumeration: a Hamiltonian path on the 2D mesh —
-    consecutive entries are always physically adjacent."""
+@lru_cache(maxsize=None)
+def _snake(rows: int, cols: int) -> tuple[int, ...]:
     order = []
     for r in range(rows):
         cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
         for c in cs:
             order.append(r * cols + c)
-    return order
+    return tuple(order)
+
+
+def snake_order(rows: int, cols: int) -> list[int]:
+    """Boustrophedon enumeration: a Hamiltonian path on the 2D mesh —
+    consecutive entries are always physically adjacent."""
+    return list(_snake(rows, cols))
 
 
 def rowmajor_order(rows: int, cols: int) -> list[int]:
@@ -43,10 +50,11 @@ def make_groups(wafer: Wafer, group_size: int, engine: str,
     spec = wafer.spec
     if dies is None:
         dies = wafer.alive_dies()
+    live = set(dies)
     if engine in ("tcme", "snake"):
-        base = [d for d in snake_order(spec.rows, spec.cols) if d in dies]
+        base = [d for d in snake_order(spec.rows, spec.cols) if d in live]
     else:  # smap / gmap: row-major
-        base = [d for d in rowmajor_order(spec.rows, spec.cols) if d in dies]
+        base = [d for d in rowmajor_order(spec.rows, spec.cols) if d in live]
     n_groups = len(base) // group_size
     return [tuple(base[g * group_size:(g + 1) * group_size])
             for g in range(n_groups)]
@@ -90,19 +98,20 @@ def hierarchical_map(wafer: Wafer, degrees: dict[str, int],
     base = (snake_order(wafer.spec.rows, wafer.spec.cols)
             if engine in ("tcme", "snake")
             else rowmajor_order(wafer.spec.rows, wafer.spec.cols))
-    base = [d for d in base if d in dies][:total]
+    live = set(dies)
+    base = [d for d in base if d in live][:total]
 
     axes = list(degrees.items())
     out: dict[str, list[tuple[int, ...]]] = {}
+    base_arr = np.asarray(base, np.int64)
     inner = total
     for name, deg in axes:
         inner //= deg
-        groups = []
         n_outer = total // (deg * inner)
-        for o in range(n_outer):
-            for i in range(inner):
-                grp = tuple(base[o * deg * inner + k * inner + i]
-                            for k in range(deg))
-                groups.append(grp)
-        out[name] = groups
+        # group[(o, i)][k] = base[o·deg·inner + k·inner + i]: reshape to
+        # (outer, deg, inner) and swap the stride axes — same enumeration
+        # as the nested scalar loops, built in one shot
+        rows = base_arr.reshape(n_outer, deg, inner) \
+            .transpose(0, 2, 1).reshape(-1, deg)
+        out[name] = [tuple(r) for r in rows.tolist()]
     return out

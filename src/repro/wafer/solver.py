@@ -8,6 +8,15 @@ fixed point.  Level 2: a genetic algorithm refines the full configuration
 vector (degrees × mapping engine ordering) with crossover / mutation /
 elitist selection.
 
+All levels score candidates through the two-tier batched cost engine
+(:class:`repro.wafer.simulator.StepCostContext` + ``simulate_batch``): the
+DP pass submits whole (va, vb) grids per dimension pair and the GA submits
+whole generations, so the engine can vectorize the arithmetic and prune
+memory-infeasible candidates before traffic modeling.  The context also
+carries the result cache, which keys evaluations to the wafer + alive-die
+subset (the seed's module-level cache leaked results across different
+``dies`` subsets during fault sweeps).
+
 An ILP-style exhaustive baseline (:func:`ilp_search`) provides the paper's
 §VIII-H search-time comparison (DLS is >100× faster on the same space while
 matching solution quality).
@@ -19,11 +28,12 @@ import itertools
 import random
 import time
 from dataclasses import dataclass, field, replace
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.wafer.simulator import (ParallelDegrees, SimResult,
-                                   candidate_degrees, simulate_step)
+                                   StepCostContext, candidate_degrees,
+                                   divisors, simulate_batch)
 from repro.wafer.topology import Wafer
 
 
@@ -70,38 +80,34 @@ def partition_graph(cfg: ModelConfig) -> list[str]:
 # ---------------------------------------------------------------------------
 
 
-def _evaluate(wafer, cfg, batch, seq, deg, engine, fsdp, cache, counter,
-              final: bool = False, dies=None):
-    key = (deg.as_tuple(), deg.seq_par, engine, final)
-    if key in cache:
-        return cache[key]
-    # search evaluations use the fast cost path (the paper's DNN surrogate
-    # role); only the final plan pays for the full TCME optimizer pass
-    res = simulate_step(wafer, cfg, batch, seq, deg, engine, fsdp=fsdp,
-                        run_tcme_optimizer=final, dies=dies)
-    cache[key] = res
-    counter[0] += 1
-    return res
+def _score(res: SimResult) -> float:
+    return res.throughput if res.ok else -res.mem_per_die
 
 
-def dp_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
-              start: ParallelDegrees, engine: str, fsdp: bool,
-              cache: dict, counter: list,
-              dims=("dp", "tp", "sp", "tatp"), dies=None) -> ParallelDegrees:
+# generous degree ladder for subset-totals: composite values let degraded
+# wafers with awkward alive counts use most (not all) surviving dies
+_LADDER = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+
+def refine_values(n: int) -> tuple[int, ...]:
+    """Candidate per-dimension degrees for an ``n``-die wafer: the true
+    divisors of ``n`` (exact partitions, incl. primes like 47) plus the
+    composite ladder (subset totals — spare dies idle)."""
+    return tuple(sorted(set(divisors(n)).union(
+        v for v in _LADDER if v <= n)))
+
+
+def dp_refine(ctx: StepCostContext, start: ParallelDegrees,
+              dims=("dp", "tp", "sp", "tatp")) -> ParallelDegrees:
     """Pairwise coordinate-descent DP: optimise two parallel dimensions
     jointly (holding the rest fixed) so moves can trade degree between
-    dimensions while the die count stays full — one DP pass per dimension
-    pair, iterated to a fixed point."""
-    n = len(dies) if dies is not None else len(wafer.alive_dies())
-    vals = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
-
-    def score(deg):
-        r = _evaluate(wafer, cfg, batch, seq, deg, engine, fsdp, cache,
-                      counter, dies=dies)
-        return r.throughput if r.ok else -r.mem_per_die
+    dimensions while the die count stays full — one batch-scored candidate
+    grid per dimension pair, iterated to a fixed point."""
+    n = ctx.n_dies
+    vals = refine_values(n)
 
     cur = start
-    cur_s = score(cur)
+    cur_s = _score(ctx.evaluate(cur))
     improved = True
     while improved:
         improved = False
@@ -111,18 +117,18 @@ def dp_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
                 for d in dims:
                     if d not in (da, db):
                         rest *= getattr(cur, d)
-                for va in vals:
-                    for vb in vals:
-                        tot = rest * va * vb
-                        # subsets are allowed (spare dies idle) — essential
-                        # for degraded wafers with awkward alive counts
-                        if tot > n:
-                            continue
-                        cand = replace(cur, **{da: va, db: vb})
-                        s = score(cand)
-                        if s > cur_s:
-                            cur, cur_s = cand, s
-                            improved = True
+                # whole (va, vb) grid scored in one batch; subset totals are
+                # allowed (spare dies idle) — essential for degraded wafers
+                # with awkward alive counts
+                cands = [replace(cur, **{da: va, db: vb})
+                         for va in vals for vb in vals
+                         if rest * va * vb <= n]
+                results = ctx.evaluate_many(cands)
+                for cand, res in zip(cands, results):
+                    s = _score(res)
+                    if s > cur_s:
+                        cur, cur_s = cand, s
+                        improved = True
     return cur
 
 
@@ -131,18 +137,15 @@ def dp_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
 # ---------------------------------------------------------------------------
 
 
-def ga_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
-              seeds: list[ParallelDegrees], engine: str, fsdp: bool,
-              cache: dict, counter: list, *, pop: int = 12, gens: int = 6,
+def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
+              pop: int = 12, gens: int = 6,
               rng: Optional[random.Random] = None) -> ParallelDegrees:
     rng = rng or random.Random(0)
-    n = len(wafer.alive_dies())
+    n = ctx.n_dies
     genome_dims = ("dp", "tp", "sp", "tatp")
 
-    def fitness(deg):
-        r = _evaluate(wafer, cfg, batch, seq, deg, engine, fsdp, cache,
-                      counter)
-        return r.throughput if r.ok else -1.0
+    def fitness_of(res: SimResult) -> float:
+        return res.throughput if res.ok else -1.0
 
     def legal(deg):
         return deg.total <= n and n % deg.total == 0
@@ -167,7 +170,10 @@ def ga_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
     while len(popl) < pop:
         popl.append(mutate(rng.choice(seeds)))
     for _ in range(gens):
-        scored = sorted(popl, key=fitness, reverse=True)
+        # batch-score the generation (memoized, so survivors are free)
+        fits = [fitness_of(r) for r in ctx.evaluate_many(popl)]
+        scored = [d for _, d in sorted(zip(fits, popl), reverse=True,
+                                       key=lambda t: t[0])]
         elite = scored[: max(2, pop // 4)]
         nxt = list(elite)
         while len(nxt) < pop:
@@ -176,7 +182,8 @@ def ga_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
             child = mutate(crossover(a, b))
             nxt.append(child)
         popl = nxt
-    return max(popl, key=fitness)
+    fits = [fitness_of(r) for r in ctx.evaluate_many(popl)]
+    return popl[max(range(len(popl)), key=fits.__getitem__)]
 
 
 # ---------------------------------------------------------------------------
@@ -185,26 +192,25 @@ def ga_refine(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
 
 
 def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
-               engine: str = "tcme", space: str = "temp",
-               seed: int = 0) -> SolveResult:
+               engine: str = "tcme", space: str = "temp", seed: int = 0,
+               dies: Optional[list[int]] = None,
+               evaluator: str = "batch") -> SolveResult:
+    """Dual-level solve.  ``evaluator="reference"`` routes every score
+    through the seed scalar path (same trajectory — results are bitwise
+    identical — used by benchmarks to measure the engine speedup)."""
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
-    fsdp = spec["fsdp"]
     t0 = time.time()
-    cache: dict = {}
-    counter = [0]
+    ctx = StepCostContext(wafer, cfg, batch, seq, engine,
+                          fsdp=spec["fsdp"], dies=dies, evaluator=evaluator)
     subs = partition_graph(cfg)  # level 0 (scopes the DP passes)
-    start = ParallelDegrees(dp=len(wafer.alive_dies()),
-                            seq_par=spec["seq_par"])
+    start = ParallelDegrees(dp=ctx.n_dies, seq_par=spec["seq_par"])
     cur = start
     for _ in subs:  # one DP pass per residual-free sub-graph
-        cur = dp_refine(wafer, cfg, batch, seq, cur, engine, fsdp, cache,
-                        counter)
-    best = ga_refine(wafer, cfg, batch, seq, [cur, start], engine, fsdp,
-                     cache, counter, rng=random.Random(seed))
-    res = _evaluate(wafer, cfg, batch, seq, best, engine, fsdp, cache,
-                    counter, final=True)
-    return SolveResult(res, best, engine, time.time() - t0, counter[0],
+        cur = dp_refine(ctx, cur)
+    best = ga_refine(ctx, [cur, start], rng=random.Random(seed))
+    res = ctx.evaluate(best, final=True)
+    return SolveResult(res, best, engine, time.time() - t0, ctx.evaluated,
                        "dlws")
 
 
@@ -213,7 +219,9 @@ def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                per_op: bool = True) -> SolveResult:
     """Exhaustive joint search (the ILP stand-in): enumerates the full
     configuration space — per-operator-class assignments when ``per_op`` —
-    which blows up combinatorially exactly as §III challenge 3 describes."""
+    which blows up combinatorially exactly as §III challenge 3 describes.
+    Every assignment is re-simulated (no memoization — that's the point),
+    though in batched chunks so both searches run on the same engine."""
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
     t0 = time.time()
@@ -223,21 +231,35 @@ def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
     best: Optional[SimResult] = None
     best_deg = None
     evaluated = 0
-    space = len(cands) ** len(subs)
+    space_size = len(cands) ** len(subs)
     cap = 50_000
+    chunk_n = 1024
+    ctx = StepCostContext(wafer, cfg, batch, seq, engine, fsdp=spec["fsdp"])
     # joint assignment over operator classes (cost decomposes, but the ILP
     # enumerates the product space regardless — that's the point)
+    chunk: list[ParallelDegrees] = []
+
+    def flush(chunk):
+        nonlocal best, best_deg
+        for res in simulate_batch(ctx, chunk, run_tcme_optimizer=False,
+                                  prune_oom=True):
+            if res.ok and (best is None
+                           or res.throughput > best.throughput):
+                best, best_deg = res, res.degrees
+
     for assign in itertools.product(cands, repeat=len(subs)):
         evaluated += 1
         # evaluate with the dominant (layer) assignment; others add resharding
-        deg = assign[min(1, len(assign) - 1)]
-        res = simulate_step(wafer, cfg, batch, seq, deg, engine,
-                            fsdp=spec["fsdp"], run_tcme_optimizer=False)
-        if res.ok and (best is None or res.throughput > best.throughput):
-            best, best_deg = res, deg
+        chunk.append(assign[min(1, len(assign) - 1)])
+        if len(chunk) >= chunk_n:
+            flush(chunk)
+            chunk = []
         if evaluated >= cap:  # safety valve; report projected full time
             break
+    if chunk:
+        flush(chunk)
     dt = time.time() - t0
     return SolveResult(best, best_deg, engine, dt, evaluated, "ilp",
-                       space_size=space,
-                       projected_full_time_s=dt * space / max(evaluated, 1))
+                       space_size=space_size,
+                       projected_full_time_s=dt * space_size
+                       / max(evaluated, 1))

@@ -52,6 +52,25 @@ class Wafer:
     spec: WaferSpec = field(default_factory=WaferSpec)
     failed_dies: frozenset[int] = frozenset()
     failed_links: frozenset[Link] = frozenset()
+    # Topology is immutable after construction (faults produce a new Wafer
+    # via with_faults), so routing queries are memoized per instance.  The
+    # caches are shared by the batched cost engine, TCME, and the solver;
+    # ``uncached()`` yields a twin that recomputes everything (the seed
+    # scalar behaviour, used for benchmark baselines).
+    cache_enabled: bool = field(default=True, compare=False)
+    _path_cache: dict = field(default_factory=dict, repr=False, compare=False)
+    _nbr_cache: dict = field(default_factory=dict, repr=False, compare=False)
+    _ring_hops_cache: dict = field(default_factory=dict, repr=False,
+                                   compare=False)
+    _tmpl_cache: dict = field(default_factory=dict, repr=False, compare=False)
+    _link_ids: dict = field(default_factory=dict, repr=False, compare=False)
+    _groups_cache: dict = field(default_factory=dict, repr=False,
+                                compare=False)
+
+    def uncached(self) -> "Wafer":
+        """A copy with memoization disabled (fresh, empty caches)."""
+        return Wafer(self.spec, self.failed_dies, self.failed_links,
+                     cache_enabled=False)
 
     # -- coordinates -------------------------------------------------------
     def rc(self, die: int) -> tuple[int, int]:
@@ -71,6 +90,10 @@ class Wafer:
                 and self.alive(a) and self.alive(b))
 
     def neighbors(self, die: int) -> list[int]:
+        if self.cache_enabled:
+            cached = self._nbr_cache.get(die)
+            if cached is not None:
+                return cached
         r, c = self.rc(die)
         out = []
         for dr, dc in ((0, 1), (0, -1), (1, 0), (-1, 0)):
@@ -79,15 +102,27 @@ class Wafer:
                 n = self.die(nr, nc)
                 if self.link_ok(die, n):
                     out.append(n)
+        if self.cache_enabled:
+            self._nbr_cache[die] = out
         return out
 
     # -- routing -------------------------------------------------------------
     def xy_path(self, a: int, b: int) -> Optional[list[Link]]:
         """Dimension-ordered route: X (cols) first, then Y (rows)."""
-        return self._dim_path(a, b, x_first=True)
+        if not self.cache_enabled:
+            return self._dim_path(a, b, x_first=True)
+        key = ("xy", a, b)
+        if key not in self._path_cache:
+            self._path_cache[key] = self._dim_path(a, b, x_first=True)
+        return self._path_cache[key]
 
     def yx_path(self, a: int, b: int) -> Optional[list[Link]]:
-        return self._dim_path(a, b, x_first=False)
+        if not self.cache_enabled:
+            return self._dim_path(a, b, x_first=False)
+        key = ("yx", a, b)
+        if key not in self._path_cache:
+            self._path_cache[key] = self._dim_path(a, b, x_first=False)
+        return self._path_cache[key]
 
     def _dim_path(self, a: int, b: int, x_first: bool) -> Optional[list[Link]]:
         ra, ca = self.rc(a)
@@ -122,6 +157,14 @@ class Wafer:
 
     def detour_path(self, a: int, b: int) -> Optional[list[Link]]:
         """BFS shortest path avoiding failed hardware (fault rerouting)."""
+        if self.cache_enabled:
+            key = ("bfs", a, b)
+            if key not in self._path_cache:
+                self._path_cache[key] = self._detour_path(a, b)
+            return self._path_cache[key]
+        return self._detour_path(a, b)
+
+    def _detour_path(self, a: int, b: int) -> Optional[list[Link]]:
         from collections import deque
         if a == b:
             return []

@@ -11,6 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Literal, Optional
 
+import numpy as np
+
 from repro.wafer.topology import Link, Wafer
 
 Kind = Literal["p2p_ring", "p2p_chain", "allreduce", "allgather",
@@ -49,20 +51,7 @@ class CommOp:
 
     def pair_bytes(self) -> float:
         """Bytes crossing each ring hop for this op."""
-        g = len(self.group)
-        if g < 2:
-            return 0.0
-        if self.kind == "p2p":
-            return self.nbytes
-        if self.kind in ("p2p_ring", "p2p_chain"):  # TATP/relay streams
-            return self.nbytes
-        if self.kind == "allreduce":  # ring AR: 2(g-1)/g of the buffer
-            return 2.0 * self.nbytes * (g - 1) / g
-        if self.kind in ("allgather", "reducescatter"):
-            return self.nbytes * (g - 1) / g
-        if self.kind == "alltoall":
-            return self.nbytes * (g - 1) / g
-        raise ValueError(self.kind)
+        return pair_hop_bytes(self.kind, len(self.group), self.nbytes)
 
 
 def path_for(wafer: Wafer, a: int, b: int, policy: str,
@@ -77,6 +66,143 @@ def path_for(wafer: Wafer, a: int, b: int, policy: str,
     return wafer.detour_path(a, b)
 
 
+def _default_routed(op: CommOp) -> bool:
+    """True when every pair of ``op`` takes the default XY route (the state
+    of every op outside a TCME optimizer pass) — the precondition for the
+    per-group link template cache."""
+    if op.custom_paths:
+        return False
+    if not op.routing:  # search-path ops: routing never populated
+        return True
+    return all(pol == "xy" for pol in op.routing.values())
+
+
+@dataclass(frozen=True)
+class _LinkTemplate:
+    links: tuple[Link, ...]  # traversal order (pair by pair)
+    max_len: int  # longest single-pair path (hop-latency term)
+    ids: np.ndarray  # links as wafer link-registry ids (for bincount)
+
+
+def link_template(kind: str, group: tuple[int, ...],
+                  wafer: Wafer) -> _LinkTemplate:
+    """Link template of a default-XY-routed op, cached per (pair structure,
+    group) on the wafer.
+
+    The link sequence preserves the exact pair-by-pair traversal order of
+    the uncached loop, so accumulating loads over it — one element at a
+    time, or via ``np.bincount`` (also sequential) — is bitwise identical
+    to recomputing every path.
+    """
+    struct = kind if kind in ("p2p", "p2p_chain") else "ring"
+    key = (struct, group)
+    cached = wafer._tmpl_cache.get(key)
+    if cached is not None:
+        return cached
+    probe = CommOp(struct if struct != "ring" else "p2p_ring", group, 0.0)
+    links: list[Link] = []
+    max_len = 0
+    for a, b in probe.pairs():
+        path = wafer.xy_path(a, b)
+        if path is None:
+            path = wafer.detour_path(a, b)
+        if path is None:
+            continue  # unroutable (disconnected fault) — handled upstream
+        links.extend(path)
+        max_len = max(max_len, len(path))
+    ids_map = wafer._link_ids
+    for link in links:
+        if link not in ids_map:
+            ids_map[link] = len(ids_map)
+    tmpl = _LinkTemplate(tuple(links), max_len,
+                         np.array([ids_map[li] for li in links], np.int64))
+    wafer._tmpl_cache[key] = tmpl
+    return tmpl
+
+
+def _op_link_template(op: CommOp, wafer: Wafer) -> _LinkTemplate:
+    return link_template(op.kind, op.group, wafer)
+
+
+def pair_hop_bytes(kind: str, glen: int, nbytes: float) -> float:
+    """Bytes crossing each ring hop for one op (the single source of the
+    per-kind formulas; :meth:`CommOp.pair_bytes` delegates here)."""
+    if glen < 2:
+        return 0.0
+    if kind == "p2p":
+        return nbytes
+    if kind in ("p2p_ring", "p2p_chain"):  # TATP/relay streams
+        return nbytes
+    if kind == "allreduce":  # ring AR: 2(g-1)/g of the buffer
+        return 2.0 * nbytes * (glen - 1) / glen
+    if kind in ("allgather", "reducescatter"):
+        return nbytes * (glen - 1) / glen
+    if kind == "alltoall":
+        return nbytes * (glen - 1) / glen
+    raise ValueError(kind)
+
+
+def max_load_entries(entries: list[tuple[np.ndarray, float]]
+                     ) -> tuple[float, bool]:
+    """Bottleneck load over (link-id template, per-hop weight) entries.
+
+    ``np.bincount`` adds weights sequentially in input order — the same
+    op-by-op, hop-by-hop order as the :func:`link_loads` dict loop — so the
+    maximum is bitwise identical to ``max(link_loads(...).values())``.
+    """
+    ids_list, w_list, lens = [], [], []
+    for ids, w in entries:
+        m = len(ids)
+        if m:
+            ids_list.append(ids)
+            w_list.append(w)
+            lens.append(m)
+    if not ids_list:
+        return 0.0, False
+    idx = np.concatenate(ids_list) if len(ids_list) > 1 else ids_list[0]
+    w = np.repeat(np.asarray(w_list), np.asarray(lens))
+    loads = np.bincount(idx, weights=w)
+    return float(loads.max()), True
+
+
+def max_link_load(ops: list[CommOp], wafer: Wafer,
+                  weighted: bool = False) -> tuple[float, bool]:
+    """(bottleneck link load, any link touched) for a phase.
+
+    Fast path: when every op is default-XY-routed, loads accumulate with
+    ``np.bincount`` over the cached link-id templates — the C loop adds
+    weights in input order, i.e. the exact op-by-op, pair-by-pair,
+    hop-by-hop order of :func:`link_loads`, so the bottleneck value is
+    bitwise identical to ``max(link_loads(...).values())``.
+    """
+    spec = wafer.spec
+    if wafer.cache_enabled and all(map(_default_routed, ops)):
+        idx_parts: list[np.ndarray] = []
+        w_parts: list[np.ndarray] = []
+        for op in ops:
+            tmpl = _op_link_template(op, wafer)
+            m = len(tmpl.ids)
+            if not m:
+                continue
+            per_hop = op.pair_bytes()
+            if weighted:
+                per_hop = per_hop / max(spec.bw_eff(op.chunk()), 1e-3)
+            share = 0.5 if op.multicast else 1.0
+            idx_parts.append(tmpl.ids)
+            w_parts.append(np.full(m, per_hop * share))
+        if not idx_parts:
+            return 0.0, False
+        idx = np.concatenate(idx_parts) if len(idx_parts) > 1 \
+            else idx_parts[0]
+        w = np.concatenate(w_parts) if len(w_parts) > 1 else w_parts[0]
+        loads = np.bincount(idx, weights=w)
+        return float(loads.max()), True
+    loads = link_loads(ops, wafer, weighted=weighted)
+    if not loads:
+        return 0.0, False
+    return max(loads.values()), True
+
+
 def link_loads(ops: list[CommOp], wafer: Wafer,
                weighted: bool = False) -> dict[Link, float]:
     """Bytes per directed link across all ops in a phase.  ``weighted``
@@ -89,6 +215,11 @@ def link_loads(ops: list[CommOp], wafer: Wafer,
         if weighted:
             per_hop = per_hop / max(spec.bw_eff(op.chunk()), 1e-3)
         share = 0.5 if op.multicast else 1.0
+        if wafer.cache_enabled and _default_routed(op):
+            x = per_hop * share
+            for link in _op_link_template(op, wafer).links:
+                loads[link] = loads.get(link, 0.0) + x
+            continue
         for idx, (a, b) in enumerate(op.pairs()):
             pol = op.routing.get(idx, "xy")
             path = path_for(wafer, a, b, pol, op, idx)
@@ -107,14 +238,17 @@ def phase_time(ops: list[CommOp], wafer: Wafer) -> float:
     plus serial hop latency."""
     if not ops:
         return 0.0
-    loads = link_loads(ops, wafer, weighted=True)
-    if not loads:
+    mx, touched = max_link_load(ops, wafer, weighted=True)
+    if not touched:
         return 0.0
     spec = wafer.spec
-    t_bw = max(loads.values()) / spec.link_bw
+    t_bw = mx / spec.link_bw
     # serial hop latency along the longest path of any op
     max_hops = 0
     for op in ops:
+        if wafer.cache_enabled and _default_routed(op):
+            max_hops = max(max_hops, _op_link_template(op, wafer).max_len)
+            continue
         for idx, (a, b) in enumerate(op.pairs()):
             pol = op.routing.get(idx, "xy")
             path = path_for(wafer, a, b, pol, op, idx) \
@@ -128,6 +262,17 @@ def max_ring_hops(group: tuple[int, ...], wafer: Wafer,
     """Worst *routable* hop distance between ring-adjacent dies (tail
     latency, paper Fig. 5a).  Uses BFS on the (possibly degraded) wafer so
     failed links show up as longer detours."""
+    if wafer.cache_enabled:
+        key = (group, wrap)
+        cached = wafer._ring_hops_cache.get(key)
+        if cached is None:
+            cached = _max_ring_hops(group, wafer, wrap)
+            wafer._ring_hops_cache[key] = cached
+        return cached
+    return _max_ring_hops(group, wafer, wrap)
+
+
+def _max_ring_hops(group: tuple[int, ...], wafer: Wafer, wrap: bool) -> int:
     if len(group) < 2:
         return 0
     pairs = [(group[i], group[(i + 1) % len(group)])
