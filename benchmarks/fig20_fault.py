@@ -13,11 +13,13 @@ from repro.wafer.topology import Wafer, WaferSpec
 def run() -> dict:
     wafer = Wafer(WaferSpec())
     cfg, shape = TABLE_II["gpt3-6.7b"]
+    ctx_cache: dict = {}  # shared across kinds: rate-0 and identical
+    # degradations reuse one StepCostContext (keyed on alive subset+links)
     out = {
         "core": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
-                                         kind="core"),
+                                         kind="core", ctx_cache=ctx_cache),
         "link": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
-                                         kind="link"),
+                                         kind="link", ctx_cache=ctx_cache),
     }
     save_rows("fig20_fault", out)
     return out

@@ -2,6 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo contract; detailed
 records land in results/bench/*.json.
+
+``--check`` is the one-command smoke gate: tier-1 pytest plus the
+``search/engine_baseline`` drift check, so plan-pipeline regressions and
+cost-engine drift are caught together (exit 1 on either).
 """
 
 from __future__ import annotations
@@ -24,8 +28,52 @@ BENCHES = [
 ]
 
 
+def check() -> None:
+    """Smoke gate: tier-1 pytest + cost-engine drift, one command."""
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    print("== tier-1 pytest ==", flush=True)
+    r = subprocess.run([sys.executable, "-m", "pytest", "-q"], env=env,
+                       cwd=root)
+    failed = r.returncode != 0
+
+    print("== search/engine_baseline drift ==", flush=True)
+    try:
+        # script invocation (`python benchmarks/run.py`) puts benchmarks/
+        # itself on sys.path; the package import needs the repo root
+        for p in (root, src):
+            if p not in sys.path:
+                sys.path.insert(0, p)
+        from benchmarks.search_time import run as search_run
+        _, summary, baseline = search_run()
+        base = baseline or summary
+        drift = summary["avg_engine_speedup"] \
+            / max(base["avg_engine_speedup"], 1e-9)
+        ok = summary["all_identical_to_scalar"] and drift >= 0.5
+        print(f"engine_speedup this_run="
+              f"{summary['avg_engine_speedup']:.1f}x "
+              f"baseline={base['avg_engine_speedup']:.1f}x "
+              f"ratio={drift:.2f} "
+              f"identical={summary['all_identical_to_scalar']} "
+              f"-> {'OK' if ok else 'DRIFT'}")
+        failed |= not ok
+    except Exception:
+        traceback.print_exc()
+        failed = True
+    sys.exit(1 if failed else 0)
+
+
 def main() -> None:
     import importlib
+    if "--check" in sys.argv[1:]:
+        check()
+        return
     print("name,us_per_call,derived")
     failures = 0
     for name in BENCHES:

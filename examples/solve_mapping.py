@@ -3,7 +3,9 @@
 1. TSPP/TATP schedules on a die line/ring (Alg. 1 + invariants),
 2. TCME contention optimization on a contended phase (Fig. 11),
 3. DLWS search vs ILP (Fig. 12 / §VIII-H),
-4. fault injection + recovery (Fig. 20).
+4. fault injection + recovery (Fig. 20),
+5. compile the solved mapping into a WaferPlan and launch a reduced
+   training run from it (the solve → plan → execute pipeline).
 
 Run:  PYTHONPATH=src python examples/solve_mapping.py
 """
@@ -67,6 +69,30 @@ def main():
     print(f" {len(rep.failed_dies)} dead dies ({rep.classify()}): "
           f"recovered at {res.throughput/1e6:.2f} Mtok/s on "
           f"{res.degrees.total} dies, config {res.degrees.as_tuple()}")
+
+    print("\n== 5. compile a WaferPlan and launch a reduced run from it ==")
+    from argparse import Namespace
+
+    from repro.core.plan import PLAN_STATS, compile_plan
+    from repro.launch.train import train
+
+    plan = compile_plan(wafer, cfg, shape.global_batch, shape.seq_len)
+    print(plan.summary())
+    again = compile_plan(wafer, cfg, shape.global_batch, shape.seq_len)
+    assert again == plan
+    print(f" second compile: cache hit (hits={PLAN_STATS['cache_hits']}, "
+          f"solver calls={PLAN_STATS['solver_calls']})")
+    # the same pipeline drives the real training CLI: --auto-plan solves
+    # (or loads) the plan, builds the mesh from its degrees + snake device
+    # order, and trains — here a tiny reduced run on CPU
+    summary = train(Namespace(
+        arch="deepseek-7b", reduced=True, auto_plan=True, plan=None,
+        plan_cache=None, failed_dies=None, batch=4, seq=64, steps=3,
+        mesh=[1, 1], strategy="tatp", ckpt_dir=None, ckpt_every=10,
+        keep=3, seed=0, log_every=1, fail_at_step=None))
+    print(f" plan-launched training: {summary['steps']} steps, "
+          f"loss {summary['first_loss']:.3f} -> {summary['last_loss']:.3f} "
+          f"(plan {summary['plan_hash']})")
 
 
 if __name__ == "__main__":

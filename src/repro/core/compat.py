@@ -1,0 +1,58 @@
+"""Version-portable wrappers over the moving parts of the jax API.
+
+The runnable system targets current jax (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); older runtimes (≤0.4.x) only ship
+``jax.experimental.shard_map.shard_map`` with ``check_rep`` and a
+``make_mesh`` without ``axis_types``.  Everything in-repo goes through
+these wrappers so one tree runs on both.
+
+Importing this module also installs ``jax.shard_map`` when the runtime
+lacks it, so call sites (and the multidevice check scripts) can keep the
+modern spelling.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax ≥ 0.5
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions (``check_vma``/``check_rep``)."""
+    if f is None:  # allow use as a decorator-with-arguments
+        return lambda g: shard_map(g, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_vma=check_vma)
+    native = getattr(jax, "shard_map", None)
+    if native is not None and native is not _compat_shard_map:
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def _compat_shard_map(f, *, mesh, in_specs, out_specs,
+                      check_vma: bool = False, **kw):
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, **kw)
+
+
+if not hasattr(jax, "shard_map"):  # pragma: no cover - version-dependent
+    jax.shard_map = _compat_shard_map
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str], devices=None):
+    """``jax.make_mesh`` with ``axis_types`` only where supported."""
+    if AxisType is not None:
+        return jax.make_mesh(tuple(shape), tuple(names),
+                             axis_types=(AxisType.Auto,) * len(names),
+                             devices=devices)
+    return jax.make_mesh(tuple(shape), tuple(names), devices=devices)

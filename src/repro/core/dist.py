@@ -22,8 +22,10 @@ from typing import Optional, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AbstractMesh, AxisType, Mesh, NamedSharding
+from jax.sharding import AbstractMesh, Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.core import compat
 
 
 BATCH_AXES = ("pod", "data")  # axes that shard the batch dimension
@@ -32,11 +34,7 @@ MODEL_AXIS = "model"  # the TATP ring axis
 
 def make_mesh(shape: Sequence[int], names: Sequence[str],
               devices=None) -> Mesh:
-    return jax.make_mesh(
-        tuple(shape), tuple(names),
-        axis_types=(AxisType.Auto,) * len(names),
-        devices=devices,
-    )
+    return compat.make_mesh(shape, names, devices=devices)
 
 
 @dataclass(frozen=True)

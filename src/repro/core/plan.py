@@ -1,0 +1,346 @@
+"""WaferPlan IR — the compiled artifact between the solver and the runtime.
+
+The paper's pipeline is solve-then-run: DLWS picks the parallel degrees,
+TCME embeds the rings, and the TATP runtime executes them.  ``WaferPlan``
+is the serializable contract between those halves: everything a launch
+needs to reproduce the solved mapping —
+
+* the parallel degrees per axis (dp/tp/sp/tatp + the Megatron-3 flag),
+* the mapping engine and the snake **device order** it implies
+  (``device_order_for_jax`` consumes it to permute ``jax.make_mesh``),
+* the stream policy (weights/inputs/auto), orchestration direction and
+  wire codec of the TATP streams,
+* the schedule family and remat policy for the executable step,
+* the solver's predicted memory/throughput (so a launch can sanity-check
+  the wafer it lands on against what was solved for).
+
+``compile_plan`` runs the full pipeline — ``dlws_solve`` →
+``hierarchical_map`` (the TCME embedding) → plan — and caches the result
+on disk keyed on ``(arch, shape, wafer, alive-die subset)``: repeated
+launches skip the search, and a degraded wafer (different alive dies)
+misses the cache and re-solves automatically.  ``PLAN_STATS`` counts
+solver calls vs cache hits so tests and launch logs can verify which path
+ran.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+PLAN_VERSION = 1
+
+# observable pipeline counters (reset via reset_plan_stats; the launch
+# drivers print them so "second run hit the cache" is checkable from logs)
+PLAN_STATS = {"solver_calls": 0, "cache_hits": 0, "cache_misses": 0}
+
+
+def reset_plan_stats() -> None:
+    for k in PLAN_STATS:
+        PLAN_STATS[k] = 0
+
+
+@dataclass(frozen=True)
+class WaferPlan:
+    """Executable launch plan compiled from one DLWS solution."""
+
+    # workload identity
+    arch: str
+    batch: int
+    seq: int
+    # wafer identity (enough to rebuild the Wafer and check degradation)
+    wafer_rows: int
+    wafer_cols: int
+    failed_dies: tuple[int, ...]
+    failed_links: tuple[tuple[int, int], ...]
+    alive_dies: tuple[int, ...]
+    # solved configuration
+    dp: int
+    tp: int
+    sp: int
+    tatp: int
+    seq_par: bool
+    engine: str  # smap | gmap | tcme
+    space: str  # strategy space the solve ran in (STRATEGY_SPACES key)
+    device_order: tuple[int, ...]  # snake/row-major order over alive dies
+    # stream policy + executable knobs
+    stream: str = "auto"  # TATP selective transfer: weights | inputs | auto
+    bidirectional: bool = True
+    stream_dtype: str = "native"  # wire codec of the TATP streams
+    schedule: str = "bidir_ring"  # bidir_ring | tspp_line
+    remat: bool = True
+    # solver outputs (advisory: what the plan was predicted to achieve)
+    predicted: dict = field(default_factory=dict)
+    solver: dict = field(default_factory=dict)
+    version: int = PLAN_VERSION
+
+    # ------------------------------------------------------------------
+    # identity
+    # ------------------------------------------------------------------
+    @property
+    def total_degree(self) -> int:
+        return self.dp * self.tp * self.sp * self.tatp
+
+    def degrees_tuple(self) -> tuple[int, int, int, int]:
+        return (self.dp, self.tp, self.sp, self.tatp)
+
+    @property
+    def plan_hash(self) -> str:
+        """Content hash of the executable surface (solver telemetry and
+        predictions excluded): two plans with the same hash launch the
+        same system."""
+        d = self.to_dict()
+        d.pop("predicted", None)
+        d.pop("solver", None)
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # ------------------------------------------------------------------
+    # serialization
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["failed_links"] = [list(l) for l in self.failed_links]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WaferPlan":
+        d = dict(d)
+        if d.get("version", PLAN_VERSION) > PLAN_VERSION:
+            raise ValueError(f"plan version {d['version']} is newer than "
+                             f"this runtime ({PLAN_VERSION})")
+        d["failed_dies"] = tuple(d.get("failed_dies", ()))
+        d["failed_links"] = tuple(tuple(l) for l in d.get("failed_links", ()))
+        d["alive_dies"] = tuple(d.get("alive_dies", ()))
+        d["device_order"] = tuple(d.get("device_order", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True)
+
+    @classmethod
+    def loads(cls, s: str) -> "WaferPlan":
+        return cls.from_dict(json.loads(s))
+
+    def dump(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.dumps())
+        os.replace(tmp, path)  # atomic publish (mirrors checkpoint.save)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "WaferPlan":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    # ------------------------------------------------------------------
+    # executable views
+    # ------------------------------------------------------------------
+    def wafer(self):
+        """Rebuild the Wafer this plan was solved for."""
+        from repro.wafer.topology import Wafer, WaferSpec
+        return Wafer(WaferSpec(rows=self.wafer_rows, cols=self.wafer_cols),
+                     frozenset(self.failed_dies),
+                     frozenset(tuple(l) for l in self.failed_links))
+
+    def parallel_degrees(self):
+        from repro.wafer.simulator import ParallelDegrees
+        return ParallelDegrees(self.dp, self.tp, self.sp, self.tatp,
+                               seq_par=self.seq_par)
+
+    def parallel_config(self):
+        """The runnable-side ParallelConfig this plan prescribes."""
+        from repro.configs.base import ParallelConfig
+        if self.space == "fsdp":
+            strategy = "fsdp"
+        elif self.tatp > 1 or self.tp <= 1:
+            strategy = "tatp"
+        else:
+            strategy = "megatron"
+        return ParallelConfig(
+            dp=self.dp, tp=self.tp, sp=self.sp, tatp=self.tatp,
+            strategy=strategy, stream=self.stream,
+            bidirectional=self.bidirectional, stream_dtype=self.stream_dtype,
+            remat=self.remat)
+
+    def mesh_shape_for(self, n_devices: int) -> tuple[int, int]:
+        """(data, model) mesh shape on ``n_devices`` actual devices.
+
+        The runnable system maps the TATP ring onto the ``model`` axis and
+        everything batch-like onto ``data``.  When the launch has fewer
+        devices than the plan's wafer (elastic restart, CPU smoke runs),
+        the ring degree shrinks to the largest divisor of the device count
+        that still divides the planned degree — same rings, fewer of them.
+        """
+        model = max(1, self.tatp)
+        if n_devices % model:
+            model = math.gcd(n_devices, model) or 1
+        model = min(model, n_devices)
+        return (n_devices // model, model)
+
+    def summary(self) -> str:
+        pred = self.predicted or {}
+        thr = pred.get("throughput")
+        mem = pred.get("mem_per_die")
+        parts = [
+            f"WaferPlan[{self.plan_hash}] {self.arch} "
+            f"batch={self.batch} seq={self.seq}",
+            f"  wafer {self.wafer_rows}x{self.wafer_cols} "
+            f"alive={len(self.alive_dies)}/"
+            f"{self.wafer_rows * self.wafer_cols}",
+            f"  degrees (dp,tp,sp,tatp)={self.degrees_tuple()} "
+            f"seq_par={self.seq_par} engine={self.engine} "
+            f"space={self.space}",
+            f"  stream={self.stream} codec={self.stream_dtype} "
+            f"schedule={self.schedule} remat={self.remat}",
+        ]
+        if thr is not None:
+            parts.append(
+                f"  predicted {thr / 1e6:.2f} Mtok/s, "
+                f"{(mem or 0) / 1e9:.1f} GB/die "
+                f"({self.solver.get('method', '?')}, "
+                f"{self.solver.get('evaluated', 0)} sims in "
+                f"{self.solver.get('search_time_s', 0):.2f}s)")
+        return "\n".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# cache key + compile pipeline
+# ---------------------------------------------------------------------------
+
+
+def plan_cache_key(arch: str, batch: int, seq: int, wafer,
+                   dies: Optional[Sequence[int]] = None, *,
+                   engine: str = "tcme", space: str = "temp",
+                   knobs: tuple = ()) -> str:
+    """Cache identity: (arch, shape, wafer incl. faults, alive-die subset,
+    executable knobs).
+
+    Any die death or link failure changes the key, so a degraded wafer can
+    never replay a stale plan — the miss forces a re-solve.  ``knobs`` is
+    the tuple of launch-side settings compile_plan bakes into the plan
+    (stream/bidirectional/codec/remat): two launches requesting different
+    knobs must not alias one cache entry.
+    """
+    alive = list(dies) if dies is not None else wafer.alive_dies()
+    ident = {
+        "v": PLAN_VERSION,
+        "arch": arch,
+        "batch": batch,
+        "seq": seq,
+        "rows": wafer.spec.rows,
+        "cols": wafer.spec.cols,
+        "failed_dies": sorted(wafer.failed_dies),
+        "failed_links": sorted(list(l) for l in wafer.failed_links),
+        "dies": sorted(alive),
+        "engine": engine,
+        "space": space,
+        "knobs": list(knobs),
+    }
+    blob = json.dumps(ident, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+def default_cache_dir() -> str:
+    return os.environ.get("REPRO_PLAN_CACHE",
+                          os.path.join("results", "plans"))
+
+
+def compile_plan(wafer, cfg, batch: int, seq: int, *,
+                 arch: Optional[str] = None, engine: str = "tcme",
+                 space: str = "temp", dies: Optional[Sequence[int]] = None,
+                 stream: str = "auto", bidirectional: bool = True,
+                 stream_dtype: str = "native", remat: bool = True,
+                 seed: int = 0, cache_dir: Optional[str] = None,
+                 use_cache: bool = True) -> WaferPlan:
+    """solve → map → plan, with an on-disk cache around the whole pipeline.
+
+    ``cache_dir=None`` with ``use_cache=True`` uses :func:`default_cache_dir`;
+    pass ``use_cache=False`` to force a fresh solve (the plan is still
+    written back so the next launch hits).
+    """
+    from repro.wafer import mapping as wmap
+    from repro.wafer.solver import dlws_solve
+
+    arch = arch or cfg.name
+    cache_dir = cache_dir if cache_dir is not None else default_cache_dir()
+    key = plan_cache_key(arch, batch, seq, wafer, dies,
+                         engine=engine, space=space,
+                         knobs=(stream, bidirectional, stream_dtype, remat))
+    path = os.path.join(cache_dir, f"plan_{key}.json")
+    if use_cache and os.path.exists(path):
+        try:
+            plan = WaferPlan.load(path)
+        except (ValueError, json.JSONDecodeError, OSError):
+            plan = None  # corrupt/foreign cache entry: fall through to solve
+        if plan is not None:
+            PLAN_STATS["cache_hits"] += 1
+            return plan
+    PLAN_STATS["cache_misses"] += 1
+
+    # --- solve (DLWS over the batched cost engine) ------------------------
+    PLAN_STATS["solver_calls"] += 1
+    sol = dlws_solve(wafer, cfg, batch, seq, engine=engine, space=space,
+                     seed=seed, dies=dies)
+    deg = sol.config
+
+    # --- map (TCME/snake embedding of the solved degrees) -----------------
+    alive = list(dies) if dies is not None else wafer.alive_dies()
+    degrees_map = {a: v for a, v in
+                   (("dp", deg.dp), ("tp", deg.tp), ("sp", deg.sp),
+                    ("tatp", deg.tatp)) if v > 1} or {"dp": 1}
+    wmap.hierarchical_map(wafer, degrees_map, engine)  # validates the embed
+    base = (wmap.snake_order(wafer.spec.rows, wafer.spec.cols)
+            if engine in ("tcme", "snake")
+            else wmap.rowmajor_order(wafer.spec.rows, wafer.spec.cols))
+    live = set(alive)
+    device_order = tuple(d for d in base if d in live)
+
+    best = sol.best
+    plan = WaferPlan(
+        arch=arch, batch=batch, seq=seq,
+        wafer_rows=wafer.spec.rows, wafer_cols=wafer.spec.cols,
+        failed_dies=tuple(sorted(wafer.failed_dies)),
+        failed_links=tuple(sorted(tuple(l) for l in wafer.failed_links)),
+        alive_dies=tuple(sorted(alive)),
+        dp=deg.dp, tp=deg.tp, sp=deg.sp, tatp=deg.tatp,
+        seq_par=deg.seq_par, engine=engine, space=space,
+        device_order=device_order,
+        stream=stream, bidirectional=bidirectional,
+        stream_dtype=stream_dtype,
+        schedule="bidir_ring" if bidirectional else "tspp_line",
+        remat=remat,
+        predicted={
+            "throughput": best.throughput,
+            "step_time": best.step_time,
+            "mem_per_die": best.mem_per_die,
+            "power": best.power,
+            "oom": best.oom,
+        },
+        solver={
+            "method": sol.method,
+            "search_time_s": sol.search_time_s,
+            "evaluated": sol.evaluated,
+        },
+    )
+    # written back even when use_cache=False (a forced fresh solve must
+    # replace any stale entry so the next launch hits the new plan)
+    plan.dump(path)
+    return plan
+
+
+def load_or_compile(plan_path: Optional[str], wafer, cfg, batch: int,
+                    seq: int, **kw) -> WaferPlan:
+    """Launchers' entry: explicit ``--plan`` file wins; otherwise compile
+    (or hit the cache) for the wafer at hand."""
+    if plan_path:
+        return WaferPlan.load(plan_path)
+    return compile_plan(wafer, cfg, batch, seq, **kw)

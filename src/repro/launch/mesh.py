@@ -10,8 +10,9 @@ from typing import Optional, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
+from repro.core import compat
 from repro.core.dist import Dist
 
 
@@ -19,9 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False,
                          devices: Optional[Sequence] = None) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def make_wafer_ordered_mesh(order: np.ndarray, *,
@@ -34,6 +33,39 @@ def make_wafer_ordered_mesh(order: np.ndarray, *,
     """
     devs = np.asarray(jax.devices())[np.asarray(order)]
     return make_production_mesh(multi_pod=multi_pod, devices=devs)
+
+
+def plan_device_permutation(plan, n_devices: int) -> list[int]:
+    """Device permutation a plan prescribes for ``n_devices``.
+
+    At full scale (one device per alive die) this is the plan's own
+    ``device_order`` — the snake embedding TCME solved, holes skipped —
+    compacted from die ids to device ranks (device k hosts the k-th alive
+    die in id order).  At reduced scale (elastic restart, CPU smoke) the
+    wafer order cannot apply, so the dense ``device_order_for_jax`` snake
+    over the shrunken (data, model) grid is used instead.
+    """
+    from repro.wafer.mapping import device_order_for_jax
+    if n_devices == len(plan.device_order):
+        rank = {die: k for k, die in enumerate(sorted(plan.alive_dies))}
+        return [rank[d] for d in plan.device_order]
+    data, model = plan.mesh_shape_for(n_devices)
+    return device_order_for_jax(data, model).tolist()
+
+
+def make_plan_mesh(plan, devices: Optional[Sequence] = None) -> Mesh:
+    """Build the (data, model) mesh a :class:`~repro.core.plan.WaferPlan`
+    prescribes, with the plan's device order.
+
+    The plan's tatp degree becomes the ``model`` axis (shrunk to divide the
+    actual device count — elastic restarts and CPU smoke runs have fewer
+    devices than the solved wafer); the snake permutation embeds every
+    model-axis ring on physically contiguous devices.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    data, model = plan.mesh_shape_for(len(devs))
+    devs = [devs[i] for i in plan_device_permutation(plan, len(devs))]
+    return compat.make_mesh((data, model), ("data", "model"), devices=devs)
 
 
 def dist_for(mesh) -> Dist:

@@ -1,0 +1,47 @@
+"""Launch-side plan resolution: shared by the train and serve drivers.
+
+One function turns the CLI surface (``--plan`` / ``--auto-plan`` /
+``--failed-dies`` / ``--plan-cache``) into a :class:`WaferPlan`, logging
+whether the solver ran or the on-disk cache answered — the observable
+signal the acceptance tests (and operators) use to confirm that repeated
+launches skip the search.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import plan as planlib
+
+
+def resolve_plan(cfg, batch: int, seq: int, *,
+                 plan_path: Optional[str] = None,
+                 cache_dir: Optional[str] = None,
+                 failed_dies: Optional[str] = None,
+                 remat: bool = True) -> planlib.WaferPlan:
+    """Explicit plan file wins; otherwise compile (or hit the cache) for
+    the wafer at hand.  ``failed_dies`` is the CLI's comma-separated die
+    list for degraded-wafer launches."""
+    from repro.wafer.topology import Wafer, WaferSpec
+
+    if plan_path:
+        if failed_dies:
+            print(f"[plan] WARNING: --failed-dies {failed_dies} is ignored "
+                  f"when an explicit --plan file is given; the plan is "
+                  f"replayed as-is (drop --plan to re-solve degraded)")
+        plan = planlib.WaferPlan.load(plan_path)
+        print(f"[plan] loaded {plan_path} (hash {plan.plan_hash})")
+        return plan
+    wafer = Wafer(WaferSpec())
+    if failed_dies:
+        dead = [int(x) for x in failed_dies.split(",") if x]
+        wafer = wafer.with_faults(dies=dead)
+    before = dict(planlib.PLAN_STATS)
+    plan = planlib.compile_plan(wafer, cfg, batch, seq, arch=cfg.name,
+                                cache_dir=cache_dir, remat=remat)
+    hit = planlib.PLAN_STATS["cache_hits"] > before["cache_hits"]
+    solves = planlib.PLAN_STATS["solver_calls"] - before["solver_calls"]
+    src = "cache hit (solver skipped)" if hit \
+        else f"solved fresh ({solves} solver call)"
+    print(f"[plan] {src}: hash {plan.plan_hash}")
+    return plan

@@ -3,7 +3,11 @@ context-parallel sharded KV / SSM caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
         --reduced --batch 4 --prompt-len 32 --gen 16
-"""
+
+``--auto-plan`` / ``--plan PATH`` launch from a WaferPlan exactly like the
+train driver: the mesh comes from the plan's degrees + snake device order
+and the ParallelConfig from its stream policy (plans are shared with
+training through the same on-disk cache, keyed on arch/shape/wafer)."""
 
 from __future__ import annotations
 
@@ -26,11 +30,21 @@ def serve(args) -> dict:
     from jax.sharding import NamedSharding
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    names = ("data", "model")[: len(args.mesh)]
-    mesh = make_mesh(tuple(args.mesh), names)
-    dist = Dist(mesh)
-    par = ParallelConfig(strategy="tatp", remat=False)
     max_seq = args.prompt_len + args.gen
+    if args.plan or args.auto_plan:
+        from dataclasses import replace
+        from repro.launch.mesh import make_plan_mesh
+        from repro.launch.planning import resolve_plan
+        plan = resolve_plan(cfg, args.batch, max_seq, plan_path=args.plan,
+                            cache_dir=args.plan_cache, remat=False)
+        print(plan.summary())
+        mesh = make_plan_mesh(plan)
+        par = replace(plan.parallel_config(), remat=False)
+    else:
+        names = ("data", "model")[: len(args.mesh)]
+        mesh = make_mesh(tuple(args.mesh), names)
+        par = ParallelConfig(strategy="tatp", remat=False)
+    dist = Dist(mesh)
     shape = ShapeConfig("serve", "decode", max_seq, args.batch)
     sb = make_serve_fns(cfg, par, dist, shape)
 
@@ -64,9 +78,12 @@ def serve(args) -> dict:
     def graft(d, s):
         if d.shape == s.shape:
             return s
+        # host-side merge: device_get hands back numpy arrays
+        d = np.array(d)
         sl = [slice(None)] * d.ndim
         sl[2] = slice(0, s.shape[2])
-        return d.at[tuple(sl)].set(s.astype(d.dtype))
+        d[tuple(sl)] = np.asarray(s).astype(d.dtype)
+        return jnp.asarray(d)
 
     # merge on host to respect shardings of the decode layout
     caches = jax.tree.map(graft, jax.device_get(big),
@@ -98,6 +115,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", type=int, nargs="+", default=[1, 1])
+    ap.add_argument("--plan", default=None,
+                    help="launch from an explicit WaferPlan JSON file")
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="solve (or load the cached) WaferPlan and build "
+                         "the mesh/ParallelConfig from it")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan cache dir (default results/plans)")
     args = ap.parse_args()
     print(json.dumps(serve(args)))
 

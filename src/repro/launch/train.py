@@ -1,14 +1,26 @@
 """End-to-end training driver with checkpoint/restart + elastic recovery.
 
+Plan-driven launch (the solve → plan → execute pipeline)::
+
     PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
-        --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+        --reduced --auto-plan --steps 50 --batch 8 --seq 128
 
-Production behavior (also exercised by tests/test_train_driver.py):
+``--auto-plan`` compiles a :class:`~repro.core.plan.WaferPlan` for the
+wafer (or loads it from the on-disk plan cache — a second launch skips the
+solver entirely), builds the mesh from the plan's degrees + snake device
+order, and threads the plan's ParallelConfig into the step.  ``--plan
+PATH`` replays an explicit plan file.  The legacy ``--mesh``/``--strategy``
+flags remain for hand-driven runs.
 
-* periodic atomic checkpoints (keep-k) via repro.train.checkpoint;
+Production behavior (also exercised by tests/test_train_infra.py):
+
+* periodic atomic checkpoints (keep-k) via repro.train.checkpoint, with
+  the plan hash recorded in the manifest;
 * on restart, resumes from the latest checkpoint — including onto a
   *smaller* mesh (elastic recovery after node loss): the data axis shrinks
-  and the same named shardings re-materialise the state;
+  and the same named shardings re-materialise the state; when the current
+  plan's hash differs from the checkpoint's (e.g. the wafer degraded and
+  the cache re-solved), the driver warns before continuing;
 * simulated-failure hook (``--fail-at-step``) for fault-tolerance tests;
 * straggler mitigation: step-time watchdog records slow steps and (on real
   clusters) re-solves the mapping via the wafer engine.
@@ -25,38 +37,69 @@ import jax
 import numpy as np
 
 
-def build(arch: str, reduced: bool, batch: int, seq: int, mesh_shape,
-          strategy: str, bidirectional: bool = True):
-    from repro.configs import get_config, get_reduced
-    from repro.configs.base import ParallelConfig, ShapeConfig
-    from repro.core.dist import Dist, make_mesh
+def build(cfg, mesh, par, batch: int, seq: int):
+    from repro.configs.base import ShapeConfig
+    from repro.core.dist import Dist
     from repro.train.data import SyntheticDataset
     from repro.train.train_loop import make_train_step
 
-    cfg = get_reduced(arch) if reduced else get_config(arch)
-    names = ("data", "model")[: len(mesh_shape)] if len(mesh_shape) == 2 \
-        else ("pod", "data", "model")
-    mesh = make_mesh(mesh_shape, names)
     dist = Dist(mesh)
-    par = ParallelConfig(strategy=strategy, bidirectional=bidirectional,
-                         remat=not reduced)
     shape = ShapeConfig("cli", "train", seq, batch)
     bundle = make_train_step(cfg, par, dist, shape)
     data = SyntheticDataset(cfg, shape, dist)
-    return cfg, dist, bundle, data
+    return dist, bundle, data
+
+
+def setup(args):
+    """cfg + mesh + ParallelConfig, from a plan or from the legacy flags."""
+    from repro.configs import get_config, get_reduced
+    from repro.configs.base import ParallelConfig
+    from repro.core.dist import make_mesh
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    plan = None
+    if args.plan or args.auto_plan:
+        from repro.launch.mesh import make_plan_mesh
+        from repro.launch.planning import resolve_plan
+        plan = resolve_plan(cfg, args.batch, args.seq, plan_path=args.plan,
+                            cache_dir=args.plan_cache,
+                            failed_dies=args.failed_dies,
+                            remat=not args.reduced)
+        print(plan.summary())
+        mesh = make_plan_mesh(plan)
+        par = plan.parallel_config()
+        if args.reduced and plan.remat:
+            # reduced CPU smoke runs never need remat, whatever the plan says
+            from dataclasses import replace
+            par = replace(par, remat=False)
+    else:
+        names = ("data", "model")[: len(args.mesh)] \
+            if len(args.mesh) == 2 else ("pod", "data", "model")
+        mesh = make_mesh(tuple(args.mesh), names)
+        par = ParallelConfig(strategy=args.strategy,
+                             remat=not args.reduced)
+    return cfg, mesh, par, plan
 
 
 def train(args) -> dict:
     from repro.train import checkpoint as ckpt
 
-    cfg, dist, bundle, data = build(
-        args.arch, args.reduced, args.batch, args.seq,
-        tuple(args.mesh), args.strategy)
+    cfg, mesh, par, plan = setup(args)
+    dist, bundle, data = build(cfg, mesh, par, args.batch, args.seq)
+    ckpt_meta = {"plan_hash": plan.plan_hash,
+                 "plan_degrees": list(plan.degrees_tuple())} if plan else {}
 
     start_step = 0
     params = opt_state = None
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         print(f"resuming from {args.ckpt_dir}")
+        prev = ckpt.read_meta(args.ckpt_dir)
+        if plan and prev.get("plan_hash") \
+                and prev["plan_hash"] != plan.plan_hash:
+            print(f"[plan] WARNING: checkpoint was trained under plan "
+                  f"{prev['plan_hash']} but this launch runs plan "
+                  f"{plan.plan_hash} (wafer degraded or re-solved); "
+                  f"state restores elastically onto the new mesh")
         template = jax.eval_shape(lambda: bundle.init_fn(jax.random.key(0)))
         (params, opt_state), start_step = ckpt.restore(
             args.ckpt_dir, template, dist,
@@ -86,14 +129,16 @@ def train(args) -> dict:
                   flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             ckpt.save(args.ckpt_dir, step + 1, (params, opt_state),
-                      keep=args.keep)
+                      keep=args.keep, meta=ckpt_meta)
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, args.steps, (params, opt_state),
-                  keep=args.keep)
+                  keep=args.keep, meta=ckpt_meta)
     return {"first_loss": losses[0] if losses else None,
             "last_loss": losses[-1] if losses else None,
             "steps": len(losses),
-            "mean_step_s": float(np.mean(times)) if times else None}
+            "mean_step_s": float(np.mean(times)) if times else None,
+            "plan_hash": plan.plan_hash if plan else None,
+            "mesh": list(np.shape(mesh.devices))}
 
 
 def main():
@@ -105,6 +150,16 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mesh", type=int, nargs="+", default=[1, 1])
     ap.add_argument("--strategy", default="tatp")
+    ap.add_argument("--plan", default=None,
+                    help="launch from an explicit WaferPlan JSON file")
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="solve (or load the cached) WaferPlan and build "
+                         "the mesh/ParallelConfig from it")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan cache dir (default results/plans)")
+    ap.add_argument("--failed-dies", default=None,
+                    help="comma-separated die ids to mark dead before "
+                         "planning (degraded-wafer launches)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--keep", type=int, default=3)

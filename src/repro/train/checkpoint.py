@@ -37,8 +37,13 @@ def _leaf_key(path) -> str:
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
-         blocking: bool = True) -> str:
-    """Write a checkpoint; returns its directory."""
+         blocking: bool = True, meta: Optional[dict] = None) -> str:
+    """Write a checkpoint; returns its directory.
+
+    ``meta`` lands verbatim in the manifest (the launchers record the
+    WaferPlan hash here so an elastic restart can detect that the plan it
+    resumes under differs from the one the checkpoint trained under).
+    """
     tag = f"step_{step:08d}"
     final = os.path.join(ckpt_dir, tag)
     if os.path.exists(final):  # idempotent: this step is already published
@@ -50,6 +55,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
     manifest = {
         "step": step,
+        "meta": meta or {},
         "leaves": [
             {"key": _leaf_key(p), "shape": list(l.shape),
              "dtype": str(l.dtype)}
@@ -89,6 +95,19 @@ def _gc(ckpt_dir: str, keep: int):
                    and not d.endswith(".tmp"))
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def read_meta(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Manifest ``meta`` of a checkpoint (latest by default); {} if absent."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return {}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f).get("meta", {})
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

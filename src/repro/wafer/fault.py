@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.wafer.simulator import (ParallelDegrees, SimResult,
@@ -68,9 +69,18 @@ def largest_usable_count(n: int) -> int:
 
 
 def recover(wafer: Wafer, report: FaultReport, cfg: ModelConfig, batch: int,
-            seq: int, *, engine: str = "tcme") -> SimResult:
+            seq: int, *, engine: str = "tcme",
+            ctx_cache: Optional[dict] = None) -> SimResult:
     """Steps 1–3: classify, re-partition, re-route; returns the degraded-mesh
-    simulation result with the re-solved configuration."""
+    simulation result with the re-solved configuration.
+
+    ``ctx_cache`` lets a sweep reuse :class:`StepCostContext` instances
+    across fault reports.  The key is the full cost-surface identity —
+    the alive-die subset, the failed-link set, and the workload
+    (cfg/batch/seq/engine) — so two reports that degrade the wafer
+    identically share one context (and its memoized routing/groups/
+    results), while any extra dead die, link, or workload change misses.
+    """
     degraded = wafer.with_faults(report.failed_dies, report.failed_links)
     alive = degraded.alive_dies()
     usable = largest_usable_count(len(alive))
@@ -80,7 +90,13 @@ def recover(wafer: Wafer, report: FaultReport, cfg: ModelConfig, batch: int,
     # quick re-solve (DP only — GA omitted for speed in the fault loop);
     # the context pins the evaluation cache to this degraded die subset
     from repro.wafer.solver import dp_refine
-    ctx = StepCostContext(degraded, cfg, batch, seq, engine, dies=sub)
+    key = (tuple(sub), tuple(sorted(degraded.failed_links)),
+           cfg.name, batch, seq, engine)
+    ctx = ctx_cache.get(key) if ctx_cache is not None else None
+    if ctx is None:
+        ctx = StepCostContext(degraded, cfg, batch, seq, engine, dies=sub)
+        if ctx_cache is not None:
+            ctx_cache[key] = ctx
     deg = dp_refine(ctx, ParallelDegrees(dp=usable))
     return ctx.evaluate(deg, final=True)
 
@@ -89,17 +105,24 @@ def throughput_vs_fault_rate(wafer: Wafer, cfg: ModelConfig, batch: int,
                              seq: int, *, kind: str = "core",
                              rates=(0.0, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3,
                                     0.35, 0.4),
-                             seed: int = 0) -> list[dict]:
-    """Paper Fig. 20b/20c sweep."""
+                             seed: int = 0,
+                             ctx_cache: Optional[dict] = None) -> list[dict]:
+    """Paper Fig. 20b/20c sweep.  One ``ctx_cache`` spans the whole loop
+    (callers may pass their own to share across kinds/seeds): adjacent
+    rates that kill the same die subset — common at low rates, where the
+    same seed draws the same failures — reuse one context instead of
+    rebuilding invariants per rate."""
     out = []
     base = None
+    if ctx_cache is None:
+        ctx_cache = {}
     for rate in rates:
         rep = inject_faults(
             wafer,
             die_rate=rate if kind == "core" else 0.0,
             link_rate=rate if kind == "link" else 0.0,
             seed=seed)
-        res = recover(wafer, rep, cfg, batch, seq)
+        res = recover(wafer, rep, cfg, batch, seq, ctx_cache=ctx_cache)
         if base is None:
             base = res.throughput
         out.append({

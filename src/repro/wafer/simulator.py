@@ -282,7 +282,8 @@ class StepCostContext:
 
 def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
                    run_tcme_optimizer: bool = False,
-                   prune_oom: bool = False) -> list[SimResult]:
+                   prune_oom: bool = False,
+                   prune_dominated: bool = False) -> list[SimResult]:
     """Score a batch of candidate degree tuples against one context.
 
     Stage 1 vectorizes the memory/compute/stream-byte arithmetic over all
@@ -291,6 +292,15 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
     per surviving candidate on the context/wafer caches.  ``prune_oom``
     short-circuits memory-infeasible candidates before any traffic modeling
     (their ``mem_per_die`` stays exact; ``step_time`` becomes ``inf``).
+
+    ``prune_dominated`` additionally drops candidates that have an
+    *identical* memory footprint (and compute time) as another candidate
+    but strictly worse stream/collective byte volumes on every comm axis —
+    they cannot win, so the traffic model skips them.  Dominance cannot
+    displace the batch argmax (the dominator stays and is at least as
+    fast), so argmax-only consumers (:func:`best_config`) enable it; the
+    solver's memoized evaluation path does not, keeping DLWS trajectories
+    bitwise identical to the scalar reference.
     """
     if not degrees:
         return []
@@ -348,6 +358,54 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
     else:
         kv_bytes = np.zeros(nC)
 
+    # ---------------- dominance pre-filter (search-only heuristic) --------
+    # Byte dominance implies time dominance only while ring geometry is
+    # uniform: on a pristine full wafer the snake embedding gives every
+    # candidate contiguous rings (hop factor 1), so more bytes on every
+    # axis can't be rescued by better routing.  Degraded wafers (holes,
+    # dead links, die subsets) break that symmetry — the filter disables
+    # itself there rather than risk pruning the true argmax.
+    pristine = not ctx.wafer.failed_dies and not ctx.wafer.failed_links \
+        and ctx.n_dies == ctx.spec.n_dies
+    dominated = np.zeros(nC, bool)
+    if prune_dominated and pristine and nC > 1:
+        bidir_f = 0.5 if ctx.tatp_bidirectional else 1.0
+        if ctx.stream == "auto":
+            sel = np.minimum(w_stream, a_stream)
+        elif ctx.stream == "weights":
+            sel = w_stream + np.zeros(nC)
+        else:
+            sel = a_stream + np.zeros(nC)
+        # per-axis comm byte volumes: TATP streams, SP KV rings, TP
+        # collectives, DP gradient all-reduce (fsdp spaces collapse to a
+        # single legal candidate, so their ag/rs volume is not needed).
+        # NB: these mirror _traffic_and_power's byte formulas and must stay
+        # monotone-consistent with them; the argmax-equivalence test in
+        # tests/test_solver_fast.py guards the pairing.
+        comm = np.stack([
+            np.where(ta > 1, sel * 3 * (ta - 1) / ta * bidir_f, 0.0),
+            np.where((sp > 1) & ~seq_par,
+                     kv_bytes * np.maximum(sp - 1, 1), 0.0),
+            np.where(tp > 1, 4.0 * act_group_bytes, 0.0),
+            np.zeros(nC) if fsdp
+            else np.where(dp > 1, BYTES_W * ctx.p_total / (tp * ta), 0.0),
+        ], axis=1)
+        by_footprint: dict = {}
+        for i in range(nC):
+            if not feasible[i] or oom[i]:
+                continue  # infeasible/OOM candidates are handled upstream
+            by_footprint.setdefault(
+                (float(mem[i]), float(comp_layer[i]), int(n_micro[i])),
+                []).append(i)
+        for idxs in by_footprint.values():
+            for i in idxs:
+                for j in idxs:
+                    if i == j or dominated[i]:
+                        continue
+                    if np.all(comm[j] >= comm[i]) \
+                            and np.any(comm[j] > comm[i]):
+                        dominated[j] = True
+
     results: list[SimResult] = []
     for i, deg in enumerate(degrees):
         if not feasible[i]:
@@ -361,6 +419,14 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
         if prune_oom and oom_i:
             results.append(SimResult(math.inf, 0.0, mem_i, True, 0.0, 0.0,
                                      0.0, {"reason": "oom-pruned",
+                                           "n_micro": int(n_micro[i])},
+                                     deg, ctx.engine))
+            continue
+        if dominated[i]:
+            # same memory footprint as a surviving candidate, strictly
+            # worse comm bytes: cannot be the argmax, skip traffic modeling
+            results.append(SimResult(math.inf, 0.0, mem_i, oom_i, 0.0, 0.0,
+                                     0.0, {"reason": "dominated-pruned",
                                            "n_micro": int(n_micro[i])},
                                      deg, ctx.engine))
             continue
@@ -1011,7 +1077,8 @@ def best_config(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int,
         deg = smap_config(n, space)
         return simulate_batch(ctx, [deg], run_tcme_optimizer=run_tcme)[0]
     cands = candidate_degrees(n, spec["allow"], spec["seq_par"])
-    results = simulate_batch(ctx, cands, run_tcme_optimizer=run_tcme)
+    results = simulate_batch(ctx, cands, run_tcme_optimizer=run_tcme,
+                             prune_dominated=True)
     best: Optional[SimResult] = None
     for res in results:
         if not res.ok:

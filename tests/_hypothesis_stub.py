@@ -1,0 +1,94 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The property tests in this repo only use ``st.integers``/``st.booleans``
+(optionally ``.map``-ped) with ``@settings(max_examples=N)``.  This stub
+replays each property over a deterministic sample (both bounds, midpoints,
+and fixed-seed draws) so the tests still execute — weaker than real
+shrinking/search, but a faithful smoke of the same invariants.  Containers
+with hypothesis installed use the real library (see the import guards in
+the test modules).
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler  # (rng) -> value
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+
+class _Mapped(_Strategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+        super().__init__(lambda rng: fn(base._sampler(rng)))
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value, self.max_value = min_value, max_value
+        super().__init__(lambda rng: rng.randint(min_value, max_value))
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2 ** 16) if min_value is None else min_value
+    hi = 2 ** 16 if max_value is None else max_value
+    return _Integers(lo, hi)
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+class st:  # mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    booleans = staticmethod(booleans)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def _corner_values(strat, rng):
+    if isinstance(strat, _Mapped):
+        return [strat.fn(v) for v in _corner_values(strat.base, rng)]
+    if isinstance(strat, _Integers):
+        lo, hi = strat.min_value, strat.max_value
+        mid = (lo + hi) // 2
+        vals = []
+        for v in (lo, hi, mid):
+            if v not in vals:
+                vals.append(v)
+        return vals
+    return [strat._sampler(rng)]
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # read at call time: @settings is usually applied OUTSIDE
+            # @given, stamping the attribute on this wrapper after the
+            # fact — both decorator orders must honor it
+            max_examples = getattr(wrapper, "_stub_max_examples",
+                                   getattr(fn, "_stub_max_examples", 20))
+            rng = random.Random(0)
+            corner_axes = [_corner_values(s, rng) for s in strats]
+            cases = list(itertools.islice(
+                itertools.product(*corner_axes), max_examples))
+            while len(cases) < max_examples:
+                cases.append(tuple(s._sampler(rng) for s in strats))
+            for case in cases:
+                fn(*args, *case, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,224 @@
+"""WaferPlan IR: JSON round-trip, plan-cache behaviour keyed on the
+alive-die subset, degraded-wafer re-planning, and the plan → mesh /
+ParallelConfig executable views."""
+
+import json
+import os
+
+import pytest
+
+from repro.configs.paper_models import TABLE_II
+from repro.core.plan import (PLAN_STATS, WaferPlan, compile_plan,
+                             plan_cache_key, reset_plan_stats)
+from repro.wafer.topology import Wafer, WaferSpec
+
+CFG, _ = TABLE_II["gpt3-6.7b"]
+BATCH, SEQ = 32, 2048
+
+
+@pytest.fixture(autouse=True)
+def _fresh_stats():
+    reset_plan_stats()
+    yield
+    reset_plan_stats()
+
+
+def _compile(wafer, tmp_path, **kw):
+    return compile_plan(wafer, CFG, BATCH, SEQ, cache_dir=str(tmp_path),
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def test_json_roundtrip_identity(tmp_path):
+    plan = _compile(Wafer(WaferSpec()), tmp_path)
+    again = WaferPlan.loads(plan.dumps())
+    assert again == plan
+    assert again.plan_hash == plan.plan_hash
+    # file round-trip too
+    p = os.path.join(str(tmp_path), "out.json")
+    plan.dump(p)
+    assert WaferPlan.load(p) == plan
+
+
+def test_plan_hash_ignores_solver_telemetry(tmp_path):
+    plan = _compile(Wafer(WaferSpec()), tmp_path)
+    d = plan.to_dict()
+    d["solver"] = {"search_time_s": 999.0, "evaluated": 1}
+    d["predicted"] = {}
+    assert WaferPlan.from_dict(d).plan_hash == plan.plan_hash
+    # but any executable field changes it
+    d["stream"] = "weights"
+    assert WaferPlan.from_dict(d).plan_hash != plan.plan_hash
+
+
+def test_newer_plan_version_rejected():
+    w = Wafer(WaferSpec())
+    plan = compile_plan(w, CFG, BATCH, SEQ, use_cache=False)
+    d = plan.to_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError):
+        WaferPlan.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# cache behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_solver(tmp_path):
+    w = Wafer(WaferSpec())
+    p1 = _compile(w, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 1
+    assert PLAN_STATS["cache_misses"] == 1
+    p2 = _compile(w, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 1  # solver NOT re-run
+    assert PLAN_STATS["cache_hits"] == 1
+    assert p2 == p1
+
+
+def test_cache_key_tracks_alive_die_subset():
+    w = Wafer(WaferSpec())
+    full = plan_cache_key("a", BATCH, SEQ, w)
+    sub = plan_cache_key("a", BATCH, SEQ, w, dies=w.alive_dies()[:16])
+    assert full != sub
+    # same subset -> same key regardless of list order
+    rev = plan_cache_key("a", BATCH, SEQ, w,
+                         dies=list(reversed(w.alive_dies()[:16])))
+    assert sub == rev
+    # workload shape is part of the identity
+    assert plan_cache_key("a", BATCH, 2 * SEQ, w) != full
+    assert plan_cache_key("b", BATCH, SEQ, w) != full
+
+
+def test_degraded_wafer_invalidates_cache_and_replans(tmp_path):
+    w = Wafer(WaferSpec())
+    p1 = _compile(w, tmp_path)
+    assert p1.total_degree <= len(w.alive_dies())
+    # kill dies: the cached plan must NOT be replayed
+    dead = [0, 3, 9, 17, 21]
+    degraded = w.with_faults(dies=dead)
+    p2 = _compile(degraded, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 2  # re-solved, no stale replay
+    assert p2.plan_hash != p1.plan_hash
+    # the new plan fits the surviving dies
+    alive = degraded.alive_dies()
+    assert p2.total_degree <= len(alive)
+    assert set(p2.alive_dies) == set(alive)
+    assert all(d not in p2.device_order for d in dead)
+    # and re-launching on the same degraded wafer hits the new cache entry
+    p3 = _compile(degraded, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 2
+    assert p3 == p2
+
+
+def test_corrupt_cache_entry_falls_back_to_solve(tmp_path):
+    w = Wafer(WaferSpec())
+    _compile(w, tmp_path)
+    (entry,) = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    with open(os.path.join(str(tmp_path), entry), "w") as f:
+        f.write("{not json")
+    p = _compile(w, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 2
+    assert p.total_degree <= len(w.alive_dies())
+
+
+# ---------------------------------------------------------------------------
+# executable views
+# ---------------------------------------------------------------------------
+
+
+def test_device_order_is_snake_over_alive_dies(tmp_path):
+    from repro.wafer.mapping import snake_order
+    w = Wafer(WaferSpec()).with_faults(dies=[2, 11])
+    plan = _compile(w, tmp_path)
+    live = set(w.alive_dies())
+    expect = tuple(d for d in snake_order(w.spec.rows, w.spec.cols)
+                   if d in live)
+    assert plan.device_order == expect
+
+
+def test_mesh_shape_adapts_to_device_count(tmp_path):
+    plan = _compile(Wafer(WaferSpec()), tmp_path)
+    for n in (1, 2, 4, 8, 32):
+        data, model = plan.mesh_shape_for(n)
+        assert data * model == n
+        # the ring degree never exceeds the solved tatp degree
+        assert model <= max(plan.tatp, 1) or plan.tatp == 1
+
+
+def test_plan_device_permutation_uses_plan_order_at_full_scale(tmp_path):
+    from repro.launch.mesh import plan_device_permutation
+    w = Wafer(WaferSpec()).with_faults(dies=[2, 11])
+    plan = _compile(w, tmp_path)
+    n = len(plan.device_order)  # one device per alive die
+    perm = plan_device_permutation(plan, n)
+    assert sorted(perm) == list(range(n))
+    # the permutation is exactly the plan's snake order, compacted from
+    # die ids to device ranks (device k hosts the k-th alive die)
+    alive_sorted = sorted(plan.alive_dies)
+    assert [alive_sorted[i] for i in perm] == list(plan.device_order)
+    # reduced scale falls back to the dense snake over the shrunk grid
+    assert sorted(plan_device_permutation(plan, 2)) == [0, 1]
+
+
+def test_cache_key_tracks_executable_knobs(tmp_path):
+    w = Wafer(WaferSpec())
+    p1 = _compile(w, tmp_path, remat=True)
+    p2 = _compile(w, tmp_path, remat=False)
+    # different knobs must not alias one cache entry
+    assert PLAN_STATS["solver_calls"] == 2
+    assert p1.remat and not p2.remat
+    p3 = _compile(w, tmp_path, remat=False)
+    assert PLAN_STATS["solver_calls"] == 2  # same knobs hit
+    assert p3 == p2
+
+
+def test_make_plan_mesh_single_device(tmp_path):
+    from repro.launch.mesh import make_plan_mesh
+    plan = _compile(Wafer(WaferSpec()), tmp_path)
+    mesh = make_plan_mesh(plan)
+    assert mesh.axis_names == ("data", "model")
+    assert int(mesh.devices.size) >= 1
+
+
+def test_parallel_config_carries_stream_policy(tmp_path):
+    plan = _compile(Wafer(WaferSpec()), tmp_path, stream="weights",
+                    bidirectional=False, stream_dtype="fp8", remat=False)
+    par = plan.parallel_config()
+    assert par.stream == "weights"
+    assert par.bidirectional is False
+    assert par.stream_dtype == "fp8"
+    assert par.remat is False
+    assert plan.schedule == "tspp_line"
+    assert (plan.dp, plan.tp, plan.sp, plan.tatp) == \
+        (par.dp, par.tp, par.sp, par.tatp)
+
+
+def test_wafer_roundtrip_from_plan(tmp_path):
+    w = Wafer(WaferSpec()).with_faults(dies=[5], links=[(1, 2)])
+    plan = _compile(w, tmp_path)
+    back = plan.wafer()
+    assert back.failed_dies == w.failed_dies
+    assert back.failed_links == w.failed_links
+    assert back.alive_dies() == w.alive_dies()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integration (plan hash recorded for elastic restarts)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_records_plan_hash(tmp_path):
+    import jax.numpy as jnp
+    from repro.train import checkpoint as ckpt
+    d = str(tmp_path / "ckpt")
+    tree = {"x": jnp.zeros((3,))}
+    ckpt.save(d, 4, tree, meta={"plan_hash": "abc123"})
+    assert ckpt.read_meta(d) == {"plan_hash": "abc123"}
+    assert ckpt.read_meta(d, step=4)["plan_hash"] == "abc123"
+    # older checkpoints without meta read as {}
+    assert ckpt.read_meta(str(tmp_path / "nope")) == {}

@@ -1,7 +1,10 @@
 """Property tests (hypothesis) for the TSPP/TATP orchestration schedules."""
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback; no pip installs in-container
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.schedule import (line_schedule, ring_schedule, simulate,
                                  tail_latency_rounds)

@@ -82,6 +82,64 @@ def test_batch_matches_reference_on_degraded_wafer():
             _assert_bitwise_equal(res, ref, (deg.as_tuple(), tcme_opt))
 
 
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("space", sorted(STRATEGY_SPACES))
+def test_dominance_prefilter_preserves_argmax(model, space):
+    """Golden equivalence of the surviving argmax: the dominance pre-filter
+    (same memory footprint, strictly worse stream/collective bytes) may
+    only drop candidates that cannot win, and must leave every surviving
+    result bitwise identical."""
+    cfg, _ = TABLE_II[model]
+    spec = STRATEGY_SPACES[space]
+    cands = candidate_degrees(32, spec["allow"], spec["seq_par"])
+    ctx_a = StepCostContext(WAFER, cfg, 32, 2048, "tcme", fsdp=spec["fsdp"])
+    ctx_b = StepCostContext(WAFER, cfg, 32, 2048, "tcme", fsdp=spec["fsdp"])
+    full = simulate_batch(ctx_a, cands, run_tcme_optimizer=False)
+    filt = simulate_batch(ctx_b, cands, run_tcme_optimizer=False,
+                          prune_dominated=True)
+
+    def argmax(rs):
+        ok = [r for r in rs if r.ok]
+        return max(ok, key=lambda r: r.throughput).degrees if ok else None
+
+    assert argmax(full) == argmax(filt), (model, space)
+    for rf, rd in zip(full, filt):
+        if rd.breakdown.get("reason") == "dominated-pruned":
+            assert not rd.ok  # pruned candidates can never be selected
+            assert rd.mem_per_die == rf.mem_per_die  # memory stays exact
+        else:
+            _assert_bitwise_equal(rf, rd, (model, space,
+                                           rf.degrees.as_tuple()))
+
+
+def test_dominance_prefilter_fires_in_temp_space():
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    spec = STRATEGY_SPACES["temp"]
+    cands = candidate_degrees(32, spec["allow"], spec["seq_par"])
+    ctx = StepCostContext(WAFER, cfg, 32, 2048, "tcme", fsdp=spec["fsdp"])
+    res = simulate_batch(ctx, cands, prune_dominated=True)
+    assert any(r.breakdown.get("reason") == "dominated-pruned" for r in res)
+
+
+def test_dominance_prefilter_inert_on_degraded_wafer():
+    """Byte dominance is only sound while ring geometry is uniform; on a
+    degraded wafer (holes change hops/contention asymmetrically) the
+    filter must disable itself and return full-fidelity results."""
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    degraded = WAFER.with_faults(dies=[3, 17])
+    n = len(degraded.alive_dies())
+    spec = STRATEGY_SPACES["temp"]
+    cands = candidate_degrees(n, spec["allow"], spec["seq_par"])
+    ctx_a = StepCostContext(degraded, cfg, 32, 2048, "tcme")
+    ctx_b = StepCostContext(degraded, cfg, 32, 2048, "tcme")
+    full = simulate_batch(ctx_a, cands)
+    filt = simulate_batch(ctx_b, cands, prune_dominated=True)
+    assert not any(r.breakdown.get("reason") == "dominated-pruned"
+                   for r in filt)
+    for rf, rd in zip(full, filt):
+        _assert_bitwise_equal(rf, rd, rf.degrees.as_tuple())
+
+
 def test_oom_prepruning_keeps_memory_exact():
     cfg, _ = TABLE_II["gpt3-76b"]  # big model: plenty of OOM candidates
     cands = candidate_degrees(32, STRATEGY_SPACES["temp"]["allow"])

@@ -5,8 +5,11 @@ test_multidevice.py subprocesses."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback; no pip installs in-container
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import tatp
 
