@@ -3,9 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows per the repo contract; detailed
 records land in results/bench/*.json.
 
-``--check`` is the one-command smoke gate: tier-1 pytest plus the
-``search/engine_baseline`` drift check, so plan-pipeline regressions and
-cost-engine drift are caught together (exit 1 on either).
+``--check`` is the one-command smoke gate: tier-1 pytest, the
+``search/engine_baseline`` drift check, and the fig19 multi-wafer smoke
+(GPT-3 175B ×2 through the solve→plan→schedule pipeline, speedup and
+feasibility gated against the recorded baseline), so plan-pipeline
+regressions, cost-engine drift and multi-wafer drift are caught together
+(exit 1 on any).
 """
 
 from __future__ import annotations
@@ -61,6 +64,27 @@ def check() -> None:
               f"baseline={base['avg_engine_speedup']:.1f}x "
               f"ratio={drift:.2f} "
               f"identical={summary['all_identical_to_scalar']} "
+              f"-> {'OK' if ok else 'DRIFT'}")
+        failed |= not ok
+    except Exception:
+        traceback.print_exc()
+        failed = True
+
+    print("== fig19 multi-wafer smoke ==", flush=True)
+    try:
+        from benchmarks.fig19_multiwafer import run as fig19_run
+        rows, summary, baseline = fig19_run(fast=True)
+        (row,) = rows
+        spd = row["speedup_vs_mesp"]
+        base_spd = (baseline or summary).get("per_model", {}) \
+            .get(row["model"], spd)
+        drift = spd / max(base_spd, 1e-9)
+        ok = (row["temp_schedule_ok"] and row["temp_plan_schedule_ok"]
+              and not row["temp_oom"] and spd >= 1.2 and drift >= 0.8)
+        print(f"fig19 {row['model']} x{row['wafers']}: "
+              f"speedup_vs_mesp={spd:.2f}x baseline={base_spd:.2f}x "
+              f"ratio={drift:.2f} schedule_ok={row['temp_schedule_ok']} "
+              f"plan_ok={row['temp_plan_schedule_ok']} "
               f"-> {'OK' if ok else 'DRIFT'}")
         failed |= not ok
     except Exception:

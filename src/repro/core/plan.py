@@ -33,7 +33,9 @@ import os
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
-PLAN_VERSION = 1
+# v2: GA legality fix (subset totals) changes solver output — the bump
+# changes every cache key so pre-fix on-disk plans miss and re-solve
+PLAN_VERSION = 2
 
 # observable pipeline counters (reset via reset_plan_stats; the launch
 # drivers print them so "second run hit the cache" is checkable from logs)
@@ -267,7 +269,6 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
     pass ``use_cache=False`` to force a fresh solve (the plan is still
     written back so the next launch hits).
     """
-    from repro.wafer import mapping as wmap
     from repro.wafer.solver import dlws_solve
 
     arch = arch or cfg.name
@@ -290,9 +291,27 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
     PLAN_STATS["solver_calls"] += 1
     sol = dlws_solve(wafer, cfg, batch, seq, engine=engine, space=space,
                      seed=seed, dies=dies)
-    deg = sol.config
+    plan = plan_from_solution(
+        wafer, sol, arch=arch, batch=batch, seq=seq, engine=engine,
+        space=space, dies=dies, stream=stream, bidirectional=bidirectional,
+        stream_dtype=stream_dtype, remat=remat)
+    # written back even when use_cache=False (a forced fresh solve must
+    # replace any stale entry so the next launch hits the new plan)
+    plan.dump(path)
+    return plan
 
-    # --- map (TCME/snake embedding of the solved degrees) -----------------
+
+def plan_from_solution(wafer, sol, *, arch: str, batch: int, seq: int,
+                       engine: str, space: str,
+                       dies: Optional[Sequence[int]] = None,
+                       stream: str = "auto", bidirectional: bool = True,
+                       stream_dtype: str = "native",
+                       remat: bool = True) -> WaferPlan:
+    """map → plan for one already-computed DLWS solution (the tail of
+    :func:`compile_plan`, shared with the multi-wafer compiler so stage
+    solves are planned without re-running the solver)."""
+    from repro.wafer import mapping as wmap
+    deg = sol.config
     alive = list(dies) if dies is not None else wafer.alive_dies()
     degrees_map = {a: v for a, v in
                    (("dp", deg.dp), ("tp", deg.tp), ("sp", deg.sp),
@@ -305,7 +324,7 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
     device_order = tuple(d for d in base if d in live)
 
     best = sol.best
-    plan = WaferPlan(
+    return WaferPlan(
         arch=arch, batch=batch, seq=seq,
         wafer_rows=wafer.spec.rows, wafer_cols=wafer.spec.cols,
         failed_dies=tuple(sorted(wafer.failed_dies)),
@@ -331,10 +350,6 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
             "evaluated": sol.evaluated,
         },
     )
-    # written back even when use_cache=False (a forced fresh solve must
-    # replace any stale entry so the next launch hits the new plan)
-    plan.dump(path)
-    return plan
 
 
 def load_or_compile(plan_path: Optional[str], wafer, cfg, batch: int,
@@ -344,3 +359,412 @@ def load_or_compile(plan_path: Optional[str], wafer, cfg, batch: int,
     if plan_path:
         return WaferPlan.load(plan_path)
     return compile_plan(wafer, cfg, batch, seq, **kw)
+
+
+# ---------------------------------------------------------------------------
+# multi-wafer pipeline plans (§VIII-E): solve → plan → execute across wafers
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MultiWaferPlan:
+    """Executable launch plan for a pipeline of wafers.
+
+    One :class:`WaferPlan` per pipeline stage (a stage owns a whole wafer
+    at ``pp == n_wafers``, or a contiguous die subset when stages share a
+    wafer) plus the pipeline-level choices: the layer → stage split, the
+    microbatch count, the schedule family and the inter-wafer bandwidth
+    the plan was scored against.
+    """
+
+    arch: str
+    batch: int
+    seq: int
+    n_wafers: int
+    pp: int
+    n_micro: int
+    family: str  # "gpipe" | "1f1b"
+    inter_wafer_bw: float
+    stage_layers: tuple[int, ...]
+    stage_wafer: tuple[int, ...]  # stage -> wafer index
+    stages: tuple[WaferPlan, ...]
+    predicted: dict = field(default_factory=dict)
+    solver: dict = field(default_factory=dict)
+    version: int = PLAN_VERSION
+
+    @property
+    def plan_hash(self) -> str:
+        """Executable-surface hash: pipeline shape + every stage's own
+        ``plan_hash`` (stage telemetry excluded transitively)."""
+        d = self.to_dict()
+        d.pop("predicted", None)
+        d.pop("solver", None)
+        d["stages"] = [s.plan_hash for s in self.stages]
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["stages"] = [s.to_dict() for s in self.stages]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MultiWaferPlan":
+        d = dict(d)
+        if d.get("version", PLAN_VERSION) > PLAN_VERSION:
+            raise ValueError(f"plan version {d['version']} is newer than "
+                             f"this runtime ({PLAN_VERSION})")
+        d["stages"] = tuple(WaferPlan.from_dict(s) for s in d["stages"])
+        d["stage_layers"] = tuple(d.get("stage_layers", ()))
+        d["stage_wafer"] = tuple(d.get("stage_wafer", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True)
+
+    @classmethod
+    def loads(cls, s: str) -> "MultiWaferPlan":
+        return cls.from_dict(json.loads(s))
+
+    def dump(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.dumps())
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "MultiWaferPlan":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    def stages_of_wafer(self, wafer_idx: int) -> list[int]:
+        return [s for s, w in enumerate(self.stage_wafer) if w == wafer_idx]
+
+    def pipeline_schedule(self):
+        from repro.core.schedule import pipeline_schedule
+        return pipeline_schedule(self.family, self.pp, self.n_micro)
+
+    def summary(self) -> str:
+        pred = self.predicted or {}
+        parts = [
+            f"MultiWaferPlan[{self.plan_hash}] {self.arch} "
+            f"batch={self.batch} seq={self.seq}",
+            f"  {self.n_wafers} wafers, pp={self.pp} "
+            f"n_micro={self.n_micro} family={self.family} "
+            f"layers={list(self.stage_layers)}",
+        ]
+        if pred.get("throughput") is not None:
+            parts.append(
+                f"  predicted {pred['throughput'] / 1e6:.2f} Mtok/s, "
+                f"bubble {pred.get('bubble', 0):.2f}, "
+                f"peak mem {max(pred.get('stage_mem', [0])) / 1e9:.1f} "
+                f"GB/die")
+        for i, s in enumerate(self.stages):
+            parts.append(f"  stage{i} w{self.stage_wafer[i]} "
+                         f"L={self.stage_layers[i]} "
+                         f"degrees={s.degrees_tuple()} "
+                         f"dies={len(s.alive_dies)} [{s.plan_hash}]")
+        return "\n".join(parts)
+
+
+def multiwafer_cache_key(arch: str, batch: int, seq: int, wafers,
+                         dies_per_wafer=None, *, engine: str = "tcme",
+                         space: str = "temp", knobs: tuple = (),
+                         upper: tuple = ()) -> str:
+    """Cache identity keyed on the tuple of per-wafer fault states: any
+    die/link death on any one wafer changes the key and forces a re-solve
+    of (at least) that wafer's stages.  ``upper`` carries the pipeline-
+    level search space (pp multipliers, n_micro candidates, families)."""
+    per_wafer = []
+    for i, w in enumerate(wafers):
+        dies = None
+        if dies_per_wafer is not None and dies_per_wafer[i] is not None:
+            dies = sorted(dies_per_wafer[i])
+        per_wafer.append({
+            # the full hardware spec, not just the grid shape: wafers with
+            # different HBM caps / link bandwidths solve to different
+            # plans and must not alias one cache entry
+            "spec": dataclasses.asdict(w.spec),
+            "failed_dies": sorted(w.failed_dies),
+            "failed_links": sorted(list(l) for l in w.failed_links),
+            "dies": dies if dies is not None else sorted(w.alive_dies()),
+        })
+    ident = {
+        "v": PLAN_VERSION,
+        "arch": arch, "batch": batch, "seq": seq,
+        "wafers": per_wafer,
+        "engine": engine, "space": space,
+        "knobs": list(knobs), "upper": list(upper),
+    }
+    blob = json.dumps(ident, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+def compile_multiwafer_plan(
+        wafers, cfg, batch: int, seq: int, *,
+        arch: Optional[str] = None, engine: str = "tcme",
+        space: str = "temp", dies_per_wafer=None,
+        stream: str = "auto", bidirectional: bool = True,
+        stream_dtype: str = "native", remat: bool = True, seed: int = 0,
+        inter_wafer_bw: Optional[float] = None,
+        pp_multipliers=(1,), n_micro_candidates=(4, 8, 16, 32),
+        families=("gpipe", "1f1b"),
+        cache_dir: Optional[str] = None,
+        use_cache: bool = True) -> MultiWaferPlan:
+    """solve (upper + per-stage DLWS) → map → plan across ``wafers``, with
+    an on-disk cache keyed on the tuple of per-wafer fault states."""
+    from repro.wafer.solver import INTER_WAFER_BW, dlws_solve_multiwafer
+    arch = arch or cfg.name
+    bw = inter_wafer_bw if inter_wafer_bw is not None else INTER_WAFER_BW
+    cache_dir = cache_dir if cache_dir is not None else default_cache_dir()
+    key = multiwafer_cache_key(
+        arch, batch, seq, wafers, dies_per_wafer, engine=engine,
+        space=space, knobs=(stream, bidirectional, stream_dtype, remat, bw),
+        upper=(tuple(pp_multipliers), tuple(n_micro_candidates),
+               tuple(families)))
+    path = os.path.join(cache_dir, f"mwplan_{key}.json")
+    if use_cache and os.path.exists(path):
+        try:
+            plan = MultiWaferPlan.load(path)
+        except (ValueError, KeyError, json.JSONDecodeError, OSError):
+            plan = None  # corrupt/foreign cache entry: fall through
+        if plan is not None:
+            PLAN_STATS["cache_hits"] += 1
+            return plan
+    PLAN_STATS["cache_misses"] += 1
+
+    PLAN_STATS["solver_calls"] += 1
+    sol = dlws_solve_multiwafer(
+        wafers, cfg, batch, seq, engine=engine, space=space, seed=seed,
+        dies_per_wafer=dies_per_wafer, inter_wafer_bw=bw,
+        pp_multipliers=pp_multipliers,
+        n_micro_candidates=n_micro_candidates, families=families)
+    plan = _plan_from_multiwafer_solution(
+        wafers, sol, cfg=cfg, arch=arch, batch=batch, seq=seq,
+        engine=engine, space=space, stream=stream,
+        bidirectional=bidirectional, stream_dtype=stream_dtype,
+        remat=remat, inter_wafer_bw=bw,
+        upper=(tuple(pp_multipliers), tuple(n_micro_candidates),
+               tuple(families)))
+    plan.dump(path)
+    return plan
+
+
+def _plan_from_multiwafer_solution(wafers, sol, *, cfg, arch, batch, seq,
+                                   engine, space, stream, bidirectional,
+                                   stream_dtype, remat, inter_wafer_bw,
+                                   upper=()) -> MultiWaferPlan:
+    from repro.wafer.simulator import StepCostContext, memory_components
+    from repro.wafer.simulator import STRATEGY_SPACES
+    from repro.wafer.solver import stage_config
+    spec = STRATEGY_SPACES[space]
+    stage_plans = []
+    fixed_l, act_l = [], []
+    for s in range(sol.pp):
+        wafer = wafers[sol.stage_wafer[s]]
+        stage_plans.append(plan_from_solution(
+            wafer, sol.stages[s], arch=f"{arch}#stage{s}", batch=batch,
+            seq=seq, engine=engine, space=space, dies=sol.stage_dies[s],
+            stream=stream, bidirectional=bidirectional,
+            stream_dtype=stream_dtype, remat=remat))
+        # memory split per stage (advisory; replan's rebalance needs it)
+        ctx = StepCostContext(wafer, stage_config(cfg, sol.stage_layers[s]),
+                              batch, seq, engine, fsdp=spec["fsdp"],
+                              dies=list(sol.stage_dies[s]))
+        fixed, act_full, _ = memory_components(ctx, sol.stages[s].config)
+        fixed_l.append(fixed)
+        act_l.append(act_full)
+    return MultiWaferPlan(
+        arch=arch, batch=batch, seq=seq, n_wafers=len(wafers),
+        pp=sol.pp, n_micro=sol.n_micro, family=sol.family,
+        inter_wafer_bw=inter_wafer_bw,
+        stage_layers=sol.stage_layers, stage_wafer=sol.stage_wafer,
+        stages=tuple(stage_plans),
+        predicted={
+            "throughput": sol.throughput,
+            "step_time": sol.step_time,
+            "bubble": sol.bubble,
+            "peak_inflight": sol.peak_inflight,
+            "oom": sol.oom,
+            "stage_mem": list(sol.stage_mem),
+            "stage_step_time": [s.best.step_time for s in sol.stages],
+            "stage_mem_fixed": fixed_l,
+            "stage_act_full": act_l,
+            # per-stage HBM caps: WaferPlan.wafer() rebuilds with a default
+            # WaferSpec, so replan must not re-derive caps from it
+            "stage_hbm_cap": [wafers[w].spec.hbm_cap
+                              for w in sol.stage_wafer],
+        },
+        solver={
+            "method": "dlws-multiwafer",
+            "search_time_s": sol.search_time_s,
+            "evaluated": sol.evaluated,
+            "candidates": sol.candidates,
+            "upper": [list(u) for u in upper],  # search surface (cache key)
+        },
+    )
+
+
+def replan_stage(plan: MultiWaferPlan, cfg, stage_idx: int, wafer, *,
+                 seed: int = 0, max_rebalance: int = 8,
+                 cache_dir: Optional[str] = None) -> MultiWaferPlan:
+    """Re-solve ONE stage of a multi-wafer plan on a degraded wafer,
+    leaving every other stage's :class:`WaferPlan` untouched.
+
+    A die death on one wafer only invalidates that wafer's stage: the
+    stage re-solves on its surviving dies with its current layer count.
+    If the re-solved stage no longer fits (pipeline in-flight memory over
+    ``hbm_cap``), layers migrate one at a time to the stage with the most
+    headroom — the *receiving* stage keeps its solved degrees and plan
+    (its layer count lives in ``stage_layers``, not in its WaferPlan), so
+    only its advisory predictions go stale (rescaled first-order here).
+    """
+    from repro.core.schedule import (pipeline_schedule, pipeline_step_time,
+                                     simulate_pipeline)
+    from repro.wafer.simulator import STRATEGY_SPACES, StepCostContext
+    from repro.wafer.simulator import memory_components
+    from repro.wafer.solver import dlws_solve, stage_config
+    s = stage_idx
+    old_stage = plan.stages[s]
+    space, engine = old_stage.space, old_stage.engine
+    spec = STRATEGY_SPACES[space]
+    alive = [d for d in old_stage.alive_dies if wafer.alive(d)]
+    if not alive:
+        raise ValueError(f"stage {s} has no surviving dies")
+    sched = pipeline_schedule(plan.family, plan.pp, plan.n_micro)
+    rep = simulate_pipeline(sched)
+    cap = wafer.spec.hbm_cap
+    pred = plan.predicted
+    # per-stage caps come from the compile-time record: WaferPlan.wafer()
+    # rebuilds with a *default* WaferSpec, so its hbm_cap is not trustworthy
+    caps_all = list(pred.get("stage_hbm_cap",
+                             [cap] * plan.pp))
+    caps_all[s] = cap
+    layers = list(plan.stage_layers)
+    old_layers = list(plan.stage_layers)
+
+    def solve_here(n_layers: int):
+        scfg = stage_config(cfg, n_layers)
+        sol = dlws_solve(wafer, scfg, plan.batch, plan.seq, engine=engine,
+                         space=space, seed=seed, dies=alive)
+        ctx = StepCostContext(wafer, scfg, plan.batch, plan.seq, engine,
+                              fsdp=spec["fsdp"], dies=alive)
+        fixed, act_full, _ = memory_components(ctx, sol.config)
+        mem = fixed + act_full * rep.inflight_per_stage[s] / plan.n_micro
+        return sol, fixed, act_full, mem
+
+    def other_mem(j: int) -> float:
+        """Receiver occupancy at the CURRENT layer assignment (first-order
+        rescale of the recorded split — not the stale pre-fault value, so
+        successive sheds spread instead of piling onto one stage).  Both
+        terms scale with the layer count: weights/grads/optimizer are
+        per-layer (modulo the embedding) and so are activations."""
+        ratio = layers[j] / max(old_layers[j], 1)
+        return ratio * (pred["stage_mem_fixed"][j]
+                        + pred["stage_act_full"][j]
+                        * rep.inflight_per_stage[j] / plan.n_micro)
+
+    needed = ("stage_step_time", "stage_mem_fixed", "stage_act_full")
+    missing = [k for k in needed if k not in pred]
+    if missing:
+        raise ValueError(f"plan lacks solver telemetry {missing}: "
+                         f"replan_stage needs a plan produced by "
+                         f"compile_multiwafer_plan (predicted was "
+                         f"stripped or hand-edited)")
+
+    sol, fixed, act_full, mem = solve_here(layers[s])
+    moved = 0
+    while mem > cap and layers[s] > 1 and moved < max_rebalance:
+        # shed one layer to the stage with the most headroom *now*
+        head = [(other_mem(j) / caps_all[j], j)
+                for j in range(plan.pp) if j != s]
+        if not head:  # pp == 1: nowhere to shed — ship flagged as OOM
+            break
+        dst = min(head)[1]
+        layers[s] -= 1
+        layers[dst] += 1
+        moved += 1
+        sol, fixed, act_full, mem = solve_here(layers[s])
+
+    new_stage = plan_from_solution(
+        wafer, sol, arch=old_stage.arch, batch=plan.batch, seq=plan.seq,
+        engine=engine, space=space, dies=alive, stream=old_stage.stream,
+        bidirectional=old_stage.bidirectional,
+        stream_dtype=old_stage.stream_dtype, remat=old_stage.remat)
+    stages = tuple(new_stage if j == s else plan.stages[j]
+                   for j in range(plan.pp))
+
+    # re-score the pipeline: untouched stages scale first-order with their
+    # (possibly rebalanced) layer counts; the re-solved stage is exact
+    step_times, mems = [], []
+    for j in range(plan.pp):
+        ratio = layers[j] / max(old_layers[j], 1)
+        if j == s:
+            step_times.append(sol.best.step_time)
+            mems.append(mem)
+        else:
+            step_times.append(pred["stage_step_time"][j] * ratio)
+            mems.append(other_mem(j))
+    half = [t / (2 * plan.n_micro) for t in step_times]
+    from repro.wafer.simulator import BYTES_ACT
+    p2p = (plan.batch * plan.seq * cfg.d_model * BYTES_ACT
+           / plan.n_micro / plan.inter_wafer_bw) if plan.pp > 1 else 0.0
+    t_step = pipeline_step_time(sched, half, half, p2p)
+    new_pred = dict(pred)
+    new_pred.update({
+        "step_time": t_step,
+        "throughput": plan.batch * plan.seq / t_step if t_step > 0 else 0.0,
+        "oom": any(m > c for m, c in zip(mems, caps_all))
+        or not sol.best.ok,
+        "stage_mem": mems,
+        "stage_step_time": step_times,
+        "stage_hbm_cap": caps_all,
+        # rescaled bases so a future replan's ratios compose from the new
+        # stage_layers
+        "stage_mem_fixed": [fixed if j == s else pred["stage_mem_fixed"][j]
+                            * layers[j] / max(old_layers[j], 1)
+                            for j in range(plan.pp)],
+        "stage_act_full": [act_full * 1.0 if j == s
+                           else pred["stage_act_full"][j]
+                           * layers[j] / max(old_layers[j], 1)
+                           for j in range(plan.pp)],
+    })
+    new_solver = dict(plan.solver)
+    new_solver.update({"replanned_stage": s, "layers_moved": moved,
+                       "evaluated": sol.evaluated})
+    new_plan = dataclasses.replace(plan, stages=stages,
+                                   stage_layers=tuple(layers),
+                                   predicted=new_pred, solver=new_solver)
+    if cache_dir is not None:
+        # publish under the new fault tuple (same key a fresh compile on
+        # the degraded wafers would compute) so a relaunch hits it.  A
+        # wafer's fault state is the UNION over all its stages' plans —
+        # with stages sharing a wafer, rebuilding from any single stage
+        # would drop the other stage's faults and alias the healthy key.
+        # All wafers are assumed to share the passed wafer's hardware spec
+        # (WaferPlan records only the grid shape).
+        from repro.wafer.topology import Wafer
+        wafers = []
+        for w in range(new_plan.n_wafers):
+            idxs = new_plan.stages_of_wafer(w)
+            fd: set = set()
+            fl: set = set()
+            for i in idxs:
+                fd |= set(new_plan.stages[i].failed_dies)
+                fl |= {tuple(l) for l in new_plan.stages[i].failed_links}
+            st = new_plan.stages[idxs[0]]
+            wspec = dataclasses.replace(wafer.spec, rows=st.wafer_rows,
+                                        cols=st.wafer_cols)
+            wafers.append(Wafer(wspec, frozenset(fd), frozenset(fl)))
+        st0 = new_plan.stages[0]
+        key = multiwafer_cache_key(
+            plan.arch, plan.batch, plan.seq, wafers, engine=engine,
+            space=space,
+            knobs=(st0.stream, st0.bidirectional, st0.stream_dtype,
+                   st0.remat, plan.inter_wafer_bw),
+            upper=tuple(tuple(u) for u in plan.solver.get("upper", ())))
+        new_plan.dump(os.path.join(cache_dir, f"mwplan_{key}.json"))
+    return new_plan

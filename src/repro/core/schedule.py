@@ -1,6 +1,8 @@
-"""Tensor-stream orchestration schedules (paper §V, Alg. 1).
+"""Tensor-stream and pipeline orchestration schedules (paper §V, Alg. 1
+and the multi-wafer pipeline level of §VIII-E).
 
-Two schedule families are modelled:
+Four schedule families are modelled — two intra-wafer tensor-stream
+schedules and two inter-wafer pipeline schedules:
 
 * ``line_schedule(N)`` — the paper's Bidirectional Tensor Stream Orchestration
   (Alg. 1) for an *open line* of dies (a wafer row has no wrap-around link).
@@ -16,10 +18,21 @@ Two schedule families are modelled:
   naive unidirectional TSPP ring (one block per round, N−1 shifts, requires
   the wrap link).
 
-Both are *executable* descriptions: :func:`simulate` runs a schedule on a
-virtual die array and checks feasibility (a die only ever computes/relays a
-block it holds), the one-hop property, coverage (every die computes every
-block exactly once) and peak buffer occupancy.  The property tests in
+* ``gpipe_schedule(pp, n_micro)`` / ``one_f_one_b_schedule(pp, n_micro)``
+  — inter-wafer pipeline parallelism over ``pp`` stages and ``n_micro``
+  microbatches.  GPipe flushes: every stage runs all forwards, then all
+  backwards (peak ``n_micro`` in-flight microbatches on stage 0); 1F1B
+  (PipeDream-flush) interleaves one backward per forward after a
+  per-stage warmup, capping in-flight activations at ``min(pp − s,
+  n_micro)`` with the same bubble fraction.
+
+All are *executable* descriptions: :func:`simulate` runs a tensor-stream
+schedule on a virtual die array and checks feasibility (a die only ever
+computes/relays a block it holds), the one-hop property, coverage (every
+die computes every block exactly once) and peak buffer occupancy;
+:func:`simulate_pipeline` replays a pipeline schedule and checks the
+stage/microbatch dependency order, per-slot exclusivity, coverage, bubble
+fraction and peak in-flight microbatches per stage.  The property tests in
 ``tests/test_schedule.py`` sweep these with hypothesis.
 """
 
@@ -227,3 +240,221 @@ def tail_latency_rounds(n: int, topology: str, bidirectional: bool) -> int:
     if topology == "line" and not bidirectional:
         return n - 1
     return 1
+
+
+# ---------------------------------------------------------------------------
+# Inter-wafer pipeline schedules (multi-wafer level, §VIII-E)
+# ---------------------------------------------------------------------------
+
+PIPELINE_FAMILIES = ("gpipe", "1f1b")
+
+
+@dataclass(frozen=True)
+class PipeEvent:
+    t: int  # slot index (one slot = one fwd or one bwd of one microbatch)
+    stage: int
+    kind: str  # "fwd" | "bwd"
+    micro: int
+
+
+@dataclass
+class PipelineSchedule:
+    n_stages: int
+    n_micro: int
+    family: str  # "gpipe" | "1f1b"
+    n_slots: int
+    events: list[PipeEvent] = field(default_factory=list)
+
+    def ops_at(self, t: int) -> list[PipeEvent]:
+        return [e for e in self.events if e.t == t]
+
+    def stage_ops(self, stage: int) -> list[PipeEvent]:
+        return sorted((e for e in self.events if e.stage == stage),
+                      key=lambda e: e.t)
+
+
+def _run_pipeline(pp: int, n_micro: int, family: str) -> PipelineSchedule:
+    """Greedy slot-by-slot executor that realises a pipeline policy.
+
+    Dependencies (both families): ``fwd(s, m)`` needs ``fwd(s−1, m)`` done
+    in an earlier slot; ``bwd(s, m)`` needs ``fwd(s, m)`` and
+    ``bwd(s+1, m)`` done in earlier slots.  Forwards run in microbatch
+    order (FIFO streams between stages).
+
+    * gpipe — a stage prefers forwards and only starts backwards once all
+      its forwards are done (the flush); backwards drain LIFO (freshest
+      activations first), giving the canonical 2·(n_micro+pp−1) slots and
+      ``n_micro`` peak in-flight microbatches.
+    * 1f1b — stage ``s`` holds at most ``min(pp − s, n_micro)``
+      microbatches in flight: once at the cap it waits for a backward
+      rather than running ahead, which caps activation memory at the same
+      total slot count (backwards drain FIFO).
+    """
+    if pp < 1 or n_micro < 1:
+        raise ValueError("pipeline needs pp >= 1 and n_micro >= 1")
+    fwd_done: list[dict[int, int]] = [{} for _ in range(pp)]  # micro -> slot
+    bwd_done: list[dict[int, int]] = [{} for _ in range(pp)]
+    events: list[PipeEvent] = []
+    t = 0
+    total = 2 * pp * n_micro
+    limit = [min(pp - s, n_micro) for s in range(pp)]
+    while len(events) < total:
+        for s in range(pp):
+            nf, nb = len(fwd_done[s]), len(bwd_done[s])
+            can_fwd = nf < n_micro and (
+                s == 0 or fwd_done[s - 1].get(nf, t) < t)
+            # backwards drain LIFO under gpipe, FIFO under 1f1b
+            bm = (nf - 1 - nb) if family == "gpipe" else nb
+            can_bwd = nb < nf and bm in fwd_done[s] \
+                and fwd_done[s][bm] < t \
+                and (s == pp - 1 or bwd_done[s + 1].get(bm, t) < t)
+            if family == "gpipe":
+                do_bwd = can_bwd and nf == n_micro
+                do_fwd = not do_bwd and can_fwd
+            else:  # 1f1b: respect the in-flight cap, prefer bwd at the cap
+                at_cap = nf - nb >= limit[s]
+                do_bwd = can_bwd and (at_cap or nf == n_micro)
+                do_fwd = not do_bwd and can_fwd and not at_cap
+            if do_bwd:
+                events.append(PipeEvent(t, s, "bwd", bm))
+                bwd_done[s][bm] = t
+            elif do_fwd:
+                events.append(PipeEvent(t, s, "fwd", nf))
+                fwd_done[s][nf] = t
+        t += 1
+        if t > 4 * total + 8:  # policy deadlock guard (should never fire)
+            raise RuntimeError(f"pipeline schedule did not converge "
+                               f"(pp={pp}, n_micro={n_micro}, {family})")
+    return PipelineSchedule(pp, n_micro, family, t, events)
+
+
+def gpipe_schedule(pp: int, n_micro: int) -> PipelineSchedule:
+    """GPipe: all forwards, flush, all backwards (paper baselines)."""
+    return _run_pipeline(pp, n_micro, "gpipe")
+
+
+def one_f_one_b_schedule(pp: int, n_micro: int) -> PipelineSchedule:
+    """Non-interleaved 1F1B (PipeDream-flush): same bubble as GPipe, peak
+    in-flight activations capped at ``min(pp − s, n_micro)`` per stage."""
+    return _run_pipeline(pp, n_micro, "1f1b")
+
+
+def pipeline_schedule(family: str, pp: int, n_micro: int) -> PipelineSchedule:
+    if family not in PIPELINE_FAMILIES:
+        raise ValueError(f"unknown pipeline family {family!r} "
+                         f"(expected one of {PIPELINE_FAMILIES})")
+    return _run_pipeline(pp, n_micro, family)
+
+
+@dataclass
+class PipeReport:
+    ok: bool
+    n_slots: int
+    bubble: float  # idle fraction of stage-slots
+    peak_inflight: int  # max over stages
+    inflight_per_stage: tuple[int, ...]
+    errors: list[str] = field(default_factory=list)
+
+
+def simulate_pipeline(sched: PipelineSchedule) -> PipeReport:
+    """Replay a pipeline schedule and verify its invariants: dependency
+    order, one op per stage per slot, forward FIFO order, coverage (every
+    stage runs fwd+bwd of every microbatch exactly once), plus bubble and
+    peak-in-flight accounting."""
+    pp, nm = sched.n_stages, sched.n_micro
+    errors: list[str] = []
+    f_slot: list[dict[int, int]] = [{} for _ in range(pp)]
+    b_slot: list[dict[int, int]] = [{} for _ in range(pp)]
+    by_slot: dict[int, list[PipeEvent]] = {}
+    for e in sched.events:
+        if not (0 <= e.stage < pp and 0 <= e.micro < nm):
+            errors.append(f"event out of range: {e}")
+            continue
+        if not (0 <= e.t < sched.n_slots):
+            errors.append(f"slot out of range: {e}")
+        by_slot.setdefault(e.t, []).append(e)
+        tgt = f_slot if e.kind == "fwd" else b_slot
+        if e.micro in tgt[e.stage]:
+            errors.append(f"duplicate {e.kind} of micro {e.micro} "
+                          f"on stage {e.stage}")
+        tgt[e.stage][e.micro] = e.t
+    for t in sorted(by_slot):
+        seen_stage: set[int] = set()
+        for e in by_slot[t]:
+            if e.stage in seen_stage:
+                errors.append(f"t={t} stage{e.stage} runs two ops")
+            seen_stage.add(e.stage)
+            if e.kind == "fwd":
+                if e.stage > 0 and f_slot[e.stage - 1].get(e.micro, t) >= t:
+                    errors.append(f"t={t} stage{e.stage} fwd micro "
+                                  f"{e.micro} before upstream fwd")
+            else:
+                if f_slot[e.stage].get(e.micro, t) >= t:
+                    errors.append(f"t={t} stage{e.stage} bwd micro "
+                                  f"{e.micro} before its own fwd")
+                if e.stage < pp - 1 \
+                        and b_slot[e.stage + 1].get(e.micro, t) >= t:
+                    errors.append(f"t={t} stage{e.stage} bwd micro "
+                                  f"{e.micro} before downstream bwd")
+    for s in range(pp):
+        if set(f_slot[s]) != set(range(nm)):
+            errors.append(f"stage{s} missing fwd micros "
+                          f"{sorted(set(range(nm)) - set(f_slot[s]))}")
+        if set(b_slot[s]) != set(range(nm)):
+            errors.append(f"stage{s} missing bwd micros "
+                          f"{sorted(set(range(nm)) - set(b_slot[s]))}")
+        fwd_order = [m for _, m in sorted((t, m)
+                                          for m, t in f_slot[s].items())]
+        if fwd_order != sorted(fwd_order):
+            errors.append(f"stage{s} forwards out of FIFO order")
+    # in-flight microbatches per stage: fwd done, bwd not yet done
+    inflight = []
+    for s in range(pp):
+        peak, cur = 0, 0
+        marks = sorted([(t, +1) for t in f_slot[s].values()]
+                       + [(t, -1) for t in b_slot[s].values()])
+        for _, d in marks:
+            cur += d
+            peak = max(peak, cur)
+        inflight.append(peak)
+    busy = len(sched.events)
+    bubble = 1.0 - busy / max(sched.n_slots * pp, 1)
+    return PipeReport(
+        ok=not errors,
+        n_slots=sched.n_slots,
+        bubble=bubble,
+        peak_inflight=max(inflight, default=0),
+        inflight_per_stage=tuple(inflight),
+        errors=errors[:20],
+    )
+
+
+def pipeline_bubble_fraction(pp: int, n_micro: int) -> float:
+    """Canonical GPipe/1F1B bubble fraction: (pp−1)/(n_micro+pp−1)."""
+    return (pp - 1) / (n_micro + pp - 1)
+
+
+def pipeline_step_time(sched: PipelineSchedule,
+                       stage_fwd_s, stage_bwd_s,
+                       p2p_s: float = 0.0) -> float:
+    """Wall-clock of one pipeline step by walking the schedule's slots.
+
+    ``stage_fwd_s`` / ``stage_bwd_s`` are per-stage per-microbatch compute
+    times (scalars broadcast to all stages); ``p2p_s`` is the inter-stage
+    boundary-activation transfer per microbatch, paid on every op (the
+    send/recv of the slot's microbatch is serialized with its compute —
+    the conservative, non-overlapped model).  Slots are synchronous: a
+    slot lasts as long as its slowest stage, which is how degraded (or
+    unevenly loaded) wafers gate the whole pipeline.
+    """
+    pp = sched.n_stages
+    if not isinstance(stage_fwd_s, (list, tuple)):
+        stage_fwd_s = [float(stage_fwd_s)] * pp
+    if not isinstance(stage_bwd_s, (list, tuple)):
+        stage_bwd_s = [float(stage_bwd_s)] * pp
+    by_slot: dict[int, float] = {}
+    for e in sched.events:
+        dur = (stage_fwd_s[e.stage] if e.kind == "fwd"
+               else stage_bwd_s[e.stage]) + p2p_s
+        by_slot[e.t] = max(by_slot.get(e.t, 0.0), dur)
+    return sum(by_slot.values())

@@ -68,5 +68,39 @@ def make_plan_mesh(plan, devices: Optional[Sequence] = None) -> Mesh:
     return compat.make_mesh((data, model), ("data", "model"), devices=devs)
 
 
+def stage_device_partition(plan, n_devices: int) -> list[list[int]]:
+    """Partition ``n_devices`` device ranks into one contiguous block per
+    pipeline stage of a :class:`~repro.core.plan.MultiWaferPlan`.
+
+    At full scale (one device per solved die) each stage gets exactly as
+    many devices as its die subset; at reduced scale (CPU smoke, elastic)
+    the blocks shrink proportionally, never below one device per stage.
+    """
+    from repro.wafer.solver import apportion
+    pp = plan.pp
+    if n_devices < pp:
+        raise ValueError(f"{n_devices} devices cannot host a pp={pp} "
+                         f"pipeline (one device per stage minimum)")
+    sizes = [len(s.alive_dies) for s in plan.stages]
+    cuts = sizes if n_devices == sum(sizes) \
+        else apportion(n_devices, sizes)
+    out, lo = [], 0
+    for c in cuts:
+        out.append(list(range(lo, lo + c)))
+        lo += c
+    return out
+
+
+def make_stage_submeshes(plan, devices: Optional[Sequence] = None) \
+        -> list[Mesh]:
+    """One (data, model) mesh per pipeline stage, each built from the
+    stage's own :class:`WaferPlan` (degrees + snake device order) over its
+    block of the device partition."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    blocks = stage_device_partition(plan, len(devs))
+    return [make_plan_mesh(stage, devices=[devs[i] for i in block])
+            for stage, block in zip(plan.stages, blocks)]
+
+
 def dist_for(mesh) -> Dist:
     return Dist(mesh)

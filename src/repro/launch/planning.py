@@ -45,3 +45,38 @@ def resolve_plan(cfg, batch: int, seq: int, *,
         else f"solved fresh ({solves} solver call)"
     print(f"[plan] {src}: hash {plan.plan_hash}")
     return plan
+
+
+def resolve_multiwafer_plan(cfg, batch: int, seq: int, *, n_wafers: int,
+                            plan_path: Optional[str] = None,
+                            cache_dir: Optional[str] = None,
+                            failed_dies: Optional[str] = None,
+                            fail_wafer: int = 0,
+                            remat: bool = True) -> planlib.MultiWaferPlan:
+    """Multi-wafer analogue of :func:`resolve_plan`: ``--plan`` file wins;
+    otherwise compile (or hit the fault-tuple-keyed cache) for ``n_wafers``
+    wafers.  ``failed_dies`` marks dies dead on wafer ``fail_wafer`` —
+    the cache key changes for that wafer only, so only its stages
+    re-solve (via the upper solve level's per-stage memoization)."""
+    from repro.wafer.topology import Wafer, WaferSpec
+
+    if plan_path:
+        if failed_dies:
+            print(f"[plan] WARNING: --failed-dies {failed_dies} is ignored "
+                  f"when an explicit --plan file is given")
+        plan = planlib.MultiWaferPlan.load(plan_path)
+        print(f"[plan] loaded {plan_path} (hash {plan.plan_hash})")
+        return plan
+    wafers = [Wafer(WaferSpec()) for _ in range(n_wafers)]
+    if failed_dies:
+        dead = [int(x) for x in failed_dies.split(",") if x]
+        wafers[fail_wafer] = wafers[fail_wafer].with_faults(dies=dead)
+    before = dict(planlib.PLAN_STATS)
+    plan = planlib.compile_multiwafer_plan(wafers, cfg, batch, seq,
+                                           arch=cfg.name,
+                                           cache_dir=cache_dir, remat=remat)
+    hit = planlib.PLAN_STATS["cache_hits"] > before["cache_hits"]
+    src = "cache hit (solver skipped)" if hit else "solved fresh"
+    print(f"[plan] {src}: hash {plan.plan_hash} "
+          f"(pp={plan.pp}, n_micro={plan.n_micro}, {plan.family})")
+    return plan

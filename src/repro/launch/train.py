@@ -12,6 +12,21 @@ order, and threads the plan's ParallelConfig into the step.  ``--plan
 PATH`` replays an explicit plan file.  The legacy ``--mesh``/``--strategy``
 flags remain for hand-driven runs.
 
+Multi-wafer pipeline launch (one process per stage)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        --reduced --wafers 2 --stage 0 --steps 5 --batch 8 --seq 128
+
+``--wafers N`` compiles (or cache-loads) a
+:class:`~repro.core.plan.MultiWaferPlan` — the upper DLWS level picks the
+pipeline degree, layer split, microbatch count and GPipe/1F1B family —
+and this process executes stage ``--stage``: its model slice is the
+plan's layer split, its mesh is the stage's own WaferPlan.  A degraded
+wafer (``--failed-dies`` + ``--fail-wafer``) misses the fault-tuple cache
+and re-solves only the affected stage.  The checkpoint manifest records
+the multi-wafer plan hash + stage index, so elastic restarts detect both
+plan drift and stage mismatch.
+
 Production behavior (also exercised by tests/test_train_infra.py):
 
 * periodic atomic checkpoints (keep-k) via repro.train.checkpoint, with
@@ -58,7 +73,30 @@ def setup(args):
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     plan = None
-    if args.plan or args.auto_plan:
+    if getattr(args, "wafers", 1) > 1:
+        # multi-wafer pipeline launch: this process runs ONE stage of the
+        # pipeline (--stage); the MultiWaferPlan fixes the layer split and
+        # every stage's mesh, so all ranks agree on the partition
+        from dataclasses import replace as dc_replace
+
+        from repro.launch.mesh import make_plan_mesh
+        from repro.launch.planning import resolve_multiwafer_plan
+        plan = resolve_multiwafer_plan(
+            cfg, args.batch, args.seq, n_wafers=args.wafers,
+            plan_path=args.plan, cache_dir=args.plan_cache,
+            failed_dies=args.failed_dies, fail_wafer=args.fail_wafer,
+            remat=not args.reduced)
+        print(plan.summary())
+        if not 0 <= args.stage < plan.pp:
+            raise SystemExit(f"--stage {args.stage} out of range for "
+                             f"pp={plan.pp}")
+        stage_plan = plan.stages[args.stage]
+        cfg = dc_replace(cfg, n_layers=plan.stage_layers[args.stage])
+        mesh = make_plan_mesh(stage_plan)
+        par = stage_plan.parallel_config()
+        if args.reduced and par.remat:
+            par = dc_replace(par, remat=False)
+    elif args.plan or args.auto_plan:
         from repro.launch.mesh import make_plan_mesh
         from repro.launch.planning import resolve_plan
         plan = resolve_plan(cfg, args.batch, args.seq, plan_path=args.plan,
@@ -86,8 +124,15 @@ def train(args) -> dict:
 
     cfg, mesh, par, plan = setup(args)
     dist, bundle, data = build(cfg, mesh, par, args.batch, args.seq)
-    ckpt_meta = {"plan_hash": plan.plan_hash,
-                 "plan_degrees": list(plan.degrees_tuple())} if plan else {}
+    ckpt_meta = {}
+    if plan is not None:
+        ckpt_meta["plan_hash"] = plan.plan_hash
+        if hasattr(plan, "stages"):  # MultiWaferPlan: record this rank's
+            ckpt_meta["stage"] = args.stage  # stage so elastic restarts
+            ckpt_meta["pp"] = plan.pp  # restore the right pipeline slice
+            ckpt_meta["stage_layers"] = list(plan.stage_layers)
+        else:
+            ckpt_meta["plan_degrees"] = list(plan.degrees_tuple())
 
     start_step = 0
     params = opt_state = None
@@ -160,6 +205,15 @@ def main():
     ap.add_argument("--failed-dies", default=None,
                     help="comma-separated die ids to mark dead before "
                          "planning (degraded-wafer launches)")
+    ap.add_argument("--wafers", type=int, default=1,
+                    help="pipeline over N wafers (compiles/loads a "
+                         "MultiWaferPlan; this process runs --stage)")
+    ap.add_argument("--stage", type=int, default=0,
+                    help="pipeline stage this process executes "
+                         "(multi-wafer launches)")
+    ap.add_argument("--fail-wafer", type=int, default=0,
+                    help="wafer index --failed-dies applies to "
+                         "(multi-wafer launches)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--keep", type=int, default=3)

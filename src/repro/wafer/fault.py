@@ -101,6 +101,37 @@ def recover(wafer: Wafer, report: FaultReport, cfg: ModelConfig, batch: int,
     return ctx.evaluate(deg, final=True)
 
 
+def recover_multiwafer(plan, cfg: ModelConfig, wafer_idx: int,
+                       report: FaultReport, *,
+                       wafer: Optional[Wafer] = None,
+                       cache_dir: Optional[str] = None):
+    """Multi-wafer recovery (pipeline level): a fault on one wafer
+    re-solves ONLY that wafer's stage(s), leaving every other stage's
+    :class:`~repro.core.plan.WaferPlan` untouched.
+
+    Delegates to :func:`repro.core.plan.replan_stage`, which re-solves the
+    degraded stage on its surviving dies and — if the stage no longer fits
+    under the pipeline's in-flight activation memory — migrates layers to
+    the stage with the most headroom (the receiving stage keeps its solved
+    degrees; only ``stage_layers`` and advisory predictions change).
+    Returns the new :class:`~repro.core.plan.MultiWaferPlan`.
+
+    Pass ``wafer`` (the live Wafer the report came from) when the
+    deployment runs a non-default :class:`WaferSpec` — the plan records
+    only the grid shape, so reconstructing the wafer from the plan falls
+    back to Table-I hardware constants.
+    """
+    from repro.core.plan import replan_stage
+    new_plan = plan
+    for s in plan.stages_of_wafer(wafer_idx):
+        base = wafer if wafer is not None \
+            else new_plan.stages[s].wafer()
+        degraded = base.with_faults(report.failed_dies, report.failed_links)
+        new_plan = replan_stage(new_plan, cfg, s, degraded,
+                                cache_dir=cache_dir)
+    return new_plan
+
+
 def throughput_vs_fault_rate(wafer: Wafer, cfg: ModelConfig, batch: int,
                              seq: int, *, kind: str = "core",
                              rates=(0.0, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3,

@@ -988,6 +988,37 @@ def simulate_step_reference(wafer: Wafer, cfg: ModelConfig, batch: int,
     )
 
 
+def memory_components(ctx: StepCostContext,
+                      deg: ParallelDegrees) -> tuple[float, float, int]:
+    """``(fixed_bytes, act_full_bytes, seqs_per_die)`` for one candidate —
+    a scalar mirror of the engine's memory model (``fixed + act_full /
+    n_micro == mem_per_die``, pinned by tests/test_solver_fast.py).
+
+    The multi-wafer pipeline level needs the split because pipeline
+    microbatching changes only the *activation* term: a stage holding
+    ``k`` in-flight microbatches out of ``n_micro`` keeps
+    ``fixed + act_full · k / n_micro`` bytes per die (GPipe k = n_micro,
+    1F1B k = min(pp − s, n_micro)).
+    """
+    cfg, spec, n_dies = ctx.cfg, ctx.spec, ctx.n_dies
+    zero = ctx.fsdp or deg.tatp > 1
+    w_shard = deg.tp * deg.tatp * (n_dies if ctx.fsdp else 1)
+    w_bytes = BYTES_W * ctx.p_total / min(w_shard, n_dies)
+    g_bytes = BYTES_W * ctx.p_total / min(w_shard, n_dies)
+    opt_shard = min(w_shard * (deg.dp if zero else 1), n_dies)
+    opt_bytes = BYTES_OPT * ctx.p_total / opt_shard
+    act_tokens = ctx.tokens / (deg.dp * deg.sp * deg.tatp)
+    act_unit = ACT_COEFF * act_tokens * cfg.d_model * BYTES_ACT * ctx.n_l
+    if deg.tp > 1 and not deg.seq_par:
+        act_full = act_unit * (0.3 + 0.7 / deg.tp)
+    else:
+        act_full = act_unit / deg.tp
+    transient = BYTES_W * ctx.p_layer if ctx.fsdp else 0.0
+    fixed = w_bytes + g_bytes + opt_bytes + transient
+    seqs_per_die = max(1, int(ctx.batch // deg.dp))
+    return fixed, act_full, seqs_per_die
+
+
 # ---------------------------------------------------------------------------
 # strategy presets (the paper's six baselines + TEMP)
 # ---------------------------------------------------------------------------

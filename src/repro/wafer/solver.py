@@ -28,13 +28,17 @@ import itertools
 import random
 import time
 from dataclasses import dataclass, field, replace
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.configs.base import ModelConfig
-from repro.wafer.simulator import (ParallelDegrees, SimResult,
+from repro.wafer.simulator import (BYTES_ACT, ParallelDegrees, SimResult,
                                    StepCostContext, candidate_degrees,
-                                   divisors, simulate_batch)
+                                   divisors, memory_components,
+                                   simulate_batch)
 from repro.wafer.topology import Wafer
+
+# paper Takeaway 3: ~9 TB/s aggregate bandwidth between adjacent wafers
+INTER_WAFER_BW = 9e12
 
 
 @dataclass
@@ -148,7 +152,12 @@ def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
         return res.throughput if res.ok else -1.0
 
     def legal(deg):
-        return deg.total <= n and n % deg.total == 0
+        # subset totals are legal (spare dies idle) — matching Tier-B's
+        # semantics and dp_refine's candidate grids.  Requiring
+        # ``n % deg.total == 0`` froze the GA on degraded wafers with
+        # awkward alive counts (e.g. 47 dies): every mutation/crossover
+        # from a subset-total parent collapsed back to the parent.
+        return deg.total <= n
 
     def mutate(deg):
         # swap move: trade a factor of 2 between two dimensions so the die
@@ -216,16 +225,22 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
 
 def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                engine: str = "tcme", space: str = "temp",
-               per_op: bool = True) -> SolveResult:
+               per_op: bool = True,
+               dies: Optional[list[int]] = None) -> SolveResult:
     """Exhaustive joint search (the ILP stand-in): enumerates the full
     configuration space — per-operator-class assignments when ``per_op`` —
     which blows up combinatorially exactly as §III challenge 3 describes.
     Every assignment is re-simulated (no memoization — that's the point),
-    though in batched chunks so both searches run on the same engine."""
+    though in batched chunks so both searches run on the same engine.
+
+    ``dies`` restricts the search to an alive-die subset, mirroring
+    ``dlws_solve(dies=...)`` — degraded-wafer search-time comparisons must
+    score the same problem as the DLWS run they are compared against (the
+    context used to be built on the full wafer regardless)."""
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
     t0 = time.time()
-    n = len(wafer.alive_dies())
+    n = len(dies) if dies is not None else len(wafer.alive_dies())
     cands = candidate_degrees(n, spec["allow"], spec["seq_par"])
     subs = partition_graph(cfg) if per_op else ["all"]
     best: Optional[SimResult] = None
@@ -234,7 +249,8 @@ def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
     space_size = len(cands) ** len(subs)
     cap = 50_000
     chunk_n = 1024
-    ctx = StepCostContext(wafer, cfg, batch, seq, engine, fsdp=spec["fsdp"])
+    ctx = StepCostContext(wafer, cfg, batch, seq, engine, fsdp=spec["fsdp"],
+                          dies=dies)
     # joint assignment over operator classes (cost decomposes, but the ILP
     # enumerates the product space regardless — that's the point)
     chunk: list[ParallelDegrees] = []
@@ -263,3 +279,268 @@ def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                        space_size=space_size,
                        projected_full_time_s=dt * space_size
                        / max(evaluated, 1))
+
+
+# ---------------------------------------------------------------------------
+# upper level: multi-wafer pipeline solve (§VIII-E)
+# ---------------------------------------------------------------------------
+
+
+def stage_config(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    """A pipeline-stage view of ``cfg`` holding ``n_layers`` layers.  The
+    name is disambiguated so per-name caches (plan cache, fault ctx_cache)
+    never alias stages with different layer counts."""
+    return replace(cfg, name=f"{cfg.name}@L{n_layers}", n_layers=n_layers)
+
+
+def apportion(total: int, weights: Sequence[float],
+              min_per: int = 1) -> tuple[int, ...]:
+    """Apportion ``total`` units over bins proportionally to ``weights``
+    (largest-remainder method; every bin gets at least ``min_per``).
+    Shared by the layer → stage split and the launch-side device → stage
+    partition."""
+    k = len(weights)
+    if total < k * min_per:
+        raise ValueError(f"{total} units cannot fill {k} bins "
+                         f"(min {min_per} each)")
+    total_w = sum(weights) or k
+    raw = [total * w / total_w for w in weights]
+    out = [max(min_per, int(r)) for r in raw]
+    rema = sorted(range(k), key=lambda i: raw[i] - int(raw[i]), reverse=True)
+    i = 0
+    while sum(out) < total:
+        out[rema[i % k]] += 1
+        i += 1
+    while sum(out) > total:  # max(min_per, ...) may have over-allocated
+        j = max(range(k), key=lambda s: (out[s], -s))
+        out[j] -= 1
+    return tuple(out)
+
+
+def split_layers(n_layers: int, weights: Sequence[float]) -> tuple[int, ...]:
+    """Apportion ``n_layers`` over stages proportionally to ``weights``
+    (largest-remainder method; every stage gets at least one layer)."""
+    if n_layers < len(weights):
+        raise ValueError(f"{n_layers} layers cannot fill "
+                         f"{len(weights)} stages")
+    return apportion(n_layers, weights)
+
+
+def stage_die_split(wafer: Wafer, n_stages: int,
+                    dies: Optional[Sequence[int]] = None) \
+        -> list[tuple[int, ...]]:
+    """Split a wafer's alive dies into ``n_stages`` contiguous chunks of
+    the snake order (so every stage's TATP rings stay embeddable on
+    physically adjacent dies, holes skipped)."""
+    from repro.wafer import mapping as wmap
+    live = set(dies) if dies is not None else set(wafer.alive_dies())
+    order = [d for d in wmap.snake_order(wafer.spec.rows, wafer.spec.cols)
+             if d in live]
+    n = len(order)
+    if n < n_stages:
+        raise ValueError(f"{n} alive dies cannot host {n_stages} stages")
+    bounds = [round(i * n / n_stages) for i in range(n_stages + 1)]
+    return [tuple(order[bounds[i]:bounds[i + 1]]) for i in range(n_stages)]
+
+
+@dataclass
+class MultiWaferSolveResult:
+    """One solved multi-wafer pipeline configuration (upper DLWS level)."""
+    stages: list[SolveResult]  # per-stage intra-wafer solves
+    stage_layers: tuple[int, ...]
+    stage_wafer: tuple[int, ...]  # stage -> wafer index
+    stage_dies: tuple[tuple[int, ...], ...]  # stage -> die subset
+    pp: int
+    n_micro: int
+    family: str  # "gpipe" | "1f1b"
+    step_time: float
+    throughput: float  # tokens/s through the whole pipeline
+    bubble: float
+    peak_inflight: int
+    stage_mem: tuple[float, ...]  # pipeline-adjusted bytes/die per stage
+    oom: bool
+    search_time_s: float = 0.0
+    evaluated: int = 0  # cost-model evaluations across all stage solves
+    candidates: int = 0  # upper-level (split, family, n_micro) combos
+
+    @property
+    def ok(self) -> bool:
+        return not self.oom and all(s.best is not None and s.best.ok
+                                    for s in self.stages)
+
+
+def _micro_candidates(batch: int, cands: Sequence[int]) -> list[int]:
+    out = [m for m in cands if 1 <= m <= batch and batch % m == 0]
+    if not out:
+        # no candidate divides the batch: fall back to the largest true
+        # divisor ≤ 8 so microbatches stay equal-sized (the schedule model
+        # assumes them so)
+        out = [max(d for d in divisors(batch) if d <= 8)]
+    return out
+
+
+def dlws_solve_multiwafer(
+        wafers: Sequence[Wafer], cfg: ModelConfig, batch: int, seq: int, *,
+        engine: str = "tcme", space: str = "temp", seed: int = 0,
+        dies_per_wafer: Optional[Sequence[Optional[Sequence[int]]]] = None,
+        inter_wafer_bw: float = INTER_WAFER_BW,
+        pp_multipliers: Sequence[int] = (1,),
+        n_micro_candidates: Sequence[int] = (4, 8, 16, 32),
+        families: Sequence[str] = ("gpipe", "1f1b"),
+        max_rebalance: int = 8) -> MultiWaferSolveResult:
+    """Upper DLWS level: solve pipeline parallelism across ``wafers``.
+
+    Chooses the pipeline degree (``n_wafers × mult`` for each multiplier),
+    the layer → stage split (die-count-proportional, so a degraded wafer
+    automatically gets fewer layers), the microbatch count and the
+    schedule family, calling the existing per-wafer :func:`dlws_solve` for
+    every distinct stage sub-problem and scoring each candidate pipeline
+    with the executable schedule model in :mod:`repro.core.schedule`.
+
+    With ``mult > 1`` the stages sharing a wafer each get a contiguous
+    *subset* of its dies (the baselines' regime: shorter stages, more of
+    them, more bubbles) — which is why the ``dies=`` plumbing through the
+    cost engine matters here.  Stage boundaries crossing wafers and
+    boundaries internal to a wafer are both charged at ``inter_wafer_bw``
+    (conservative: the on-wafer boundary is at least as fast).
+
+    Memory feasibility is re-judged at the pipeline level: stage ``s``
+    holds ``inflight_s`` of ``n_micro`` microbatches' activations
+    (:func:`repro.wafer.simulator.memory_components` splits the solver's
+    memory prediction), so 1F1B can rescue a configuration GPipe cannot
+    fit.  If no candidate is feasible, layers migrate away from the worst
+    over-capacity stage (≤ ``max_rebalance`` moves) before giving up.
+    """
+    from repro.core.schedule import pipeline_schedule, simulate_pipeline
+    from repro.wafer.simulator import STRATEGY_SPACES
+    t0 = time.time()
+    n_wafers = len(wafers)
+    if n_wafers < 1:
+        raise ValueError("need at least one wafer")
+    spec = STRATEGY_SPACES[space]
+    micro_cands = _micro_candidates(batch, n_micro_candidates)
+    solve_cache: dict = {}
+    evaluated = 0
+
+    def stage_solve(widx: int, dies: tuple[int, ...], n_layers: int):
+        nonlocal evaluated
+        key = (widx, dies, n_layers)
+        got = solve_cache.get(key)
+        if got is None:
+            scfg = stage_config(cfg, n_layers)
+            sol = dlws_solve(wafers[widx], scfg, batch, seq, engine=engine,
+                             space=space, seed=seed, dies=list(dies))
+            ctx = StepCostContext(wafers[widx], scfg, batch, seq, engine,
+                                  fsdp=spec["fsdp"], dies=list(dies))
+            fixed, act_full, _ = memory_components(ctx, sol.config)
+            got = (sol, fixed, act_full)
+            solve_cache[key] = got
+            evaluated += sol.evaluated
+        return got
+
+    boundary_bytes = batch * seq * cfg.d_model * BYTES_ACT
+    best: Optional[MultiWaferSolveResult] = None
+    n_candidates = 0
+
+    def score(stage_wafer, stage_dies, layers, family, n_micro, sched_rep):
+        """Assemble + score one fully-specified pipeline candidate."""
+        nonlocal n_candidates
+        n_candidates += 1
+        sched, rep = sched_rep
+        pp = len(layers)
+        sols, mems = [], []
+        for s in range(pp):
+            sol, fixed, act_full = stage_solve(stage_wafer[s],
+                                               stage_dies[s], layers[s])
+            sols.append(sol)
+            mems.append(fixed + act_full * rep.inflight_per_stage[s]
+                        / n_micro)
+        caps = [wafers[stage_wafer[s]].spec.hbm_cap for s in range(pp)]
+        oom = any(m > c for m, c in zip(mems, caps)) \
+            or any(s.best is None or not s.best.ok for s in sols)
+        from repro.core.schedule import pipeline_step_time
+        half = [s.best.step_time / (2 * n_micro) if s.best else float("inf")
+                for s in sols]
+        p2p = boundary_bytes / n_micro / inter_wafer_bw if pp > 1 else 0.0
+        t_step = pipeline_step_time(sched, half, half, p2p)
+        thr = batch * seq / t_step if t_step > 0 else 0.0
+        return MultiWaferSolveResult(
+            stages=sols, stage_layers=tuple(layers),
+            stage_wafer=tuple(stage_wafer), stage_dies=tuple(stage_dies),
+            pp=pp, n_micro=n_micro, family=family,
+            step_time=t_step, throughput=thr, bubble=rep.bubble,
+            peak_inflight=rep.peak_inflight, stage_mem=tuple(mems),
+            oom=oom)
+
+    def better(a: MultiWaferSolveResult,
+               b: Optional[MultiWaferSolveResult]) -> bool:
+        if b is None:
+            return True
+        if a.oom != b.oom:
+            return not a.oom
+        if a.oom:  # least-bad: smallest worst-stage overshoot
+            return max(a.stage_mem) < max(b.stage_mem)
+        return a.throughput > b.throughput
+
+    for mult in pp_multipliers:
+        pp = n_wafers * mult
+        if pp > cfg.n_layers or pp < 1:
+            continue
+        stage_wafer, stage_dies = [], []
+        for w in range(n_wafers):
+            sub = dies_per_wafer[w] if dies_per_wafer is not None else None
+            for chunk in stage_die_split(wafers[w], mult, sub):
+                stage_wafer.append(w)
+                stage_dies.append(chunk)
+        weights = [len(d) for d in stage_dies]
+        splits = [split_layers(cfg.n_layers, weights)]
+        equal = split_layers(cfg.n_layers, [1.0] * pp)
+        if equal not in splits:
+            splits.append(equal)
+        scheds = {(f, m): (lambda sc: (sc, simulate_pipeline(sc)))(
+            pipeline_schedule(f, pp, m))
+            for f in families for m in micro_cands}
+        for layers in splits:
+            for (family, n_micro), sched_rep in scheds.items():
+                cand = score(stage_wafer, stage_dies, layers, family,
+                             n_micro, sched_rep)
+                if better(cand, best):
+                    best = cand
+
+    # memory-repair: migrate layers off the worst over-capacity stage
+    attempts = 0
+    while best is not None and best.oom and attempts < max_rebalance:
+        attempts += 1
+        caps = [wafers[best.stage_wafer[s]].spec.hbm_cap
+                for s in range(best.pp)]
+        over = [s for s in range(best.pp) if best.stage_mem[s] > caps[s]
+                and best.stage_layers[s] > 1]
+        if not over:
+            break
+        src = max(over, key=lambda s: best.stage_mem[s] - caps[s])
+        dst = min((s for s in range(best.pp) if s != src),
+                  key=lambda s: best.stage_mem[s] / caps[s], default=None)
+        if dst is None:
+            break
+        layers = list(best.stage_layers)
+        layers[src] -= 1
+        layers[dst] += 1
+        sched_rep = (pipeline_schedule(best.family, best.pp, best.n_micro),
+                     None)
+        sched_rep = (sched_rep[0], simulate_pipeline(sched_rep[0]))
+        cand = score(best.stage_wafer, best.stage_dies, tuple(layers),
+                     best.family, best.n_micro, sched_rep)
+        if better(cand, best):
+            best = cand
+        else:
+            break
+
+    if best is None:
+        raise ValueError(
+            f"no pipeline candidate fits: n_layers={cfg.n_layers} cannot "
+            f"fill pp in {[n_wafers * m for m in pp_multipliers]} stages "
+            f"(need pp <= n_layers)")
+    best.search_time_s = time.time() - t0
+    best.evaluated = evaluated
+    best.candidates = n_candidates
+    return best

@@ -1,6 +1,8 @@
-"""WaferPlan IR: JSON round-trip, plan-cache behaviour keyed on the
-alive-die subset, degraded-wafer re-planning, and the plan → mesh /
-ParallelConfig executable views."""
+"""WaferPlan / MultiWaferPlan IR: JSON round-trip, plan-cache behaviour
+keyed on the alive-die subset (single wafer) and the per-wafer fault
+tuple (multi-wafer), degraded-wafer re-planning with single-stage
+re-solve + layer rebalancing, and the plan → mesh / ParallelConfig
+executable views."""
 
 import json
 import os
@@ -8,8 +10,10 @@ import os
 import pytest
 
 from repro.configs.paper_models import TABLE_II
-from repro.core.plan import (PLAN_STATS, WaferPlan, compile_plan,
-                             plan_cache_key, reset_plan_stats)
+from repro.core.plan import (PLAN_STATS, MultiWaferPlan, WaferPlan,
+                             compile_multiwafer_plan, compile_plan,
+                             multiwafer_cache_key, plan_cache_key,
+                             replan_stage, reset_plan_stats)
 from repro.wafer.topology import Wafer, WaferSpec
 
 CFG, _ = TABLE_II["gpt3-6.7b"]
@@ -205,6 +209,149 @@ def test_wafer_roundtrip_from_plan(tmp_path):
     assert back.failed_dies == w.failed_dies
     assert back.failed_links == w.failed_links
     assert back.alive_dies() == w.alive_dies()
+
+
+# ---------------------------------------------------------------------------
+# multi-wafer plans (pipeline level)
+# ---------------------------------------------------------------------------
+
+
+def _compile_mw(wafers, tmp_path, **kw):
+    kw.setdefault("n_micro_candidates", (8,))
+    return compile_multiwafer_plan(wafers, CFG, BATCH, SEQ,
+                                   cache_dir=str(tmp_path), **kw)
+
+
+def test_multiwafer_json_roundtrip(tmp_path):
+    plan = _compile_mw([Wafer(WaferSpec()), Wafer(WaferSpec())], tmp_path)
+    again = MultiWaferPlan.loads(plan.dumps())
+    assert again == plan
+    assert again.plan_hash == plan.plan_hash
+    p = os.path.join(str(tmp_path), "mw.json")
+    plan.dump(p)
+    assert MultiWaferPlan.load(p) == plan
+    # nested stages survive as real WaferPlans
+    assert all(isinstance(s, WaferPlan) for s in again.stages)
+    assert sum(again.stage_layers) == CFG.n_layers
+
+
+def test_multiwafer_hash_ignores_telemetry(tmp_path):
+    plan = _compile_mw([Wafer(WaferSpec()), Wafer(WaferSpec())], tmp_path)
+    d = plan.to_dict()
+    d["predicted"] = {}
+    d["solver"] = {"evaluated": 1}
+    assert MultiWaferPlan.from_dict(d).plan_hash == plan.plan_hash
+    d["n_micro"] = plan.n_micro * 2  # executable surface -> hash changes
+    assert MultiWaferPlan.from_dict(d).plan_hash != plan.plan_hash
+
+
+def test_multiwafer_cache_hit_on_identical_fault_tuple(tmp_path):
+    wafers = [Wafer(WaferSpec()), Wafer(WaferSpec())]
+    p1 = _compile_mw(wafers, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 1
+    p2 = _compile_mw(wafers, tmp_path)
+    assert PLAN_STATS["solver_calls"] == 1  # solver NOT re-run
+    assert PLAN_STATS["cache_hits"] == 1
+    assert p2 == p1
+
+
+def test_multiwafer_cache_miss_when_any_wafer_degrades(tmp_path):
+    w0, w1 = Wafer(WaferSpec()), Wafer(WaferSpec())
+    p1 = _compile_mw([w0, w1], tmp_path)
+    p2 = _compile_mw([w0, w1.with_faults(dies=[3, 9])], tmp_path)
+    assert PLAN_STATS["solver_calls"] == 2  # degraded tuple -> re-solve
+    assert p2.plan_hash != p1.plan_hash
+    # only the degraded wafer's stage changed
+    assert p2.stages[0].plan_hash == p1.stages[0].plan_hash
+    assert p2.stages[1].plan_hash != p1.stages[1].plan_hash
+    assert 3 not in p2.stages[1].alive_dies
+    # key is order-sensitive per wafer, not globally pooled
+    k1 = multiwafer_cache_key("a", BATCH, SEQ, [w0, w1])
+    k2 = multiwafer_cache_key("a", BATCH, SEQ,
+                              [w0, w1.with_faults(dies=[3, 9])])
+    k3 = multiwafer_cache_key("a", BATCH, SEQ,
+                              [w0.with_faults(dies=[3, 9]), w1])
+    assert len({k1, k2, k3}) == 3
+
+
+def test_multiwafer_replan_touches_only_degraded_stage(tmp_path):
+    from repro.wafer.fault import FaultReport, recover_multiwafer
+    wafers = [Wafer(WaferSpec()), Wafer(WaferSpec())]
+    p1 = _compile_mw(wafers, tmp_path)
+    p2 = recover_multiwafer(p1, CFG, 1, FaultReport(failed_dies=[3, 9]),
+                            cache_dir=str(tmp_path))
+    assert p2.stages[0] == p1.stages[0]  # untouched, not just equal-hash
+    assert p2.stages[1] != p1.stages[1]
+    assert p2.stage_layers == p1.stage_layers  # no OOM -> no rebalancing
+    assert set(p2.stages[1].alive_dies) \
+        == set(p1.stages[1].alive_dies) - {3, 9}
+    assert not p2.predicted["oom"]
+
+
+def test_multiwafer_replan_rebalances_layers_on_oom(tmp_path):
+    """A heavily degraded stage that no longer fits sheds layers to the
+    stage with headroom; the receiving stage's WaferPlan stays untouched
+    (its layer count lives in ``stage_layers``, not in the stage plan)."""
+    spec = WaferSpec(hbm_cap=4e9)  # tight HBM so the probe is cheap
+    wafers = [Wafer(spec), Wafer(spec)]
+    p1 = _compile_mw(wafers, tmp_path)
+    assert not p1.predicted["oom"]
+    degraded = wafers[1].with_faults(dies=list(range(8, 32)))  # 8 dies left
+    p2 = replan_stage(p1, CFG, 1, degraded, cache_dir=str(tmp_path))
+    assert p2.stage_layers[1] < p1.stage_layers[1]  # layers migrated away
+    assert sum(p2.stage_layers) == CFG.n_layers
+    assert p2.solver["layers_moved"] > 0
+    assert not p2.predicted["oom"]  # rebalancing rescued the pipeline
+    assert p2.stages[0] == p1.stages[0]  # receiver's plan untouched
+    # feasibility is judged against the REAL (tight) caps on every stage,
+    # not the default spec WaferPlan.wafer() would reconstruct
+    assert p2.predicted["stage_hbm_cap"] == [4e9, 4e9]
+    for m, c in zip(p2.predicted["stage_mem"],
+                    p2.predicted["stage_hbm_cap"]):
+        assert m <= c
+
+
+def test_multiwafer_replan_publishes_degraded_cache_key(tmp_path):
+    """After a replan, a fresh compile on the same degraded wafer tuple
+    must hit the published entry (no re-solve) — and the healthy tuple's
+    entry must be left alone."""
+    wafers = [Wafer(WaferSpec()), Wafer(WaferSpec())]
+    p1 = _compile_mw(wafers, tmp_path)
+    solves_before = PLAN_STATS["solver_calls"]
+    degraded = wafers[1].with_faults(dies=[3, 9])
+    p2 = replan_stage(p1, CFG, 1, degraded, cache_dir=str(tmp_path))
+    hit = _compile_mw([wafers[0], degraded], tmp_path)
+    assert PLAN_STATS["solver_calls"] == solves_before  # cache answered
+    assert hit == p2
+    # the healthy tuple still replays the original plan
+    assert _compile_mw(wafers, tmp_path) == p1
+    assert PLAN_STATS["solver_calls"] == solves_before
+
+
+def test_multiwafer_plan_stage_submesh_partition(tmp_path):
+    from repro.launch.mesh import stage_device_partition
+    wafers = [Wafer(WaferSpec()), Wafer(WaferSpec()).with_faults(dies=[7])]
+    plan = _compile_mw(wafers, tmp_path)
+    sizes = [len(s.alive_dies) for s in plan.stages]
+    # full scale: each stage gets exactly its die count
+    blocks = stage_device_partition(plan, sum(sizes))
+    assert [len(b) for b in blocks] == sizes
+    flat = [i for b in blocks for i in b]
+    assert flat == list(range(sum(sizes)))  # contiguous, disjoint, total
+    # reduced scale: proportional, never empty
+    blocks = stage_device_partition(plan, 8)
+    assert sum(len(b) for b in blocks) == 8
+    assert all(b for b in blocks)
+    with pytest.raises(ValueError):
+        stage_device_partition(plan, plan.pp - 1)
+
+
+def test_multiwafer_schedule_is_executable(tmp_path):
+    from repro.core.schedule import simulate_pipeline
+    plan = _compile_mw([Wafer(WaferSpec()), Wafer(WaferSpec())], tmp_path)
+    rep = simulate_pipeline(plan.pipeline_schedule())
+    assert rep.ok, rep.errors
+    assert rep.peak_inflight <= plan.n_micro
 
 
 # ---------------------------------------------------------------------------

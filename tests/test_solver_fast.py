@@ -8,8 +8,9 @@ from repro.configs.paper_models import TABLE_II
 from repro.wafer.simulator import (STRATEGY_SPACES, ParallelDegrees,
                                    SimResult, StepCostContext, best_config,
                                    candidate_degrees, divisors,
-                                   simulate_batch, simulate_step,
-                                   simulate_step_reference, smap_config)
+                                   memory_components, simulate_batch,
+                                   simulate_step, simulate_step_reference,
+                                   smap_config)
 from repro.wafer.topology import Wafer, WaferSpec
 
 WAFER = Wafer(WaferSpec())
@@ -227,3 +228,83 @@ def test_fault_resolve_uses_degraded_subset():
     degraded = WAFER.with_faults(rep.failed_dies, rep.failed_links)
     assert res.ok
     assert res.degrees.total <= len(degraded.alive_dies())
+
+
+# ---------------------------------------------------------------------------
+# (d) degraded-wafer solver bugfixes (PR 3 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_ga_explores_subset_totals_on_degraded_wafer():
+    """47 alive dies (awkward prime count): dp_refine's candidate grids
+    allow subset totals (``rest·va·vb <= n``), so the GA's legality must
+    too.  The old ``n % deg.total == 0`` check made every mutation and
+    crossover from a subset-total parent collapse back to the parent —
+    the GA returned the seed verbatim and could never leave an infeasible
+    configuration."""
+    import random
+
+    from repro.wafer.solver import ga_refine
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    w = Wafer(WaferSpec(rows=6, cols=8)).with_faults(dies=[5])
+    assert len(w.alive_dies()) == 47
+    ctx = StepCostContext(w, cfg, 32, 2048, "tcme")
+    seed = ParallelDegrees(dp=32)  # subset total: 47 % 32 != 0
+    best = ga_refine(ctx, [seed], rng=random.Random(0))
+    res_seed, res_best = ctx.evaluate(seed), ctx.evaluate(best)
+    assert best != seed  # the GA actually moved off the seed
+    assert best.total <= 47
+    assert res_best.ok
+    assert res_best.throughput > res_seed.throughput
+
+
+def test_ilp_search_threads_die_subset():
+    """Degraded-wafer search-time comparisons must score the same problem
+    as ``dlws_solve(dies=...)``: the ILP context used to be built on the
+    full wafer regardless of the subset."""
+    from repro.wafer.solver import ilp_search
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    sub = WAFER.alive_dies()[:16]
+    r = ilp_search(WAFER, cfg, 16, 2048, space="fsdp", dies=sub)
+    assert r.best is not None and r.best.ok
+    assert r.config.total <= len(sub)  # candidates drawn from the subset
+    # the winning score is the subset-context score, bitwise
+    ctx = StepCostContext(WAFER, cfg, 16, 2048, "tcme",
+                          fsdp=STRATEGY_SPACES["fsdp"]["fsdp"], dies=sub)
+    again = simulate_batch(ctx, [r.config], run_tcme_optimizer=False,
+                           prune_oom=True)[0]
+    assert again.throughput == r.best.throughput
+    assert again.mem_per_die == r.best.mem_per_die
+
+
+@pytest.mark.parametrize("space", sorted(STRATEGY_SPACES))
+def test_memory_components_pin_engine_memory_model(space):
+    """``fixed + act_full / n_micro`` must reproduce the engine's
+    ``mem_per_die`` bitwise for EVERY candidate of every strategy space —
+    the multi-wafer pipeline level rescales the activation term by
+    schedule in-flight counts, so the split must stay glued to the real
+    memory model (it is a deliberate scalar mirror of the vectorized
+    formulas; this sweep is what keeps the copies in lockstep)."""
+    cfg, _ = TABLE_II["gpt3-76b"]
+    spec = STRATEGY_SPACES[space]
+    cands = candidate_degrees(32, spec["allow"], spec["seq_par"])
+    ctx = StepCostContext(WAFER, cfg, 64, 2048, "tcme", fsdp=spec["fsdp"])
+    for deg, res in zip(cands, ctx.evaluate_many(cands)):
+        fixed, act_full, seqs = memory_components(ctx, deg)
+        n_micro = res.breakdown["n_micro"]
+        assert fixed + act_full / n_micro == res.mem_per_die, deg
+        assert seqs >= n_micro
+
+
+def test_multiwafer_solve_rejects_unfillable_pipeline():
+    """cfg.n_layers < pp for every multiplier: a clear error, not a bare
+    assert (or an AttributeError under ``python -O``)."""
+    from dataclasses import replace
+
+    from repro.wafer.solver import dlws_solve_multiwafer
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    shallow = replace(cfg, n_layers=2)
+    wafers = [Wafer(WaferSpec()) for _ in range(4)]
+    with pytest.raises(ValueError, match="pipeline"):
+        dlws_solve_multiwafer(wafers, shallow, 32, 2048,
+                              n_micro_candidates=(8,))
