@@ -47,6 +47,7 @@ def check() -> None:
     failed = r.returncode != 0
 
     print("== search/engine_baseline drift ==", flush=True)
+    summary = baseline = None
     try:
         # script invocation (`python benchmarks/run.py`) puts benchmarks/
         # itself on sys.path; the package import needs the repo root
@@ -64,6 +65,30 @@ def check() -> None:
               f"baseline={base['avg_engine_speedup']:.1f}x "
               f"ratio={drift:.2f} "
               f"identical={summary['all_identical_to_scalar']} "
+              f"-> {'OK' if ok else 'DRIFT'}")
+        failed |= not ok
+    except Exception:
+        traceback.print_exc()
+        failed = True
+
+    print("== search/multiwafer_baseline drift ==", flush=True)
+    try:
+        if summary is None:
+            raise RuntimeError("search_time did not run")
+        base = baseline or summary
+        base_ratio = base.get("mw_overhead_ratio",
+                              summary["mw_overhead_ratio"])
+        # overhead_ratio normalizes the multi-wafer upper solve by the
+        # single-wafer solve time on the same machine, so the gate is a
+        # structural regression check (machine speed cancels)
+        ratio = summary["mw_overhead_ratio"] / max(base_ratio, 1e-9)
+        ok = summary["mw_cold_warm_identical"] and ratio <= 2.0 \
+            and summary["mw_warm_speedup"] >= 1.0
+        print(f"mw_overhead this_run="
+              f"{summary['mw_overhead_ratio']:.1f}x_single "
+              f"baseline={base_ratio:.1f}x ratio={ratio:.2f} "
+              f"warm_speedup={summary['mw_warm_speedup']:.1f}x "
+              f"identical={summary['mw_cold_warm_identical']} "
               f"-> {'OK' if ok else 'DRIFT'}")
         failed |= not ok
     except Exception:

@@ -710,8 +710,21 @@ def replan_stage(plan: MultiWaferPlan, cfg, stage_idx: int, wafer, *,
             mems.append(other_mem(j))
     half = [t / (2 * plan.n_micro) for t in step_times]
     from repro.wafer.simulator import BYTES_ACT
-    p2p = (plan.batch * plan.seq * cfg.d_model * BYTES_ACT
-           / plan.n_micro / plan.inter_wafer_bw) if plan.pp > 1 else 0.0
+    from repro.wafer.solver import stage_boundary_p2p
+    # per-boundary charging, matching the upper solve: on-wafer boundaries
+    # pay the D2D cut (wafers other than the degraded one are rebuilt from
+    # their stage plans — the grid/fault state is exact; hardware constants
+    # fall back to the recorded defaults, same caveat as `caps_all`)
+    wafer_objs = {w: (wafer if w == plan.stage_wafer[s]
+                      else plan.stages[plan.stages_of_wafer(w)[0]].wafer())
+                  for w in set(plan.stage_wafer)}
+    wafer_list = [wafer_objs[w] for w in range(plan.n_wafers)]
+    stage_dies = [tuple(alive) if j == s else plan.stages[j].alive_dies
+                  for j in range(plan.pp)]
+    p2p = stage_boundary_p2p(
+        wafer_list, plan.stage_wafer, stage_dies,
+        plan.batch * plan.seq * cfg.d_model * BYTES_ACT,
+        plan.n_micro, plan.inter_wafer_bw)
     t_step = pipeline_step_time(sched, half, half, p2p)
     new_pred = dict(pred)
     new_pred.update({

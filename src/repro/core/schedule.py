@@ -39,6 +39,7 @@ fraction and peak in-flight microbatches per stage.  The property tests in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 
 
 @dataclass(frozen=True)
@@ -436,25 +437,58 @@ def pipeline_bubble_fraction(pp: int, n_micro: int) -> float:
 
 def pipeline_step_time(sched: PipelineSchedule,
                        stage_fwd_s, stage_bwd_s,
-                       p2p_s: float = 0.0) -> float:
+                       p2p_s=0.0) -> float:
     """Wall-clock of one pipeline step by walking the schedule's slots.
 
     ``stage_fwd_s`` / ``stage_bwd_s`` are per-stage per-microbatch compute
-    times (scalars broadcast to all stages); ``p2p_s`` is the inter-stage
-    boundary-activation transfer per microbatch, paid on every op (the
-    send/recv of the slot's microbatch is serialized with its compute —
-    the conservative, non-overlapped model).  Slots are synchronous: a
-    slot lasts as long as its slowest stage, which is how degraded (or
-    unevenly loaded) wafers gate the whole pipeline.
+    times (scalars broadcast to all stages).  ``p2p_s`` is the inter-stage
+    boundary-activation transfer per microbatch:
+
+    * a scalar is the legacy uniform model — every op of every stage pays
+      it (the send/recv of the slot's microbatch is serialized with its
+      compute — the conservative, non-overlapped model);
+    * a sequence of length ``pp - 1`` gives the per-boundary time —
+      boundary ``b`` sits between stages ``b`` and ``b+1``, a forward on
+      stage ``s`` pays boundary ``s`` (its activation send downstream,
+      nothing for the last stage), a backward pays boundary ``s - 1``
+      (its gradient send upstream, nothing for stage 0).  This is how the
+      multi-wafer solver charges on-wafer stage boundaries at the D2D cut
+      bandwidth instead of the inter-wafer bandwidth.
+
+    Slots are synchronous: a slot lasts as long as its slowest stage,
+    which is how degraded (or unevenly loaded) wafers gate the whole
+    pipeline.
     """
     pp = sched.n_stages
     if not isinstance(stage_fwd_s, (list, tuple)):
         stage_fwd_s = [float(stage_fwd_s)] * pp
     if not isinstance(stage_bwd_s, (list, tuple)):
         stage_bwd_s = [float(stage_bwd_s)] * pp
+    if isinstance(p2p_s, (list, tuple)):
+        if len(p2p_s) != max(pp - 1, 0):
+            raise ValueError(f"need {pp - 1} boundary times, got "
+                             f"{len(p2p_s)}")
+        fwd_p2p = [p2p_s[s] if s < pp - 1 else 0.0 for s in range(pp)]
+        bwd_p2p = [p2p_s[s - 1] if s > 0 else 0.0 for s in range(pp)]
+    else:
+        fwd_p2p = bwd_p2p = [p2p_s] * pp
     by_slot: dict[int, float] = {}
     for e in sched.events:
-        dur = (stage_fwd_s[e.stage] if e.kind == "fwd"
-               else stage_bwd_s[e.stage]) + p2p_s
+        dur = (stage_fwd_s[e.stage] + fwd_p2p[e.stage] if e.kind == "fwd"
+               else stage_bwd_s[e.stage] + bwd_p2p[e.stage])
         by_slot[e.t] = max(by_slot.get(e.t, 0.0), dur)
     return sum(by_slot.values())
+
+
+@lru_cache(maxsize=256)
+def schedule_and_report(family: str, pp: int,
+                        n_micro: int) -> "tuple[PipelineSchedule, PipeReport]":
+    """Memoized (schedule, feasibility report) pair.
+
+    The greedy slot executor and its replay are pure Python over
+    ``2·pp·n_micro`` events; the multi-wafer upper solve scores the same
+    ``(family, pp, n_micro)`` shape for every layer split and the plan
+    compiler re-derives it again, so the pair is built once per shape.
+    Treat both as read-only (they are shared across callers)."""
+    sched = pipeline_schedule(family, pp, n_micro)
+    return sched, simulate_pipeline(sched)

@@ -60,6 +60,34 @@ def inject_faults(wafer: Wafer, *, die_rate: float = 0.0,
     return FaultReport(dies, links)
 
 
+def random_degraded_wafer(seed: int, *, spec=None,
+                          max_die_rate: float = 0.15,
+                          max_link_rate: float = 0.08
+                          ) -> tuple[Wafer, list[int]]:
+    """Seeded degraded-wafer scenario: dead dies, dead links, and a
+    contiguous snake-order die subset (a pipeline stage's die share).
+
+    Shared by the batched-vs-reference bitwise property tests and the
+    degraded search-time benchmark rows, so both exercise the same shapes:
+    holes in rings, detoured links, and subset-restricted solves.
+    Returns ``(degraded_wafer, die_subset)``.
+    """
+    from repro.wafer.mapping import snake_order
+    rng = random.Random(seed)
+    base = Wafer(spec) if spec is not None else Wafer()
+    rep = inject_faults(base,
+                        die_rate=rng.uniform(0.02, max_die_rate),
+                        link_rate=rng.uniform(0.0, max_link_rate),
+                        seed=rng.randrange(1 << 30))
+    degraded = base.with_faults(rep.failed_dies, rep.failed_links)
+    alive = set(degraded.alive_dies())
+    order = [d for d in snake_order(degraded.spec.rows, degraded.spec.cols)
+             if d in alive]
+    n = rng.randint(max(2, len(order) // 2), len(order))
+    start = rng.randint(0, len(order) - n)
+    return degraded, order[start:start + n]
+
+
 def largest_usable_count(n: int) -> int:
     """All surviving dies are usable: the snake re-embedding routes around
     holes and the solver's degree search accepts any divisor of n — this is

@@ -39,7 +39,9 @@ training data for the DNN cost surrogate.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Optional, Sequence
 
 import numpy as np
@@ -50,7 +52,8 @@ from repro.wafer import tcme as wtcme
 from repro.wafer.topology import Wafer
 from repro.wafer.traffic import (CommOp, link_loads, link_template,
                                  max_link_load, max_load_entries,
-                                 max_ring_hops, pair_hop_bytes, phase_time)
+                                 max_ring_hops, pair_hop_bytes, phase_time,
+                                 template_bank_row)
 
 BYTES_ACT = 2  # fp16/bf16 activations
 BYTES_W = 2
@@ -58,6 +61,11 @@ BYTES_OPT = 8  # fp32 Adam m+v (paper: fp16 weights, fp32 Adam states)
 ACT_COEFF = 1.0  # activation bytes/token/d_model per layer (full remat)
 T_DISPATCH = 2e-6  # per-round stream orchestration overhead (s)
 _EMPTY_IDS = np.empty(0, np.int64)  # unroutable-axis link template
+# degree-column arrays per candidate-list identity.  DP-grid batches recur
+# verbatim across solves; GA/ILP batches are more varied, so the cache is
+# bounded — a resident solver must not grow it without limit.
+_DEGREE_ARRAYS: dict = {}
+_DEGREE_ARRAYS_CAP = 4096
 
 
 @dataclass(frozen=True)
@@ -67,6 +75,13 @@ class ParallelDegrees:
     sp: int = 1  # sequence/context partition dim (TEMP space)
     tatp: int = 1
     seq_par: bool = False  # Megatron-3 SP flag: tied to the TP groups
+
+    def __post_init__(self):
+        # precomputed identity key: the solver's memoized evaluation layer
+        # looks candidates up millions of times per sweep, so the tuple is
+        # built once (frozen dataclass -> via object.__setattr__)
+        object.__setattr__(self, "key", (self.dp, self.tp, self.sp,
+                                         self.tatp, self.seq_par))
 
     @property
     def total(self) -> int:
@@ -95,7 +110,7 @@ def ring_stream_time(tensor_bytes: float, r: int, spec, *,
     return stages * rounds * per_round
 
 
-@dataclass
+@dataclass(slots=True)
 class SimResult:
     step_time: float
     throughput: float  # tokens/s
@@ -107,6 +122,10 @@ class SimResult:
     breakdown: dict = field(default_factory=dict)
     degrees: Optional[ParallelDegrees] = None
     engine: str = ""
+    # solver-side score memo (repro.wafer.solver._score); excluded from
+    # equality so cached results stay comparable to fresh ones
+    score_cache: Optional[float] = field(default=None, compare=False,
+                                         repr=False)
 
     @property
     def ok(self) -> bool:
@@ -156,7 +175,8 @@ class StepCostContext:
                  engine: str = "tcme", *, fsdp: bool = False,
                  tatp_bidirectional: bool = True, stream: str = "auto",
                  dies: Optional[Sequence[int]] = None,
-                 evaluator: str = "batch"):
+                 evaluator: str = "batch",
+                 stage1: Optional[str] = None):
         self.wafer = wafer
         self.cfg = cfg
         self.batch = batch
@@ -167,6 +187,10 @@ class StepCostContext:
         self.stream = stream
         self.dies = list(dies) if dies is not None else wafer.alive_dies()
         self.evaluator = evaluator  # "batch" | "reference" (seed scalar path)
+        # stage-1 arithmetic backend: "numpy" (default; bitwise-pinned) or
+        # "jax" (jitted twin for million-candidate sweeps; numerically
+        # equal in float64 but not bitwise-guaranteed — opt-in only)
+        self.stage1 = stage1 or os.environ.get("REPRO_STAGE1", "numpy")
         spec = wafer.spec
         self.spec = spec
         self.n_dies = len(self.dies)
@@ -236,16 +260,20 @@ class StepCostContext:
         prune OOM candidates before traffic modeling; the final plan pays for
         the full pass (the seed solver's fast/final split, batched).
         """
-        out: list[Optional[SimResult]] = [None] * len(degs)
+        results = self.results
+        # fast path: fully-memoized batches (every re-sweep after the
+        # first) skip the miss-tracking machinery entirely
+        out = [results.get((d.key, final)) for d in degs]
+        if None not in out:
+            return out
         missing: list[ParallelDegrees] = []
         slots: list[tuple[int, tuple]] = []
         pending: set = set()
         for i, d in enumerate(degs):
-            key = (d.as_tuple(), d.seq_par, final)
-            got = self.results.get(key)
-            if got is not None:
-                out[i] = got
-            elif key in pending:
+            if out[i] is not None:
+                continue
+            key = (d.key, final)
+            if key in pending:
                 slots.append((i, key))
             else:
                 pending.add(key)
@@ -264,10 +292,10 @@ class StepCostContext:
                                      run_tcme_optimizer=final,
                                      prune_oom=not final)
             for d, r in zip(missing, res):
-                self.results[(d.as_tuple(), d.seq_par, final)] = r
+                results[(d.key, final)] = r
             self.evaluated += len(missing)
         for i, key in slots:
-            out[i] = self.results[key]
+            out[i] = results[key]
         return out  # type: ignore[return-value]
 
     def evaluate(self, deg: ParallelDegrees,
@@ -280,49 +308,20 @@ class StepCostContext:
 # ---------------------------------------------------------------------------
 
 
-def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
-                   run_tcme_optimizer: bool = False,
-                   prune_oom: bool = False,
-                   prune_dominated: bool = False) -> list[SimResult]:
-    """Score a batch of candidate degree tuples against one context.
-
-    Stage 1 vectorizes the memory/compute/stream-byte arithmetic over all
-    candidates with numpy (op-for-op identical to the scalar reference, so
-    results are bitwise equal); stage 2 runs the link-level traffic model
-    per surviving candidate on the context/wafer caches.  ``prune_oom``
-    short-circuits memory-infeasible candidates before any traffic modeling
-    (their ``mem_per_die`` stays exact; ``step_time`` becomes ``inf``).
-
-    ``prune_dominated`` additionally drops candidates that have an
-    *identical* memory footprint (and compute time) as another candidate
-    but strictly worse stream/collective byte volumes on every comm axis —
-    they cannot win, so the traffic model skips them.  Dominance cannot
-    displace the batch argmax (the dominator stays and is at least as
-    fast), so argmax-only consumers (:func:`best_config`) enable it; the
-    solver's memoized evaluation path does not, keeping DLWS trajectories
-    bitwise identical to the scalar reference.
-    """
-    if not degrees:
-        return []
+def _stage1_numpy(ctx: StepCostContext, dp, tp, sp, ta, seq_par) -> dict:
+    """Stage 1: memory/compute/stream-byte arithmetic over all candidates
+    (numpy; op-for-op identical to the scalar reference, so results are
+    bitwise equal)."""
     cfg, spec = ctx.cfg, ctx.spec
-    n_dies = ctx.n_dies
-    tokens, n_l = ctx.tokens, ctx.n_l
-    fsdp = ctx.fsdp
-    nC = len(degrees)
-
-    dp = np.array([d.dp for d in degrees], np.int64)
-    tp = np.array([d.tp for d in degrees], np.int64)
-    sp = np.array([d.sp for d in degrees], np.int64)
-    ta = np.array([d.tatp for d in degrees], np.int64)
-    seq_par = np.array([d.seq_par for d in degrees], bool)
-    feasible = dp * tp * sp * ta <= n_dies
+    n_dies, tokens, n_l, fsdp = ctx.n_dies, ctx.tokens, ctx.n_l, ctx.fsdp
+    nC = len(dp)
 
     # ---------------- memory (vectorized; mirrors the reference) ----------
     zero = (ta > 1) | fsdp
     w_shard = tp * ta * (n_dies if fsdp else 1)
     w_div = np.minimum(w_shard, n_dies)
     w_bytes = BYTES_W * ctx.p_total / w_div
-    g_bytes = BYTES_W * ctx.p_total / w_div
+    g_bytes = w_bytes  # same expression as the reference's g_bytes
     opt_shard = np.minimum(w_shard * np.where(zero, dp, 1), n_dies)
     opt_bytes = BYTES_OPT * ctx.p_total / opt_shard
     act_tokens = tokens / (dp * sp * ta)
@@ -332,13 +331,16 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
     transient = BYTES_W * ctx.p_layer if fsdp else 0.0
     fixed = w_bytes + g_bytes + opt_bytes + transient
     seqs_per_die = np.maximum(1, ctx.batch // dp)
-    n_micro = np.ones(nC, np.int64)
-    grow = (fixed + act_full / n_micro > spec.hbm_cap) \
-        & (n_micro < seqs_per_die)
-    while grow.any():
-        n_micro = np.where(grow, n_micro * 2, n_micro)
-        grow = (fixed + act_full / n_micro > spec.hbm_cap) \
-            & (n_micro < seqs_per_die)
+    # gradient-accumulation doubling, vectorized over the exponent: the
+    # reference loop doubles n_micro while (fixed + act_full/n_micro >
+    # cap) and (n_micro < seqs_per_die).  Dividing by 2^k is exact, so
+    # evaluating the same predicate at every power at once and taking the
+    # first non-growing one reproduces the loop bitwise.
+    kb = max(int(seqs_per_die.max()).bit_length() + 1, 1)
+    pows = np.left_shift(np.int64(1), np.arange(kb, dtype=np.int64))
+    grow = (fixed[:, None] + act_full[:, None] / pows > spec.hbm_cap) \
+        & (pows < seqs_per_die[:, None])
+    n_micro = pows[np.argmin(grow, axis=1)]
     act_bytes = act_full / n_micro
     mem = fixed + act_bytes
     oom = mem > spec.hbm_cap
@@ -357,6 +359,138 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
         kv_bytes = (tokens / (dp * sp * ta)) * 2 * cfg.kv_dim * BYTES_ACT
     else:
         kv_bytes = np.zeros(nC)
+    return dict(n_micro=n_micro, mem=mem, oom=oom, comp_layer=comp_layer,
+                t_head=t_head, act_group_bytes=act_group_bytes,
+                w_stream=w_stream, a_stream=a_stream, kv_bytes=kv_bytes)
+
+
+@lru_cache(maxsize=None)
+def _stage1_jax_fn(fsdp: bool, has_kv: bool):
+    """Build the jitted stage-1 kernel for one (fsdp, has-kv) shape.
+
+    Enables jax x64 globally on first use — stage-1 must run in float64 to
+    track the numpy engine; callers opt in via ``stage1="jax"`` (or
+    ``REPRO_STAGE1=jax``), so the global flip never happens behind the
+    default path's back."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from jax import lax
+
+    def f(dp, tp, sp, ta, seq_par, n_dies, p_total, p_layer, p_active,
+          tokens, batch, n_l, d_model, kv_dim, hbm_cap, eff_flops,
+          layer_flops, head_flops):
+        zero = (ta > 1) | fsdp
+        w_shard = tp * ta * (n_dies if fsdp else 1)
+        w_div = jnp.minimum(w_shard, n_dies)
+        w_bytes = BYTES_W * p_total / w_div
+        g_bytes = BYTES_W * p_total / w_div
+        opt_shard = jnp.minimum(w_shard * jnp.where(zero, dp, 1), n_dies)
+        opt_bytes = BYTES_OPT * p_total / opt_shard
+        act_tokens = tokens / (dp * sp * ta)
+        act_unit = ACT_COEFF * act_tokens * d_model * BYTES_ACT * n_l
+        act_full = jnp.where((tp > 1) & ~seq_par,
+                             act_unit * (0.3 + 0.7 / tp), act_unit / tp)
+        transient = BYTES_W * p_layer if fsdp else 0.0
+        fixed = w_bytes + g_bytes + opt_bytes + transient
+        seqs_per_die = jnp.maximum(1, batch // dp)
+
+        def grown(n_micro):
+            return (fixed + act_full / n_micro > hbm_cap) \
+                & (n_micro < seqs_per_die)
+
+        n_micro = lax.while_loop(
+            lambda nm: grown(nm).any(),
+            lambda nm: jnp.where(grown(nm), nm * 2, nm),
+            jnp.ones_like(dp))
+        mem = fixed + act_full / n_micro
+        oom = mem > hbm_cap
+        comp_denom = (tp * sp * ta * dp) * eff_flops
+        act_group_bytes = (tokens / (dp * sp)) * d_model * BYTES_ACT
+        w_stream = BYTES_W * p_active / tp
+        if has_kv:
+            kv_bytes = (tokens / (dp * sp * ta)) * 2 * kv_dim * BYTES_ACT
+        else:
+            kv_bytes = jnp.zeros_like(w_stream)
+        return (n_micro, mem, oom, layer_flops / comp_denom,
+                head_flops / comp_denom, act_group_bytes, w_stream,
+                act_group_bytes / tp, kv_bytes)
+
+    return jax.jit(f)
+
+
+def _stage1_jax(ctx: StepCostContext, dp, tp, sp, ta, seq_par) -> dict:
+    """Stage 1 on the jax backend (jitted; see :func:`_stage1_jax_fn`).
+    Falls back to numpy when jax is unavailable."""
+    cfg = ctx.cfg
+    try:
+        fn = _stage1_jax_fn(ctx.fsdp, bool(cfg.n_kv_heads))
+    except ImportError:  # container without jax: stay on the numpy path
+        return _stage1_numpy(ctx, dp, tp, sp, ta, seq_par)
+    out = fn(dp, tp, sp, ta, seq_par, ctx.n_dies, float(ctx.p_total),
+             float(ctx.p_layer), float(ctx.p_active), float(ctx.tokens),
+             ctx.batch, ctx.n_l, cfg.d_model, cfg.kv_dim,
+             ctx.spec.hbm_cap, ctx.spec.flops * ctx.spec.gemm_eff,
+             float(ctx.layer_flops), float(ctx.head_flops))
+    keys = ("n_micro", "mem", "oom", "comp_layer", "t_head",
+            "act_group_bytes", "w_stream", "a_stream", "kv_bytes")
+    return {k: np.asarray(v) for k, v in zip(keys, out)}
+
+
+def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
+                   run_tcme_optimizer: bool = False,
+                   prune_oom: bool = False,
+                   prune_dominated: bool = False) -> list[SimResult]:
+    """Score a batch of candidate degree tuples against one context.
+
+    Stage 1 (:func:`_stage1_numpy`, or the jax-jitted twin behind
+    ``ctx.stage1 == "jax"``) vectorizes the memory/compute/stream-byte
+    arithmetic over all candidates; stage 2
+    (:func:`_traffic_and_power_batch`) vectorizes the link-level traffic
+    model over all surviving candidates on per-wafer link-template banks.
+    ``prune_oom`` short-circuits memory-infeasible candidates before any
+    traffic modeling (their ``mem_per_die`` stays exact; ``step_time``
+    becomes ``inf``).
+
+    ``prune_dominated`` additionally drops candidates that have an
+    *identical* memory footprint (and compute time) as another candidate
+    but strictly worse stream/collective byte volumes on every comm axis —
+    they cannot win, so the traffic model skips them.  Dominance cannot
+    displace the batch argmax (the dominator stays and is at least as
+    fast), so argmax-only consumers (:func:`best_config`) enable it; the
+    solver's memoized evaluation path does not, keeping DLWS trajectories
+    bitwise identical to the scalar reference.
+    """
+    if not degrees:
+        return []
+    cfg, spec = ctx.cfg, ctx.spec
+    n_dies = ctx.n_dies
+    fsdp = ctx.fsdp
+    nC = len(degrees)
+
+    dkey = tuple(d.key for d in degrees)
+    arrs = _DEGREE_ARRAYS.get(dkey)
+    if arrs is None:
+        arrs = (np.array([d.dp for d in degrees], np.int64),
+                np.array([d.tp for d in degrees], np.int64),
+                np.array([d.sp for d in degrees], np.int64),
+                np.array([d.tatp for d in degrees], np.int64),
+                np.array([d.seq_par for d in degrees], bool))
+        if len(_DEGREE_ARRAYS) >= _DEGREE_ARRAYS_CAP:
+            _DEGREE_ARRAYS.clear()  # cheap full reset; entries are tiny
+        _DEGREE_ARRAYS[dkey] = arrs
+    dp, tp, sp, ta, seq_par = arrs
+    feasible = dp * tp * sp * ta <= n_dies
+
+    if ctx.stage1 == "jax":
+        s1 = _stage1_jax(ctx, dp, tp, sp, ta, seq_par)
+    else:
+        s1 = _stage1_numpy(ctx, dp, tp, sp, ta, seq_par)
+    n_micro, mem, oom = s1["n_micro"], s1["mem"], s1["oom"]
+    comp_layer, t_head = s1["comp_layer"], s1["t_head"]
+    act_group_bytes = s1["act_group_bytes"]
+    w_stream, a_stream = s1["w_stream"], s1["a_stream"]
+    kv_bytes = s1["kv_bytes"]
 
     # ---------------- dominance pre-filter (search-only heuristic) --------
     # Byte dominance implies time dominance only while ring geometry is
@@ -398,63 +532,571 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
                 (float(mem[i]), float(comp_layer[i]), int(n_micro[i])),
                 []).append(i)
         for idxs in by_footprint.values():
-            for i in idxs:
-                for j in idxs:
-                    if i == j or dominated[i]:
-                        continue
-                    if np.all(comm[j] >= comm[i]) \
-                            and np.any(comm[j] > comm[i]):
-                        dominated[j] = True
+            if len(idxs) < 2:
+                continue
+            # vectorized pairwise dominance within the footprint group:
+            # j is dominated iff some i has comm[i] <= comm[j] on every
+            # axis and < on one.  Dominance is transitive (<=/< compose),
+            # so witnesses that are themselves dominated never change the
+            # final set — the full pairwise matrix equals the old
+            # skip-dominated-witness loop.
+            g = comm[idxs]  # (m, axes)
+            ge = (g[:, None, :] >= g[None, :, :]).all(-1)
+            gt = (g[:, None, :] > g[None, :, :]).any(-1)
+            dom = (ge & gt).any(axis=1)
+            dominated[idxs] = dom
 
-    results: list[SimResult] = []
+    results: list[Optional[SimResult]] = [None] * nC
+    survivors: list[int] = []
+    feas_l = feasible.tolist()
+    oom_l = oom.tolist()
+    dom_l = dominated.tolist()
     for i, deg in enumerate(degrees):
-        if not feasible[i]:
-            results.append(SimResult(math.inf, 0.0, math.inf, True, 0.0,
-                                     0.0, 0.0,
-                                     {"reason": "degree exceeds dies"},
-                                     deg, ctx.engine))
+        if not feas_l[i]:
+            results[i] = SimResult(math.inf, 0.0, math.inf, True, 0.0,
+                                   0.0, 0.0,
+                                   {"reason": "degree exceeds dies"},
+                                   deg, ctx.engine)
             continue
-        mem_i = float(mem[i])
-        oom_i = bool(oom[i])
-        if prune_oom and oom_i:
-            results.append(SimResult(math.inf, 0.0, mem_i, True, 0.0, 0.0,
-                                     0.0, {"reason": "oom-pruned",
-                                           "n_micro": int(n_micro[i])},
-                                     deg, ctx.engine))
+        if prune_oom and oom_l[i]:
+            results[i] = SimResult(math.inf, 0.0, float(mem[i]), True, 0.0,
+                                   0.0, 0.0, {"reason": "oom-pruned",
+                                              "n_micro": int(n_micro[i])},
+                                   deg, ctx.engine)
             continue
-        if dominated[i]:
+        if dom_l[i]:
             # same memory footprint as a surviving candidate, strictly
             # worse comm bytes: cannot be the argmax, skip traffic modeling
-            results.append(SimResult(math.inf, 0.0, mem_i, oom_i, 0.0, 0.0,
-                                     0.0, {"reason": "dominated-pruned",
-                                           "n_micro": int(n_micro[i])},
-                                     deg, ctx.engine))
+            results[i] = SimResult(math.inf, 0.0, float(mem[i]),
+                                   oom_l[i], 0.0, 0.0, 0.0,
+                                   {"reason": "dominated-pruned",
+                                    "n_micro": int(n_micro[i])},
+                                   deg, ctx.engine)
             continue
-        results.append(_traffic_and_power(
-            ctx, deg,
-            comp_layer=float(comp_layer[i]), t_head=float(t_head[i]),
-            mem=mem_i, oom=oom_i, n_micro=int(n_micro[i]),
-            act_group_bytes=float(act_group_bytes[i]),
-            w_stream=float(w_stream[i]), a_stream=float(a_stream[i]),
-            kv_bytes=float(kv_bytes[i]),
-            run_tcme_optimizer=run_tcme_optimizer))
-    return results
+        survivors.append(i)
+
+    if survivors:
+        # full-fidelity evaluations (TCME optimizer runs, or caches off)
+        # keep the per-candidate CommOp path; tiny batches take the scalar
+        # lean path too (bitwise-equal either way, and the matrix setup
+        # only pays for itself from a handful of candidates up); everything
+        # else — the bulk of the search — goes through the vectorized
+        # traffic stage.
+        scalar_route = (ctx.engine == "tcme" and run_tcme_optimizer) \
+            or not ctx.wafer.cache_enabled or len(survivors) <= 4
+        if scalar_route:
+            for i in survivors:
+                results[i] = _traffic_and_power(
+                    ctx, degrees[i],
+                    comp_layer=float(comp_layer[i]),
+                    t_head=float(t_head[i]),
+                    mem=float(mem[i]), oom=bool(oom[i]),
+                    n_micro=int(n_micro[i]),
+                    act_group_bytes=float(act_group_bytes[i]),
+                    w_stream=float(w_stream[i]),
+                    a_stream=float(a_stream[i]),
+                    kv_bytes=float(kv_bytes[i]),
+                    run_tcme_optimizer=run_tcme_optimizer)
+        else:
+            idx = np.asarray(survivors, np.int64)
+            for i, res in zip(survivors, _traffic_and_power_batch(
+                    ctx, [degrees[i] for i in survivors],
+                    dp=dp[idx], tp=tp[idx], sp=sp[idx], ta=ta[idx],
+                    seq_par=seq_par[idx],
+                    comp_layer=comp_layer[idx], t_head=t_head[idx],
+                    mem=mem[idx], oom=oom[idx], n_micro=n_micro[idx],
+                    act_group_bytes=act_group_bytes[idx],
+                    w_stream=w_stream[idx], a_stream=a_stream[idx],
+                    kv_bytes=kv_bytes[idx],
+                    run_tcme_optimizer=run_tcme_optimizer)):
+                results[i] = res
+    return results  # type: ignore[return-value]
 
 
 def _axis_template(groups: dict, axis: str, kind: str, groups_list: list,
                    wafer: Wafer) -> tuple:
-    """(concatenated link ids, max single-pair path length) for all groups
-    of one parallel axis, cached inside the (wafer-cached) groups dict."""
+    """(concatenated link ids, max single-pair path length, dense per-link
+    hop-count row) for all groups of one parallel axis, cached inside the
+    (wafer-cached) groups dict.
+
+    The hop-count row is the template's link-bank form: ``row[link_id]``
+    counts how many times the axis's pair-by-pair traversal crosses that
+    link, over the fixed link universe of the wafer — the batched traffic
+    stage turns a whole candidate batch's link loads into row gathers."""
     tkey = ("_tmpl", axis, kind if kind == "p2p_chain" else "ring")
     tmpl = groups.get(tkey)
     if tmpl is None:
         parts = [link_template(kind, g, wafer) for g in groups_list]
         ids = [p.ids for p in parts if len(p.ids)]
-        tmpl = (np.concatenate(ids) if len(ids) > 1
-                else (ids[0] if ids else _EMPTY_IDS),
-                max((p.max_len for p in parts), default=0))
+        cat = (np.concatenate(ids) if len(ids) > 1
+               else (ids[0] if ids else _EMPTY_IDS))
+        tmpl = (cat, max((p.max_len for p in parts), default=0),
+                template_bank_row(cat, wafer))
         groups[tkey] = tmpl
     return tmpl
+
+
+# slot order of the batched traffic stage — it mirrors the rec order of
+# the scalar lean path exactly (overlapped streams first, then exposed
+# collectives), so the per-link load accumulation chains are identical:
+# 0 tatp ring · 1 sp ring · 2 tp allreduce|allgather · 3 tp reducescatter
+# · 4 fsdp allgather · 5 fsdp reducescatter
+_N_SLOTS = 6
+
+
+def _tatp_hop_factor(tatp_groups: list, wafer: Wafer,
+                     bidirectional: bool) -> int:
+    """Worst ring-hop distance of the TATP groups (tail latency, Fig. 5a).
+    One shared implementation for the batched slot structs and the scalar
+    CommOp path, so the bitwise pin between them cannot desynchronize
+    (``simulate_step_reference`` keeps its own deliberately frozen copy)."""
+    if not tatp_groups:
+        return 1
+    if bidirectional:
+        hop_factor = max(max_ring_hops(g, wafer, wrap=False)
+                         for g in tatp_groups)
+    else:  # naive TSPP needs the wrap link: line topology pays O(N)
+        hop_factor = max(max_ring_hops(g, wafer, wrap=True)
+                         for g in tatp_groups)
+    return max(1, hop_factor)
+
+
+def _sp_hop_factor(sp_groups: list, wafer: Wafer) -> int:
+    """Worst ring-hop distance of the SP KV rings (shared as above)."""
+    return max((max_ring_hops(g, wafer, wrap=False) for g in sp_groups),
+               default=1)
+
+
+def _bank_row_index(wafer: Wafer, row: np.ndarray) -> int:
+    """Global index of a hop-count row in the wafer's link-template bank
+    (index 0 is the reserved all-zero row).  Rows are registered once —
+    they are cached template objects — and the stacked matrix is rebuilt
+    lazily on growth."""
+    j = wafer._bank_index.get(id(row))
+    if j is None:
+        wafer._bank_rows.append(row)
+        j = len(wafer._bank_rows)
+        wafer._bank_index[id(row)] = j
+        wafer._bank_mat = None
+    return j
+
+
+def _bank_matrices(wafer: Wafer, L: int) -> tuple:
+    """(bank matrix, per-row any-link flag)."""
+    got = wafer._bank_mat
+    if got is None:
+        B = np.zeros((len(wafer._bank_rows) + 1, L), np.int64)
+        for k, r in enumerate(wafer._bank_rows):
+            B[k + 1] = r
+        got = (B, B.any(axis=1))
+        wafer._bank_mat = got
+    return got
+
+
+def _slot_struct(ctx: StepCostContext, deg: ParallelDegrees) -> tuple:
+    """Degree-dependent but byte-independent traffic structure of one
+    candidate: per-slot (bank row index, max path length, group size,
+    #groups), the DP all-reduce entry, ring tail-latency hop factors, and
+    whether the candidate needs the scalar fallback (FSDP with multiple dp
+    groups interleaves unequal payloads).  Cached in the wafer-cached
+    groups dict, so repeat solves pay one dict lookup per candidate."""
+    groups = ctx.groups_for(deg)
+    key = ("_slots", deg.seq_par, ctx.fsdp, ctx.tatp_bidirectional)
+    st = groups.get(key)
+    if st is not None:
+        return st
+    wafer = ctx.wafer
+    slots: list = [None] * _N_SLOTS
+    fallback = False
+    tatp_groups = groups.get("tatp", [])
+    hop_factor = _tatp_hop_factor(tatp_groups, wafer,
+                                  ctx.tatp_bidirectional)
+    if deg.tatp > 1 and tatp_groups:
+        t = _axis_template(groups, "tatp", "p2p_ring", tatp_groups, wafer)
+        slots[0] = (_bank_row_index(wafer, t[2]), t[1],
+                    len(tatp_groups[0]), len(tatp_groups))
+    sp_hops = 1
+    if deg.sp > 1 and not deg.seq_par:
+        spg = groups.get("sp", [])
+        sp_hops = _sp_hop_factor(spg, wafer)
+        if spg:
+            t = _axis_template(groups, "sp", "p2p_ring", spg, wafer)
+            slots[1] = (_bank_row_index(wafer, t[2]), t[1],
+                        len(spg[0]), len(spg))
+    if deg.tp > 1:
+        tpg = groups.get("tp", [])
+        if tpg:
+            t = _axis_template(groups, "tp",
+                               "allgather" if deg.seq_par else "allreduce",
+                               tpg, wafer)
+            slots[2] = (_bank_row_index(wafer, t[2]), t[1],
+                        len(tpg[0]), len(tpg))
+            if deg.seq_par:  # rs shares the ring template with ag
+                slots[3] = slots[2]
+    if ctx.fsdp:
+        dpg = groups.get("dp", [])
+        if len(dpg) > 1:
+            fallback = True  # interleaved ag/rs with unequal payloads
+        elif dpg:
+            t = _axis_template(groups, "dp", "allgather", dpg, wafer)
+            slots[4] = (_bank_row_index(wafer, t[2]), t[1],
+                        len(dpg[0]), len(dpg))
+            slots[5] = slots[4]
+    dp_entry = None
+    if deg.dp > 1 and not ctx.fsdp:
+        dpg = groups.get("dp", [])
+        if dpg:
+            t = _axis_template(groups, "dp", "allreduce", dpg, wafer)
+            dp_entry = (_bank_row_index(wafer, t[2]), t[1], len(dpg[0]))
+    st = (tuple(slots), dp_entry, hop_factor, sp_hops, fallback)
+    groups[key] = st
+    return st
+
+
+# _slot_vec column layout: one flat row per candidate so the batch prep is
+# a single array-row copy instead of ~20 scalar writes
+# [0:6] bank row idx · [6:12] present · [12:18] max path len ·
+# [18:24] group size · [24:30] #groups · [30] dp bank idx · [31] dp max
+# len · [32] dp group size · [33] dp present · [34] tatp hop factor ·
+# [35] sp hop factor · [36:42] per-slot max hop count · [42] dp max hops
+_VEC_W = 43
+
+
+def _slot_vec(ctx: StepCostContext,
+              deg: ParallelDegrees) -> Optional[np.ndarray]:
+    """Flat-row form of :func:`_slot_struct` (None = scalar fallback),
+    cached directly on the wafer under the full structural identity (the
+    batch path only runs on cache-enabled wafers)."""
+    key = ("_vec", deg.key, ctx.engine, ctx.fsdp, ctx.tatp_bidirectional)
+    cache = ctx.wafer._groups_cache
+    vec = cache.get(key, False)
+    if vec is not False:
+        return vec
+    slots, dp_entry, hf, sph, fallback = _slot_struct(ctx, deg)
+    if fallback:
+        vec = None
+    else:
+        rows = ctx.wafer._bank_rows
+        vec = np.zeros(_VEC_W)
+        vec[18:24] = 1.0
+        vec[32] = 1.0
+        for s, ent in enumerate(slots):
+            if ent is None:
+                continue
+            vec[s] = ent[0]
+            vec[6 + s] = 1.0
+            vec[12 + s] = ent[1]
+            vec[18 + s] = ent[2]
+            vec[24 + s] = ent[3]
+            vec[36 + s] = int(rows[ent[0] - 1].max())
+        if dp_entry is not None:
+            vec[30] = dp_entry[0]
+            vec[31] = dp_entry[1]
+            vec[32] = dp_entry[2]
+            vec[33] = 1.0
+            vec[42] = int(rows[dp_entry[0] - 1].max())
+        vec[34] = hf
+        vec[35] = sph
+    cache[key] = vec
+    return vec
+
+
+_KARR = np.arange(64)
+
+
+def _karr(k: int) -> np.ndarray:
+    """First ``k`` hop indices (grown on demand; shared comparison rail
+    for the per-hop addend masks)."""
+    global _KARR
+    if k > len(_KARR):
+        _KARR = np.arange(max(k, 2 * len(_KARR)))
+    return _KARR[:k]
+
+
+def _batch_struct(ctx: StepCostContext, degs: list[ParallelDegrees]) -> dict:
+    """Byte-independent batch structure for one candidate list: slot
+    presence/geometry arrays, precomputed per-hop addend masks against the
+    wafer's link-template bank, and the derived touch flags.  Cached on
+    the wafer per (candidate identity tuple, engine, fsdp, direction) —
+    DP grids and GA generations are stable lists, so repeat solves reuse
+    the gathered masks and only recompute byte weights.  The cache is
+    bounded (mask stacks are big; GA/ILP miss lists vary), mirroring
+    ``_DEGREE_ARRAYS_CAP``."""
+    wafer = ctx.wafer
+    key = (tuple(d.key for d in degs), ctx.engine, ctx.fsdp,
+           ctx.tatp_bidirectional)
+    cache = wafer._batch_cache
+    st = cache.get(key)
+    if st is not None:
+        return st
+    nc = len(degs)
+    L = wafer.link_universe()
+    S = np.zeros((nc, _VEC_W))
+    S[:, 18:24] = 1.0
+    S[:, 32] = 1.0
+    S[:, 34:36] = 1.0
+    fb_idx: list[int] = []
+    for i, deg in enumerate(degs):
+        vec = _slot_vec(ctx, deg)
+        if vec is None:
+            fb_idx.append(i)
+            continue
+        S[i] = vec
+    tidx = S[:, 0:6].astype(np.int64)
+    present = S[:, 6:12] != 0.0
+    maxlen = S[:, 12:18]
+    skmax = S[:, 36:42].max(axis=0)
+    B, Bnz = _bank_matrices(wafer, L)
+    active = [s for s in range(_N_SLOTS) if present[:, s].any()]
+    rownz = Bnz[tidx] & present
+    dp_present = S[:, 33] != 0.0
+    dp_tidx = S[:, 30].astype(np.int64)
+    dkm = int(S[:, 42].max())
+    # column compression: restrict every load matrix to links actually
+    # touched by some referenced row — the bottleneck max is unchanged
+    # (dropped columns are zero in every row) and the hop chains shrink
+    used = np.unique(np.concatenate([tidx.ravel(), dp_tidx]))
+    colmask = B[used].any(axis=0)
+    if not colmask.any():
+        colmask[0] = True  # keep a 1-column rail so reductions stay valid
+    masks = []
+    nops = S[:, 24:30]
+    for s in active:
+        c = B[tidx[:, s]][:, colmask]
+        km = int(skmax[s])
+        masks.append((s, c[:, None, :] > _karr(km)[:, None],
+                      nops[:, s, None] > _karr(int(nops[:, s].max()))))
+    cdp = B[dp_tidx][:, colmask]
+    st = dict(
+        fb_idx=fb_idx, present=present, glen=S[:, 18:24], nops=nops,
+        active=active, masks=masks,
+        exposed=[s for s in active if s >= 2],
+        touched_all=rownz.any(axis=1),
+        touched_e=rownz[:, 2:].any(axis=1),
+        has_overlap=present[:, :2].any(axis=1),
+        maxhops_e=np.max(np.where(present[:, 2:], maxlen[:, 2:], 0),
+                         axis=1),
+        dp_present=dp_present, dp_maxlen=S[:, 31], dp_glen=S[:, 32],
+        dp_any=bool(dp_present.any()),
+        dp_mask=cdp[:, None, :] > _karr(dkm)[:, None],
+        dp_touched=dp_present & Bnz[dp_tidx],
+        hopf=S[:, 34], sp_hops=S[:, 35],
+    )
+    if len(cache) >= _DEGREE_ARRAYS_CAP // 8:
+        cache.clear()  # bounded: each entry holds multi-KB mask stacks
+    cache[key] = st
+    return st
+
+
+def _traffic_and_power_batch(
+        ctx: StepCostContext, degs: list[ParallelDegrees], *,
+        dp, tp, sp, ta, seq_par, comp_layer, t_head, mem, oom, n_micro,
+        act_group_bytes, w_stream, a_stream, kv_bytes,
+        run_tcme_optimizer: bool = False) -> list[SimResult]:
+    """Stage 2, fully batched: link-level traffic + power for all surviving
+    candidates in one matrix computation (arithmetic replays the scalar
+    lean path op-for-op, so results stay bitwise identical to
+    :func:`simulate_step_reference`).
+
+    Each candidate contributes one bank row per traffic slot (gathered
+    from the wafer-cached link-template banks via :func:`_batch_struct`);
+    per-link loads for the whole batch accumulate by replaying the scalar
+    per-hop add chain against precomputed hop masks, and every downstream
+    scalar formula (contention, exposed-phase time, ring stream time,
+    power) runs as an elementwise array expression in the scalar
+    evaluation order."""
+    spec = ctx.spec
+    engine, fsdp = ctx.engine, ctx.fsdp
+    n_l, n_dies, tokens = ctx.n_l, ctx.n_dies, ctx.tokens
+    bidir, stream = ctx.tatp_bidirectional, ctx.stream
+    nc = len(degs)
+
+    st = _batch_struct(ctx, degs)
+    present, glen, nops = st["present"], st["glen"], st["nops"]
+    active, exposed = st["active"], st["exposed"]
+    hopf, sp_hops = st["hopf"], st["sp_hops"]
+    fb: dict[int, SimResult] = {}
+    for i in st["fb_idx"]:
+        fb[i] = _traffic_and_power(
+            ctx, degs[i], comp_layer=float(comp_layer[i]),
+            t_head=float(t_head[i]), mem=float(mem[i]),
+            oom=bool(oom[i]), n_micro=int(n_micro[i]),
+            act_group_bytes=float(act_group_bytes[i]),
+            w_stream=float(w_stream[i]), a_stream=float(a_stream[i]),
+            kv_bytes=float(kv_bytes[i]),
+            run_tcme_optimizer=run_tcme_optimizer)
+
+    # ---- per-slot per-hop byte weights (the scalar formulas, arrayed) ----
+    bidir_f = 0.5 if bidir else 1.0
+    if stream == "auto":
+        sel = np.minimum(w_stream, a_stream)
+    elif stream == "weights":
+        sel = w_stream
+    else:
+        sel = a_stream
+    W = np.zeros((nc, _N_SLOTS))
+    CH = np.zeros((nc, _N_SLOTS))
+    if 0 in active:  # TATP p2p_ring (pair-hop bytes of a ring op = nbytes)
+        W[:, 0] = sel * 3 * (ta - 1) / ta * bidir_f
+        CH[:, 0] = sel / ta
+    if 1 in active:  # SP KV p2p_ring
+        nb1 = kv_bytes * np.maximum(sp - 1, 1)
+        W[:, 1] = nb1
+        CH[:, 1] = nb1 / np.maximum(glen[:, 1], 1)
+    if 2 in active:  # TP allreduce (2(g-1)/g) or Megatron-3 ag ((g-1)/g)
+        g2 = glen[:, 2]
+        nb2 = np.where(seq_par, 2 * act_group_bytes, 4.0 * act_group_bytes)
+        W[:, 2] = np.where(seq_par, nb2 * (g2 - 1) / g2,
+                           2.0 * nb2 * (g2 - 1) / g2)
+        CH[:, 2] = nb2 / np.maximum(g2, 1)
+    if 3 in active:  # Megatron-3 reducescatter (same payload as its ag)
+        g3 = glen[:, 3]
+        nb3 = 2 * act_group_bytes
+        W[:, 3] = nb3 * (g3 - 1) / g3
+        CH[:, 3] = nb3 / np.maximum(g3, 1)
+    full_layer = BYTES_W * ctx.p_layer
+    if 4 in active:  # FSDP full-layer allgather
+        g4 = glen[:, 4]
+        W[:, 4] = np.where(g4 >= 2, (2 * full_layer) * (g4 - 1) / g4, 0.0)
+        CH[:, 4] = (2 * full_layer) / np.maximum(g4, 1)
+    if 5 in active:  # FSDP gradient reducescatter
+        g5 = glen[:, 5]
+        W[:, 5] = np.where(g5 >= 2, full_layer * (g5 - 1) / g5, 0.0)
+        CH[:, 5] = full_layer / np.maximum(g5, 1)
+    W = np.where(present, W, 0.0)
+
+    # ---- bottleneck links: contention (unweighted, all slots) and the
+    # exposed collective phase (granularity-weighted, slots 2+), replaying
+    # the scalar per-hop add chain against the precomputed masks ------------
+    L = st["dp_mask"].shape[2]
+    if exposed:
+        CHe = CH[:, 2:]
+        effe = np.where(CHe <= 0, 1.0, CHe / (CHe + spec.bw_half_size))
+        We = W[:, 2:] / np.maximum(effe, 1e-3)
+        loads2 = np.zeros((nc, 2, L))  # lane 0: unweighted; lane 1: exposed
+    else:
+        loads2 = np.zeros((nc, 1, L))
+    d2d = np.zeros(nc)
+    for s, m, dm in st["masks"]:
+        if s >= 2:
+            wpair = np.stack([W[:, s], We[:, s - 2]], axis=1)
+            wm = wpair[:, :, None, None] * m[:, None, :, :]
+        else:
+            wm = W[:, s, None, None, None] * m[:, None, :, :]
+        for k in range(m.shape[1]):
+            if s >= 2:
+                loads2 += wm[:, :, k]
+            else:
+                loads2[:, :1] += wm[:, :, k]
+        # D2D byte volume: one add per group, same slot order as the recs
+        xm = (W[:, s] * glen[:, s] * n_l)[:, None] * dm
+        for k in range(dm.shape[1]):
+            d2d += xm[:, k]
+    mx2 = loads2.max(axis=2)
+    mx_all = mx2[:, 0]
+    own = np.max(np.where(present[:, :2], W[:, :2], 0.0), axis=1)
+    use_ctn = st["touched_all"] & st["has_overlap"] & (own > 0)
+    contention = np.where(
+        use_ctn, np.maximum(1.0, mx_all / np.where(own > 0, own, 1.0)), 1.0)
+
+    t_coll = np.zeros(nc)
+    if exposed:
+        t_coll = np.where(
+            st["touched_e"],
+            mx2[:, 1] / spec.link_bw + st["maxhops_e"] * spec.hop_latency,
+            0.0)
+
+    # ---- DP gradient all-reduce (half overlapped with backward) ----------
+    dmask = (dp > 1) & (not fsdp)
+    t_dp = np.zeros(nc)
+    if st["dp_any"]:
+        dp_glen = st["dp_glen"]
+        dpb = np.where(dmask, BYTES_W * ctx.p_total / (tp * ta), 0.0)
+        ph = 2.0 * dpb * (dp_glen - 1) / dp_glen
+        chunk_dp = dpb / np.maximum(dp_glen, 1)
+        eff_dp = np.where(chunk_dp <= 0, 1.0,
+                          chunk_dp / (chunk_dp + spec.bw_half_size))
+        wdp = np.where(st["dp_present"], ph / np.maximum(eff_dp, 1e-3), 0.0)
+        ldp = np.zeros((nc, L))
+        mdp = st["dp_mask"]
+        wmd = wdp[:, None, None] * mdp
+        for k in range(mdp.shape[1]):
+            ldp += wmd[:, k]
+        mxd = ldp.max(axis=1)
+        t_dp = np.where(
+            st["dp_touched"],
+            0.5 * (mxd / spec.link_bw
+                   + st["dp_maxlen"] * spec.hop_latency), 0.0)
+
+    # ---- overlapped stream time (ring_stream_time, arrayed) --------------
+    block0 = sel / ta
+    eff0 = np.where(block0 <= 0, 1.0, block0 / (block0 + spec.bw_half_size))
+    rounds0 = (ta + 1) // 2 if bidir else ta - 1
+    per0 = (block0 * hopf * contention) / (spec.link_bw * eff0) \
+        + hopf * spec.hop_latency
+    t_p2p = np.where((ta > 1) & (sel > 0), 3 * rounds0 * per0, 0.0)
+    tb1 = kv_bytes * sp
+    block1 = tb1 / sp
+    eff1 = np.where(block1 <= 0, 1.0, block1 / (block1 + spec.bw_half_size))
+    rounds1 = (sp + 1) // 2 if bidir else sp - 1
+    hops1 = np.maximum(1, sp_hops)
+    per1 = (block1 * hops1 * contention) / (spec.link_bw * eff1) \
+        + hops1 * spec.hop_latency
+    t_p2p = t_p2p + np.where((sp > 1) & ~seq_par & (tb1 > 0),
+                             3 * rounds1 * per1, 0.0)
+
+    # per-round orchestration overhead (sequential dependency, not hidden)
+    t_sched = np.where(ta > 1, 3 * rounds0 * T_DISPATCH, 0.0)
+
+    # Eq. 2 per layer
+    t_layer = t_coll + np.maximum(comp_layer, t_p2p) + t_sched
+    step = n_l * t_layer + t_dp + t_head
+    thr = tokens / step
+
+    # ---- power (Table I energies) ----------------------------------------
+    d2d = np.where(dmask,
+                   d2d + 2 * BYTES_W * ctx.p_total / (tp * ta) * dp, d2d)
+    e_d2d = d2d * spec.e_d2d
+    e_static = 450.0 * n_dies * step
+    energy = ctx.e_comp + ctx.e_hbm + e_d2d + e_static
+    power = energy / step
+    power_eff = np.where(power > 0, thr / power, 0.0)
+    bw_cap = n_dies * 4 * spec.link_bw
+    bw_util = np.minimum(1.0, d2d / step / bw_cap)
+    coll_frac = (n_l * t_coll + t_dp) / step
+
+    cols = np.stack([step, thr, mem, power, power_eff, bw_util, comp_layer,
+                     t_p2p, t_coll, t_dp, t_head, coll_frac, e_d2d,
+                     hopf]).T.tolist()  # one bulk float conversion
+    oom_l = oom.tolist()
+    nm_l = n_micro.tolist()
+    e_comp, e_hbm = ctx.e_comp, ctx.e_hbm
+    out: list[SimResult] = []
+    for i, deg in enumerate(degs):
+        got = fb.get(i)
+        if got is not None:
+            out.append(got)
+            continue
+        (c_step, c_thr, c_mem, c_pow, c_pe, c_bw, c_comp, c_p2p, c_coll,
+         c_dp, c_head, c_cf, c_e, c_hf) = cols[i]
+        out.append(SimResult(
+            c_step, c_thr, c_mem, oom_l[i], c_pow, c_pe, c_bw,
+            {
+                "comp_layer": c_comp,
+                "p2p_layer": c_p2p,
+                "coll_layer": c_coll,
+                "dp_exposed": c_dp,
+                "head": c_head,
+                "n_micro": nm_l[i],
+                "hop_factor": int(c_hf),
+                "collective_frac": c_cf,
+                "e_comp": e_comp, "e_hbm": e_hbm,
+                "e_d2d": c_e,
+                "tcme": 1.0,
+            },
+            deg, engine,
+        ))
+    return out
 
 
 def _traffic_and_power(ctx: StepCostContext, deg: ParallelDegrees, *,
@@ -483,16 +1125,7 @@ def _traffic_and_power(ctx: StepCostContext, deg: ParallelDegrees, *,
 
     # tail latency: worst ring-hop distance of the TATP groups (Fig. 5a)
     tatp_groups = groups.get("tatp", [])
-    if tatp_groups:
-        if tatp_bidirectional:
-            hop_factor = max(max_ring_hops(g, wafer, wrap=False)
-                             for g in tatp_groups)
-        else:  # naive TSPP needs the wrap link: line topology pays O(N)
-            hop_factor = max(max_ring_hops(g, wafer, wrap=True)
-                             for g in tatp_groups)
-        hop_factor = max(1, hop_factor)
-    else:
-        hop_factor = 1
+    hop_factor = _tatp_hop_factor(tatp_groups, wafer, tatp_bidirectional)
 
     dp_bytes = BYTES_W * ctx.p_total / (deg.tp * deg.tatp) \
         if deg.dp > 1 and not fsdp else 0.0
@@ -678,8 +1311,7 @@ def _traffic_and_power(ctx: StepCostContext, deg: ParallelDegrees, *,
             sel, deg.tatp, spec, bidirectional=tatp_bidirectional,
             hops=hop_factor, stages=3, contention=contention)
     if deg.sp > 1 and not deg.seq_par:
-        sp_hops = max((max_ring_hops(g, wafer, wrap=False)
-                       for g in groups.get("sp", [])), default=1)
+        sp_hops = _sp_hop_factor(groups.get("sp", []), wafer)
         t_p2p += ring_stream_time(kv_bytes * deg.sp, deg.sp, spec,
                                   bidirectional=tatp_bidirectional,
                                   hops=max(1, sp_hops), stages=3,

@@ -30,6 +30,8 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.wafer.simulator import (BYTES_ACT, ParallelDegrees, SimResult,
                                    StepCostContext, candidate_degrees,
@@ -85,12 +87,26 @@ def partition_graph(cfg: ModelConfig) -> list[str]:
 
 
 def _score(res: SimResult) -> float:
-    return res.throughput if res.ok else -res.mem_per_die
+    # memoized on the result: DP re-sweeps re-score the same cached
+    # SimResults thousands of times per solve
+    s = res.score_cache
+    if s is None:
+        s = res.throughput if res.ok else -res.mem_per_die
+        res.score_cache = s
+    return s
 
 
 # generous degree ladder for subset-totals: composite values let degraded
 # wafers with awkward alive counts use most (not all) surviving dies
 _LADDER = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+_ALL_DIMS = ("dp", "tp", "sp", "tatp")
+# DP candidate grids keyed on everything that determines them — the die
+# count (which fixes refine_values), the swept pair, the remaining
+# degrees, and the Megatron-3 flag.  ParallelDegrees is frozen, so the
+# grids are shared across solves and evaluators; building ~10² dataclass
+# instances per grid per sweep was a measurable share of solve time.
+_GRID_CACHE: dict = {}
 
 
 def refine_values(n: int) -> tuple[int, ...]:
@@ -99,6 +115,25 @@ def refine_values(n: int) -> tuple[int, ...]:
     composite ladder (subset totals — spare dies idle)."""
     return tuple(sorted(set(divisors(n)).union(
         v for v in _LADDER if v <= n)))
+
+
+def _grid_scores(ctx: StepCostContext, cands: list) -> "np.ndarray":
+    """Score vector of one (cached, persistent) candidate grid.
+
+    Grids from ``_GRID_CACHE`` are immutable and results are memoized per
+    context, so the whole vector is cached on the context after the first
+    evaluation — DP re-sweeps over converged grids become one ``argmax``
+    instead of a 10²-candidate Python scan."""
+    sv = ctx.__dict__.get("_scorevecs")
+    if sv is None:
+        sv = ctx._scorevecs = {}
+    vec = sv.get(id(cands))
+    if vec is None:
+        results = ctx.evaluate_many(cands)
+        vec = np.fromiter((_score(r) for r in results), np.float64,
+                          len(results))
+        sv[id(cands)] = vec
+    return vec
 
 
 def dp_refine(ctx: StepCostContext, start: ParallelDegrees,
@@ -124,14 +159,23 @@ def dp_refine(ctx: StepCostContext, start: ParallelDegrees,
                 # whole (va, vb) grid scored in one batch; subset totals are
                 # allowed (spare dies idle) — essential for degraded wafers
                 # with awkward alive counts
-                cands = [replace(cur, **{da: va, db: vb})
-                         for va in vals for vb in vals
-                         if rest * va * vb <= n]
-                results = ctx.evaluate_many(cands)
-                for cand, res in zip(cands, results):
-                    s = _score(res)
+                gkey = (n, da, db,
+                        tuple(getattr(cur, d) for d in _ALL_DIMS
+                              if d not in (da, db)), cur.seq_par)
+                cands = _GRID_CACHE.get(gkey)
+                if cands is None:
+                    cands = [replace(cur, **{da: va, db: vb})
+                             for va in vals for vb in vals
+                             if rest * va * vb <= n]
+                    _GRID_CACHE[gkey] = cands
+                # the running-max scan equals the grid argmax (first tie
+                # wins in both), so the vectorized form picks the same cur
+                svec = _grid_scores(ctx, cands)
+                if len(svec):
+                    j = int(np.argmax(svec))
+                    s = float(svec[j])
                     if s > cur_s:
-                        cur, cur_s = cand, s
+                        cur, cur_s = cands[j], s
                         improved = True
     return cur
 
@@ -159,20 +203,29 @@ def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
         # from a subset-total parent collapsed back to the parent.
         return deg.total <= n
 
+    def remake(deg, **kw):
+        # direct construction: dataclasses.replace went through asdict
+        # machinery on every GA move and showed up in solve profiles
+        return ParallelDegrees(kw.get("dp", deg.dp), kw.get("tp", deg.tp),
+                               kw.get("sp", deg.sp),
+                               kw.get("tatp", deg.tatp),
+                               seq_par=deg.seq_par)
+
     def mutate(deg):
         # swap move: trade a factor of 2 between two dimensions so the die
         # count is preserved (plus occasional single-dim jitter)
         a, b = rng.sample(genome_dims, 2)
         va, vb = getattr(deg, a), getattr(deg, b)
         if va > 1 and rng.random() < 0.8:
-            cand = replace(deg, **{a: va // 2, b: vb * 2})
+            cand = remake(deg, **{a: va // 2, b: vb * 2})
         else:
-            cand = replace(deg, **{a: max(1, min(64, va * 2))})
+            cand = remake(deg, **{a: max(1, min(64, va * 2))})
         return cand if legal(cand) else deg
 
     def crossover(a, b):
-        cand = replace(a, **{d: getattr(rng.choice((a, b)), d)
-                             for d in genome_dims})
+        cand = ParallelDegrees(rng.choice((a, b)).dp, rng.choice((a, b)).tp,
+                               rng.choice((a, b)).sp,
+                               rng.choice((a, b)).tatp, seq_par=a.seq_par)
         return cand if legal(cand) else a
 
     popl = list(seeds)
@@ -203,15 +256,19 @@ def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
 def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                engine: str = "tcme", space: str = "temp", seed: int = 0,
                dies: Optional[list[int]] = None,
-               evaluator: str = "batch") -> SolveResult:
+               evaluator: str = "batch",
+               stage1: Optional[str] = None) -> SolveResult:
     """Dual-level solve.  ``evaluator="reference"`` routes every score
     through the seed scalar path (same trajectory — results are bitwise
-    identical — used by benchmarks to measure the engine speedup)."""
+    identical — used by benchmarks to measure the engine speedup);
+    ``stage1="jax"`` runs the Tier-B stage-1 arithmetic through the jitted
+    twin (million-candidate sweeps)."""
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
     t0 = time.time()
     ctx = StepCostContext(wafer, cfg, batch, seq, engine,
-                          fsdp=spec["fsdp"], dies=dies, evaluator=evaluator)
+                          fsdp=spec["fsdp"], dies=dies, evaluator=evaluator,
+                          stage1=stage1)
     subs = partition_graph(cfg)  # level 0 (scopes the DP passes)
     start = ParallelDegrees(dp=ctx.n_dies, seq_par=spec["seq_par"])
     cur = start
@@ -379,6 +436,33 @@ def _micro_candidates(batch: int, cands: Sequence[int]) -> list[int]:
     return out
 
 
+def _wafer_fingerprint(w: Wafer) -> tuple:
+    return (w.spec, w.failed_dies, w.failed_links)
+
+
+def stage_boundary_p2p(wafers: Sequence[Wafer], stage_wafer, stage_dies,
+                       boundary_bytes: float, n_micro: int,
+                       inter_wafer_bw: float) -> list[float]:
+    """Per-boundary activation-transfer time for one pipeline layout.
+
+    Boundary ``b`` sits between stages ``b`` and ``b+1``.  Boundaries
+    crossing wafers pay the inter-wafer bandwidth; boundaries internal to
+    a wafer (co-located stages, ``pp > n_wafers``) pay the physical D2D
+    cut between the two die subsets — ``cut_links · link_bw``, which on a
+    4×8 wafer split in half is 8 TB/s, *slower* than the 9 TB/s
+    inter-wafer fabric the old model charged them at."""
+    out = []
+    for b in range(len(stage_wafer) - 1):
+        if stage_wafer[b] == stage_wafer[b + 1]:
+            w = wafers[stage_wafer[b]]
+            cut = max(w.cut_links(stage_dies[b], stage_dies[b + 1]), 1)
+            bw = cut * w.spec.link_bw
+        else:
+            bw = inter_wafer_bw
+        out.append(boundary_bytes / n_micro / bw)
+    return out
+
+
 def dlws_solve_multiwafer(
         wafers: Sequence[Wafer], cfg: ModelConfig, batch: int, seq: int, *,
         engine: str = "tcme", space: str = "temp", seed: int = 0,
@@ -387,22 +471,31 @@ def dlws_solve_multiwafer(
         pp_multipliers: Sequence[int] = (1,),
         n_micro_candidates: Sequence[int] = (4, 8, 16, 32),
         families: Sequence[str] = ("gpipe", "1f1b"),
-        max_rebalance: int = 8) -> MultiWaferSolveResult:
+        max_rebalance: int = 8,
+        stage_cache: Optional[dict] = None) -> MultiWaferSolveResult:
     """Upper DLWS level: solve pipeline parallelism across ``wafers``.
 
     Chooses the pipeline degree (``n_wafers × mult`` for each multiplier),
     the layer → stage split (die-count-proportional, so a degraded wafer
     automatically gets fewer layers), the microbatch count and the
-    schedule family, calling the existing per-wafer :func:`dlws_solve` for
-    every distinct stage sub-problem and scoring each candidate pipeline
-    with the executable schedule model in :mod:`repro.core.schedule`.
+    schedule family.  The ``(mult × split × family × n_micro)`` candidate
+    space is scored in two batched phases: first every *distinct* stage
+    sub-problem across all pipeline-shape candidates is solved once
+    through the per-wafer :func:`dlws_solve` (stage solutions are
+    memoized across pipeline candidates, and across *calls* when the
+    caller passes a shared ``stage_cache`` — keys carry the full wafer
+    fingerprint, die subset, layer count and workload identity, so
+    sharing one dict across solves/systems is safe); then every candidate
+    pipeline is scored against the executable schedule model in
+    :mod:`repro.core.schedule` (``schedule_and_report`` memoizes the slot
+    executor per ``(family, pp, n_micro)`` shape).
 
     With ``mult > 1`` the stages sharing a wafer each get a contiguous
     *subset* of its dies (the baselines' regime: shorter stages, more of
     them, more bubbles) — which is why the ``dies=`` plumbing through the
-    cost engine matters here.  Stage boundaries crossing wafers and
-    boundaries internal to a wafer are both charged at ``inter_wafer_bw``
-    (conservative: the on-wafer boundary is at least as fast).
+    cost engine matters here.  Stage boundaries crossing wafers pay the
+    inter-wafer bandwidth; boundaries internal to a wafer pay the D2D cut
+    between the two die subsets (:func:`stage_boundary_p2p`).
 
     Memory feasibility is re-judged at the pipeline level: stage ``s``
     holds ``inflight_s`` of ``n_micro`` microbatches' activations
@@ -411,7 +504,7 @@ def dlws_solve_multiwafer(
     fit.  If no candidate is feasible, layers migrate away from the worst
     over-capacity stage (≤ ``max_rebalance`` moves) before giving up.
     """
-    from repro.core.schedule import pipeline_schedule, simulate_pipeline
+    from repro.core.schedule import pipeline_step_time, schedule_and_report
     from repro.wafer.simulator import STRATEGY_SPACES
     t0 = time.time()
     n_wafers = len(wafers)
@@ -419,12 +512,15 @@ def dlws_solve_multiwafer(
         raise ValueError("need at least one wafer")
     spec = STRATEGY_SPACES[space]
     micro_cands = _micro_candidates(batch, n_micro_candidates)
-    solve_cache: dict = {}
+    solve_cache: dict = stage_cache if stage_cache is not None else {}
     evaluated = 0
 
     def stage_solve(widx: int, dies: tuple[int, ...], n_layers: int):
         nonlocal evaluated
-        key = (widx, dies, n_layers)
+        # cfg itself (frozen dataclass) is the workload identity — keying
+        # on cfg.name alone would alias two configs sharing a name
+        key = (_wafer_fingerprint(wafers[widx]), dies, n_layers,
+               cfg, batch, seq, engine, space, seed)
         got = solve_cache.get(key)
         if got is None:
             scfg = stage_config(cfg, n_layers)
@@ -458,10 +554,10 @@ def dlws_solve_multiwafer(
         caps = [wafers[stage_wafer[s]].spec.hbm_cap for s in range(pp)]
         oom = any(m > c for m, c in zip(mems, caps)) \
             or any(s.best is None or not s.best.ok for s in sols)
-        from repro.core.schedule import pipeline_step_time
         half = [s.best.step_time / (2 * n_micro) if s.best else float("inf")
                 for s in sols]
-        p2p = boundary_bytes / n_micro / inter_wafer_bw if pp > 1 else 0.0
+        p2p = stage_boundary_p2p(wafers, stage_wafer, stage_dies,
+                                 boundary_bytes, n_micro, inter_wafer_bw)
         t_step = pipeline_step_time(sched, half, half, p2p)
         thr = batch * seq / t_step if t_step > 0 else 0.0
         return MultiWaferSolveResult(
@@ -482,6 +578,9 @@ def dlws_solve_multiwafer(
             return max(a.stage_mem) < max(b.stage_mem)
         return a.throughput > b.throughput
 
+    # ---- phase 1: enumerate pipeline shapes (mult × layer split) ---------
+    combos: list[tuple[list[int], list[tuple[int, ...]], tuple[int, ...]]] \
+        = []
     for mult in pp_multipliers:
         pp = n_wafers * mult
         if pp > cfg.n_layers or pp < 1:
@@ -497,13 +596,22 @@ def dlws_solve_multiwafer(
         equal = split_layers(cfg.n_layers, [1.0] * pp)
         if equal not in splits:
             splits.append(equal)
-        scheds = {(f, m): (lambda sc: (sc, simulate_pipeline(sc)))(
-            pipeline_schedule(f, pp, m))
-            for f in families for m in micro_cands}
         for layers in splits:
-            for (family, n_micro), sched_rep in scheds.items():
+            combos.append((stage_wafer, stage_dies, layers))
+
+    # ---- phase 2: solve every distinct stage sub-problem once ------------
+    for stage_wafer, stage_dies, layers in combos:
+        for s in range(len(layers)):
+            stage_solve(stage_wafer[s], stage_dies[s], layers[s])
+
+    # ---- phase 3: score the full (shape × family × n_micro) batch --------
+    for stage_wafer, stage_dies, layers in combos:
+        pp = len(layers)
+        for family in families:
+            for n_micro in micro_cands:
                 cand = score(stage_wafer, stage_dies, layers, family,
-                             n_micro, sched_rep)
+                             n_micro, schedule_and_report(family, pp,
+                                                          n_micro))
                 if better(cand, best):
                     best = cand
 
@@ -525,11 +633,10 @@ def dlws_solve_multiwafer(
         layers = list(best.stage_layers)
         layers[src] -= 1
         layers[dst] += 1
-        sched_rep = (pipeline_schedule(best.family, best.pp, best.n_micro),
-                     None)
-        sched_rep = (sched_rep[0], simulate_pipeline(sched_rep[0]))
         cand = score(best.stage_wafer, best.stage_dies, tuple(layers),
-                     best.family, best.n_micro, sched_rep)
+                     best.family, best.n_micro,
+                     schedule_and_report(best.family, best.pp,
+                                         best.n_micro))
         if better(cand, best):
             best = cand
         else:

@@ -67,7 +67,29 @@ def _pair_uses_link(op: CommOp, idx: int, pair, wafer: Wafer,
 def optimize_phase(ops: list[CommOp], wafer: Wafer, *, max_iter: int = 64,
                    min_gain: float = 1e-3) -> TCMEReport:
     """Runs the five-phase optimizer in place (mutates op.routing/multicast).
-    Returns the contention report."""
+    Returns the contention report.
+
+    The optimizer is deterministic in the phase's op structure (kinds,
+    groups, payloads) and the wafer, so on cache-enabled wafers the
+    resulting mutations are memoized per phase fingerprint: a re-solve of
+    the same step (repeat launches, fault sweeps re-scoring the surviving
+    configuration) replays the recorded routing instead of re-running the
+    greedy search — every downstream load/time query sees identical state.
+    """
+    ckey = None
+    if wafer.cache_enabled:
+        ckey = (tuple((op.kind, op.group, op.nbytes, op.chunk_bytes,
+                       op.multicast, op.tag) for op in ops),
+                max_iter, min_gain)
+        hit = wafer._tcme_cache.get(ckey)
+        if hit is not None:
+            report, states = hit
+            for op, (group, routing, custom, mcast) in zip(ops, states):
+                op.group = group
+                op.routing = dict(routing)
+                op.custom_paths = dict(custom)
+                op.multicast = mcast
+            return report
     # Phase 1: init all paths XY
     for op in ops:
         op.routing = {i: "xy" for i, _ in enumerate(op.pairs())}
@@ -176,4 +198,9 @@ def optimize_phase(ops: list[CommOp], wafer: Wafer, *, max_iter: int = 64,
 
     loads = link_loads(ops, wafer)
     _, final = _max_link(loads)
-    return TCMEReport(init_load, final, it, merged, rerouted, history)
+    report = TCMEReport(init_load, final, it, merged, rerouted, history)
+    if ckey is not None:
+        wafer._tcme_cache[ckey] = (report, [
+            (op.group, dict(op.routing), dict(op.custom_paths),
+             op.multicast) for op in ops])
+    return report

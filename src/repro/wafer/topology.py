@@ -66,6 +66,18 @@ class Wafer:
     _link_ids: dict = field(default_factory=dict, repr=False, compare=False)
     _groups_cache: dict = field(default_factory=dict, repr=False,
                                 compare=False)
+    _n_links: int = field(default=0, repr=False, compare=False)
+    # link-template bank: every distinct (axis-kind, group-structure)
+    # hop-count row ever built on this wafer, as one growing matrix the
+    # batched traffic stage gathers from (repro.wafer.simulator)
+    _bank_rows: list = field(default_factory=list, repr=False, compare=False)
+    _bank_index: dict = field(default_factory=dict, repr=False, compare=False)
+    _bank_mat: object = field(default=None, repr=False, compare=False)
+    # per-candidate-list batch structures (large mask arrays): bounded by
+    # the batched traffic stage, unlike the small structural caches above
+    _batch_cache: dict = field(default_factory=dict, repr=False,
+                               compare=False)
+    _tcme_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     def uncached(self) -> "Wafer":
         """A copy with memoization disabled (fresh, empty caches)."""
@@ -84,6 +96,38 @@ class Wafer:
 
     def alive_dies(self) -> list[int]:
         return [d for d in range(self.spec.n_dies) if self.alive(d)]
+
+    def link_universe(self) -> int:
+        """Register every geometric mesh link (both directions) in the
+        link-id registry and return its size — the fixed dense width of the
+        link-template bank rows used by the batched traffic engine.
+
+        Failed links keep their ids (no path ever includes them), so the
+        width is stable across fault states and new templates can never
+        mint an id at or beyond it.
+        """
+        if not self._n_links:
+            ids = self._link_ids
+            for d in range(self.spec.n_dies):
+                r, c = self.rc(d)
+                for dr, dc in ((0, 1), (1, 0)):
+                    nr, nc = r + dr, c + dc
+                    if nr < self.spec.rows and nc < self.spec.cols:
+                        n = self.die(nr, nc)
+                        for link in ((d, n), (n, d)):
+                            if link not in ids:
+                                ids[link] = len(ids)
+            self._n_links = len(ids)
+        return self._n_links
+
+    def cut_links(self, a_dies: Iterable[int], b_dies: Iterable[int]) -> int:
+        """Working directed links from ``a_dies`` into ``b_dies``.
+
+        The physical bandwidth of an on-wafer pipeline-stage boundary is
+        ``cut_links · link_bw`` (the multi-wafer solver charges co-located
+        stage boundaries at this instead of the inter-wafer bandwidth)."""
+        b = set(b_dies)
+        return sum(1 for d in a_dies for n in self.neighbors(d) if n in b)
 
     def link_ok(self, a: int, b: int) -> bool:
         return ((a, b) not in self.failed_links

@@ -124,6 +124,22 @@ def _op_link_template(op: CommOp, wafer: Wafer) -> _LinkTemplate:
     return link_template(op.kind, op.group, wafer)
 
 
+def template_bank_row(ids: np.ndarray, wafer: Wafer) -> np.ndarray:
+    """Dense per-link hop-count row of a (concatenated) link template,
+    over the wafer's fixed link universe.
+
+    This is the bank form of a template: ``row[link_id]`` counts how many
+    times the pair-by-pair traversal crosses that link.  The batched
+    traffic stage (`repro.wafer.simulator`) gathers these rows into a
+    per-wafer matrix so a whole candidate batch's link loads become row
+    gathers — note that *consumers must replay the per-hop add chain*
+    (``w`` added ``count`` times), not multiply ``count · w``, to stay
+    bitwise identical to the sequential :func:`max_load_entries` /
+    :func:`link_loads` accumulation.
+    """
+    return np.bincount(ids, minlength=wafer.link_universe())
+
+
 def pair_hop_bytes(kind: str, glen: int, nbytes: float) -> float:
     """Bytes crossing each ring hop for one op (the single source of the
     per-kind formulas; :meth:`CommOp.pair_bytes` delegates here)."""

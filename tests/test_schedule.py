@@ -1,5 +1,7 @@
 """Property tests (hypothesis) for the TSPP/TATP orchestration schedules."""
 
+import pytest
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
@@ -117,6 +119,33 @@ def test_pipeline_step_time_matches_closed_form():
         got = pipeline_step_time(one_f_one_b_schedule(pp, nm), t_f, t_b,
                                  p2p)
         assert got >= exp - 1e-12, (pp, nm, "1f1b asymmetric")
+
+
+def test_pipeline_step_time_per_boundary():
+    """Sequence-form p2p: boundary b is paid by stage b's forwards and
+    stage b+1's backwards only — edge ops (stage 0 bwd, last stage fwd)
+    send nothing, and a single hot boundary must cost less than charging
+    every op the uniform worst case."""
+    sched = gpipe_schedule(3, 4)
+    t = 0.05
+    uniform = pipeline_step_time(sched, t, t, 0.01)
+    per_boundary = pipeline_step_time(sched, t, t, [0.01, 0.01])
+    assert per_boundary <= uniform  # edge ops stop paying
+    hot = pipeline_step_time(sched, t, t, [0.01, 0.0])
+    assert hot <= per_boundary
+    # zero boundaries == zero scalar exactly
+    assert pipeline_step_time(sched, t, t, [0.0, 0.0]) \
+        == pipeline_step_time(sched, t, t, 0.0)
+    with pytest.raises(ValueError):
+        pipeline_step_time(sched, t, t, [0.01])  # needs pp-1 entries
+
+
+def test_schedule_and_report_memoized():
+    from repro.core.schedule import schedule_and_report
+    s1, r1 = schedule_and_report("1f1b", 4, 8)
+    s2, r2 = schedule_and_report("1f1b", 4, 8)
+    assert s1 is s2 and r1 is r2  # one executor run per shape
+    assert r1.ok
 
 
 def test_pipeline_step_time_gated_by_slowest_stage():

@@ -157,6 +157,91 @@ def test_oom_prepruning_keeps_memory_exact():
 
 
 # ---------------------------------------------------------------------------
+# (a2) property-style bitwise equivalence of the batched traffic stage on
+# randomized degraded wafers (dead dies, dead links, snake die subsets)
+# across every stream policy and both orchestration directions
+# ---------------------------------------------------------------------------
+
+
+def _spread(cands, k=9):
+    """A structurally diverse subsample: keep runtime bounded while still
+    covering tatp/sp/tp-heavy shapes and the extremes."""
+    if len(cands) <= k:
+        return cands
+    picks = {0, len(cands) - 1}
+    picks.add(max(range(len(cands)), key=lambda i: cands[i].tatp))
+    picks.add(max(range(len(cands)), key=lambda i: cands[i].sp))
+    picks.add(max(range(len(cands)), key=lambda i: cands[i].tp))
+    step = max(1, len(cands) // k)
+    picks.update(range(0, len(cands), step))
+    return [cands[i] for i in sorted(picks)][:k + 4]
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("stream", ("auto", "weights", "acts"))
+def test_batched_traffic_bitwise_on_random_degraded_wafers(seed, stream):
+    from repro.wafer.fault import random_degraded_wafer
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    dw, dies = random_degraded_wafer(seed)
+    n = len(dies)
+    spec = STRATEGY_SPACES["temp"]
+    bidir = seed % 2 == 0  # alternate orchestration direction
+    cands = _spread(candidate_degrees(n, spec["allow"], spec["seq_par"]))
+    assert cands, (seed, n)
+    ctx = StepCostContext(dw, cfg, 32, 2048, "tcme", stream=stream,
+                          tatp_bidirectional=bidir, dies=dies)
+    fast = simulate_batch(ctx, cands, run_tcme_optimizer=False)
+    for deg, res in zip(cands, fast):
+        ref = simulate_step_reference(dw.uncached(), cfg, 32, 2048, deg,
+                                      "tcme", stream=stream,
+                                      tatp_bidirectional=bidir, dies=dies,
+                                      run_tcme_optimizer=False)
+        _assert_bitwise_equal(res, ref, (seed, stream, deg.as_tuple()))
+
+
+@pytest.mark.parametrize("seed", (1, 5))
+def test_dlws_trajectory_bitwise_on_random_degraded_wafers(seed):
+    """Whole-solve equivalence: the batched evaluator and the scalar
+    reference evaluator walk the same search trajectory to bitwise-equal
+    solutions on degraded wafers with die subsets."""
+    from repro.wafer.fault import random_degraded_wafer
+    from repro.wafer.solver import dlws_solve
+    cfg, _ = TABLE_II["llama2-7b"]
+    dw, dies = random_degraded_wafer(seed)
+    fast = dlws_solve(dw, cfg, 16, 2048, space="temp", dies=dies)
+    ref = dlws_solve(dw.uncached(), cfg, 16, 2048, space="temp",
+                     dies=dies, evaluator="reference")
+    assert fast.config == ref.config
+    assert fast.best.throughput == ref.best.throughput
+    assert fast.best.mem_per_die == ref.best.mem_per_die
+    assert fast.evaluated == ref.evaluated  # same trajectory, same work
+
+
+def test_stage1_jax_matches_numpy():
+    """Opt-in jax stage-1 twin: numerically equal (float64) to the numpy
+    arithmetic over a whole candidate space."""
+    jax = pytest.importorskip("jax")
+    del jax
+    import numpy as np
+
+    from repro.wafer.simulator import _stage1_jax, _stage1_numpy
+    cfg, _ = TABLE_II["gpt3-76b"]
+    spec = STRATEGY_SPACES["temp"]
+    cands = candidate_degrees(32, spec["allow"], spec["seq_par"])
+    ctx = StepCostContext(WAFER, cfg, 64, 2048, "tcme", fsdp=spec["fsdp"])
+    dp = np.array([d.dp for d in cands], np.int64)
+    tp = np.array([d.tp for d in cands], np.int64)
+    sp = np.array([d.sp for d in cands], np.int64)
+    ta = np.array([d.tatp for d in cands], np.int64)
+    sq = np.array([d.seq_par for d in cands], bool)
+    a = _stage1_numpy(ctx, dp, tp, sp, ta, sq)
+    b = _stage1_jax(ctx, dp, tp, sp, ta, sq)
+    for k in a:
+        assert np.allclose(np.asarray(a[k], float),
+                           np.asarray(b[k], float), rtol=1e-12), k
+
+
+# ---------------------------------------------------------------------------
 # (b) solver-quality regression: DLWS never loses to SMap's fixed rule
 # ---------------------------------------------------------------------------
 
@@ -294,6 +379,57 @@ def test_memory_components_pin_engine_memory_model(space):
         n_micro = res.breakdown["n_micro"]
         assert fixed + act_full / n_micro == res.mem_per_die, deg
         assert seqs >= n_micro
+
+
+def test_cut_links_counts_working_directed_links():
+    w = Wafer(WaferSpec())
+    top = [w.die(r, c) for r in (0, 1) for c in range(8)]
+    bottom = [w.die(r, c) for r in (2, 3) for c in range(8)]
+    assert w.cut_links(top, bottom) == 8  # one vertical link per column
+    dead = w.with_faults(links=[(w.die(1, 0), w.die(2, 0))])
+    assert dead.cut_links(top, bottom) == 7
+
+
+def test_stage_boundary_p2p_charges_on_wafer_cut():
+    """Co-located stages (pp > n_wafers) pay the physical D2D cut — on a
+    half-split 4×8 wafer that is 8 links · 1 TB/s = 8 TB/s, slower than
+    the 9 TB/s the old uniform model charged them at — while cross-wafer
+    boundaries keep the inter-wafer bandwidth."""
+    from repro.wafer.solver import (INTER_WAFER_BW, stage_boundary_p2p,
+                                    stage_die_split)
+    wafers = [Wafer(WaferSpec()), Wafer(WaferSpec())]
+    halves0 = stage_die_split(wafers[0], 2)
+    halves1 = stage_die_split(wafers[1], 2)
+    stage_wafer = [0, 0, 1, 1]
+    stage_dies = halves0 + halves1
+    nb, nm = 1e9, 8
+    p2p = stage_boundary_p2p(wafers, stage_wafer, stage_dies, nb, nm,
+                             INTER_WAFER_BW)
+    assert len(p2p) == 3
+    cut_bw = 8 * wafers[0].spec.link_bw
+    assert p2p[0] == nb / nm / cut_bw  # on-wafer: D2D cut (8 TB/s)
+    assert p2p[1] == nb / nm / INTER_WAFER_BW  # cross-wafer fabric
+    assert p2p[2] == p2p[0]
+    assert p2p[0] > p2p[1]  # the old model undercharged these
+
+
+def test_multiwafer_stage_cache_shared_across_calls():
+    """A caller-supplied stage_cache makes the second upper solve skip
+    every per-stage DLWS (keys carry the full wafer/workload identity)."""
+    from repro.wafer.solver import dlws_solve_multiwafer
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    wafers = [Wafer(WaferSpec()), Wafer(WaferSpec())]
+    cache: dict = {}
+    a = dlws_solve_multiwafer(wafers, cfg, 32, 2048,
+                              n_micro_candidates=(8,), stage_cache=cache)
+    assert a.evaluated > 0
+    n_keys = len(cache)
+    b = dlws_solve_multiwafer(wafers, cfg, 32, 2048,
+                              n_micro_candidates=(8,), stage_cache=cache)
+    assert b.evaluated == 0  # every stage sub-problem came from the cache
+    assert len(cache) == n_keys
+    assert (a.stage_layers, a.pp, a.n_micro, a.family, a.throughput) \
+        == (b.stage_layers, b.pp, b.n_micro, b.family, b.throughput)
 
 
 def test_multiwafer_solve_rejects_unfillable_pipeline():
