@@ -13,8 +13,7 @@ import numpy as np
 
 from benchmarks.common import csv_row, save_rows
 from repro.configs.paper_models import TABLE_II
-from repro.wafer.simulator import (ParallelDegrees, best_config,
-                                   candidate_degrees, simulate_step)
+from repro.wafer.simulator import candidate_degrees, simulate_step
 from repro.wafer.topology import Wafer, WaferSpec
 
 

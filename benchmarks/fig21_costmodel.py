@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import csv_row, save_rows
 from repro.configs.paper_models import TABLE_II

@@ -4,11 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo contract; detailed
 records land in results/bench/*.json.
 
 ``--check`` is the one-command smoke gate: tier-1 pytest, the
-``search/engine_baseline`` drift check, and the fig19 multi-wafer smoke
-(GPT-3 175B ×2 through the solve→plan→schedule pipeline, speedup and
-feasibility gated against the recorded baseline), so plan-pipeline
-regressions, cost-engine drift and multi-wafer drift are caught together
-(exit 1 on any).
+``search/engine_baseline`` drift check, the fig19 multi-wafer smoke
+(GPT-3 175B ×2 through the solve→plan→schedule pipeline) and the
+``serve/decode_baseline`` gate (decode solve + continuous-batching
+scheduler + serving cost model, pinned by plan/trace hashes), so
+plan-pipeline regressions, cost-engine drift, multi-wafer drift and
+serving drift are caught together.  A per-gate pass/fail summary table
+prints at the end (exit 1 on any failure).
 """
 
 from __future__ import annotations
@@ -27,12 +29,15 @@ BENCHES = [
     "fig20_fault",
     "fig21_costmodel",
     "search_time",
+    "serve_decode",
     "kernel_bench",
 ]
 
 
 def check() -> None:
-    """Smoke gate: tier-1 pytest + cost-engine drift, one command."""
+    """Smoke gate: tier-1 pytest + every drift gate, one command, one
+    pass/fail summary table at the end (a failing gate's name must not
+    drown in pytest noise)."""
     import os
     import subprocess
 
@@ -41,10 +46,13 @@ def check() -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
                                if env.get("PYTHONPATH") else "")
+    gates: list[tuple[str, bool, str]] = []  # (name, ok, detail)
+
     print("== tier-1 pytest ==", flush=True)
     r = subprocess.run([sys.executable, "-m", "pytest", "-q"], env=env,
                        cwd=root)
-    failed = r.returncode != 0
+    gates.append(("tier-1 pytest", r.returncode == 0,
+                  f"exit {r.returncode}"))
 
     print("== search/engine_baseline drift ==", flush=True)
     summary = baseline = None
@@ -60,16 +68,15 @@ def check() -> None:
         drift = summary["avg_engine_speedup"] \
             / max(base["avg_engine_speedup"], 1e-9)
         ok = summary["all_identical_to_scalar"] and drift >= 0.5
-        print(f"engine_speedup this_run="
-              f"{summary['avg_engine_speedup']:.1f}x "
-              f"baseline={base['avg_engine_speedup']:.1f}x "
-              f"ratio={drift:.2f} "
-              f"identical={summary['all_identical_to_scalar']} "
-              f"-> {'OK' if ok else 'DRIFT'}")
-        failed |= not ok
-    except Exception:
+        detail = (f"this_run={summary['avg_engine_speedup']:.1f}x "
+                  f"baseline={base['avg_engine_speedup']:.1f}x "
+                  f"ratio={drift:.2f} "
+                  f"identical={summary['all_identical_to_scalar']}")
+        print(f"engine_speedup {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("search/engine_baseline", ok, detail))
+    except Exception as e:
         traceback.print_exc()
-        failed = True
+        gates.append(("search/engine_baseline", False, repr(e)))
 
     print("== search/multiwafer_baseline drift ==", flush=True)
     try:
@@ -84,16 +91,15 @@ def check() -> None:
         ratio = summary["mw_overhead_ratio"] / max(base_ratio, 1e-9)
         ok = summary["mw_cold_warm_identical"] and ratio <= 2.0 \
             and summary["mw_warm_speedup"] >= 1.0
-        print(f"mw_overhead this_run="
-              f"{summary['mw_overhead_ratio']:.1f}x_single "
-              f"baseline={base_ratio:.1f}x ratio={ratio:.2f} "
-              f"warm_speedup={summary['mw_warm_speedup']:.1f}x "
-              f"identical={summary['mw_cold_warm_identical']} "
-              f"-> {'OK' if ok else 'DRIFT'}")
-        failed |= not ok
-    except Exception:
+        detail = (f"this_run={summary['mw_overhead_ratio']:.1f}x_single "
+                  f"baseline={base_ratio:.1f}x ratio={ratio:.2f} "
+                  f"warm_speedup={summary['mw_warm_speedup']:.1f}x "
+                  f"identical={summary['mw_cold_warm_identical']}")
+        print(f"mw_overhead {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("search/multiwafer_baseline", ok, detail))
+    except Exception as e:
         traceback.print_exc()
-        failed = True
+        gates.append(("search/multiwafer_baseline", False, repr(e)))
 
     print("== fig19 multi-wafer smoke ==", flush=True)
     try:
@@ -106,15 +112,37 @@ def check() -> None:
         drift = spd / max(base_spd, 1e-9)
         ok = (row["temp_schedule_ok"] and row["temp_plan_schedule_ok"]
               and not row["temp_oom"] and spd >= 1.2 and drift >= 0.8)
-        print(f"fig19 {row['model']} x{row['wafers']}: "
-              f"speedup_vs_mesp={spd:.2f}x baseline={base_spd:.2f}x "
-              f"ratio={drift:.2f} schedule_ok={row['temp_schedule_ok']} "
-              f"plan_ok={row['temp_plan_schedule_ok']} "
-              f"-> {'OK' if ok else 'DRIFT'}")
-        failed |= not ok
-    except Exception:
+        detail = (f"{row['model']} x{row['wafers']}: "
+                  f"speedup_vs_mesp={spd:.2f}x baseline={base_spd:.2f}x "
+                  f"ratio={drift:.2f} "
+                  f"schedule_ok={row['temp_schedule_ok']} "
+                  f"plan_ok={row['temp_plan_schedule_ok']}")
+        print(f"fig19 {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("search/fig19_smoke", ok, detail))
+    except Exception as e:
         traceback.print_exc()
-        failed = True
+        gates.append(("search/fig19_smoke", False, repr(e)))
+
+    print("== serve/decode_baseline drift ==", flush=True)
+    try:
+        from benchmarks.serve_decode import check_gate, run as serve_run
+        rows, _, baseline = serve_run(fast=True)
+        ok, detail = check_gate(rows, baseline)
+        print(f"serve_decode {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("serve/decode_baseline", ok, detail))
+    except Exception as e:
+        traceback.print_exc()
+        gates.append(("serve/decode_baseline", False, repr(e)))
+
+    # ---- per-gate summary table ----------------------------------------
+    width = max(len(n) for n, _, _ in gates)
+    print("\n== gate summary ==")
+    for name, ok, detail in gates:
+        print(f"  {name:<{width}}  {'PASS' if ok else 'FAIL'}  "
+              f"{detail[:100]}")
+    failed = [n for n, ok, _ in gates if not ok]
+    print(f"{len(gates) - len(failed)}/{len(gates)} gates passed"
+          + (f" — FAILED: {', '.join(failed)}" if failed else ""))
     sys.exit(1 if failed else 0)
 
 

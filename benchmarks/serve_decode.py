@@ -1,0 +1,181 @@
+"""Serving benchmark: continuous-batching decode across arrival rates.
+
+For each model family (dense / MoE / SSM) the decode-objective solver
+compiles a ServePlan on the full wafer, then the continuous-batching
+engine serves a seeded open-loop Poisson workload at several load factors
+of the plan's predicted capacity — on the cost-model executor with a
+virtual clock, so every number (tokens/s, p50/p99 TTFT and per-token
+latency, SLO attainment, admission trace) is fully deterministic and
+machine-independent.
+
+Recorded numbers live in ``results/bench/serve_decode.json``:
+``baseline`` is the committed drift reference (preserved across reruns;
+refresh deliberately with ``--rebaseline``).  ``run(fast=True)`` re-runs
+one model × one rate for the ``serve/decode_baseline`` gate in
+``benchmarks/run.py --check``: the plan hash pins the solver's decode
+solution, the trace hash pins the scheduler's admission behaviour, and
+the latency/throughput metrics pin the cost model — solver, scheduler or
+cost-engine drift all trip the gate.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import platform
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.plan import compile_serve_plan
+from repro.serve.engine import (CostModelExecutor, ServeEngine,
+                                VirtualClock, poisson_arrivals)
+from repro.wafer.topology import Wafer, WaferSpec
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "bench", "serve_decode.json")
+# one model per cache family: KV-dense, KV + expert routing, O(1) state
+MODELS = (("deepseek-7b", "dense"), ("olmoe-1b-7b", "moe"),
+          ("mamba2-780m", "ssm"))
+MAX_BATCH = 64
+PROMPT, MAX_NEW = 256, 128
+MAX_SEQ = 512  # per-sequence KV budget (prompt + gen fits with headroom)
+LOADS = (0.3, 0.7, 1.2)  # arrival rate as a fraction of plan capacity
+N_REQUESTS = 120
+SEED = 7
+
+
+def _serve_row(name: str, family: str, plan, cfg, wafer,
+               load: float) -> dict:
+    cap_req_s = plan.predicted["tokens_per_s"] / MAX_NEW
+    rate = load * cap_req_s
+    tok_lat = plan.predicted["token_latency"]
+    reqs = poisson_arrivals(
+        N_REQUESTS, rate, seed=SEED, prompt_len=PROMPT,
+        max_new_tokens=MAX_NEW,
+        slo_ttft=200 * tok_lat + 1.0,  # generous absolute-ish bounds
+        slo_tpot=20 * tok_lat)
+    ex = CostModelExecutor(plan, cfg, wafer)
+    rep = ServeEngine(plan, ex, clock=VirtualClock()).run(reqs)
+    row = {"model": name, "family": family, "load": load,
+           "rate_req_s": rate, "plan_hash": plan.plan_hash,
+           "decode_mesh": list(plan.plan.degrees_tuple()),
+           "token_latency_pred": tok_lat}
+    row.update(rep.to_dict())
+    return row
+
+
+def run(fast: bool = False, rebaseline: bool = False):
+    wafer = Wafer(WaferSpec())
+    prev = None
+    try:
+        with open(BENCH_PATH) as f:
+            prev = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    prev_baseline = (prev or {}).get("baseline")
+
+    models = MODELS[:1] if fast else MODELS
+    loads = LOADS[1:2] if fast else LOADS
+    rows = []
+    for name, family in models:
+        cfg = get_config(name)
+        # fresh solve every run: the gate must catch solver drift, not
+        # replay a cached plan (the plan is still written back for
+        # launches to hit)
+        plan = compile_serve_plan(wafer, cfg, MAX_BATCH, MAX_SEQ,
+                                  use_cache=False)
+        for load in loads:
+            rows.append(_serve_row(name, family, plan, cfg, wafer, load))
+
+    summary = {
+        "per_model_plan_hash": {r["model"]: r["plan_hash"] for r in rows},
+        "per_row_trace": {f"{r['model']}@{r['load']}": r["trace_hash"]
+                          for r in rows},
+        "per_row_tokens_per_s": {f"{r['model']}@{r['load']}":
+                                 r["tokens_per_s"] for r in rows},
+        "per_row_tpot_p99": {f"{r['model']}@{r['load']}": r["tpot_p99"]
+                             for r in rows},
+        "all_finished": all(r["n_finished"] == N_REQUESTS for r in rows),
+    }
+    if rebaseline or prev_baseline is None:
+        baseline = summary
+    else:
+        baseline = prev_baseline
+
+    if not fast:  # a fast gate run must not overwrite the full record
+        from benchmarks.common import save_rows
+        save_rows("serve_decode_rows", rows)
+        out = {"machine": platform.machine(),
+               "python": platform.python_version(),
+               "workload": {"max_batch": MAX_BATCH, "max_seq": MAX_SEQ,
+                            "prompt": PROMPT, "max_new": MAX_NEW,
+                            "n_requests": N_REQUESTS, "seed": SEED},
+               "rows": rows, "summary": summary, "baseline": baseline}
+        if rebaseline and prev_baseline is not None:
+            out["baseline_prev"] = (prev or {}).get("baseline_prev") \
+                or prev_baseline
+        elif prev and prev.get("baseline_prev"):
+            out["baseline_prev"] = prev["baseline_prev"]
+        os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+        with open(BENCH_PATH, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    return rows, summary, prev_baseline if fast else baseline
+
+
+def check_gate(rows, baseline) -> tuple[bool, str]:
+    """The serve/decode_baseline drift verdict for one (fast) run.
+
+    Everything compared here is deterministic under the virtual clock:
+    the plan hash (solver drift), the admission trace hash (scheduler
+    drift), and the throughput/latency numbers (cost-model drift, with a
+    small float tolerance for cross-platform arithmetic).
+    """
+    if baseline is None:
+        return True, "no baseline recorded yet (first run)"
+    probs = []
+    for r in rows:
+        key = f"{r['model']}@{r['load']}"
+        bph = baseline.get("per_model_plan_hash", {}).get(r["model"])
+        if bph and bph != r["plan_hash"]:
+            probs.append(f"{r['model']} plan_hash {r['plan_hash']}!={bph}")
+        btr = baseline.get("per_row_trace", {}).get(key)
+        if btr and btr != r["trace_hash"]:
+            probs.append(f"{key} trace {r['trace_hash']}!={btr}")
+        btps = baseline.get("per_row_tokens_per_s", {}).get(key)
+        if btps:
+            ratio = r["tokens_per_s"] / max(btps, 1e-9)
+            if not (0.95 <= ratio <= 1.05):
+                probs.append(f"{key} tokens/s ratio {ratio:.3f}")
+        bp99 = baseline.get("per_row_tpot_p99", {}).get(key)
+        if bp99 and not math.isclose(r["tpot_p99"], bp99, rel_tol=0.05):
+            probs.append(f"{key} tpot_p99 {r['tpot_p99']:.2e}!={bp99:.2e}")
+        if r["n_finished"] != N_REQUESTS:
+            probs.append(f"{key} finished {r['n_finished']}/{N_REQUESTS}")
+    return not probs, "; ".join(probs) or "plan+trace+latency match"
+
+
+def main():
+    import sys
+    rows, summary, baseline = run(rebaseline="--rebaseline"
+                                  in sys.argv[1:])
+    for r in rows:
+        print(csv_row(
+            f"serve/{r['model']}@{r['load']}",
+            r["tpot_p99"] * 1e6,
+            f"tok/s={r['tokens_per_s']:.0f} "
+            f"tpot_p50={r['tpot_p50'] * 1e3:.3f}ms "
+            f"p99={r['tpot_p99'] * 1e3:.3f}ms "
+            f"ttft_p99={r['ttft_p99'] * 1e3:.1f}ms "
+            f"slo={r['slo_attainment']:.2f} "
+            f"occ={r['mean_occupancy']:.1f} "
+            f"mesh={tuple(r['decode_mesh'])}"))
+    ok, detail = check_gate(rows, baseline)
+    print(csv_row("serve/decode_baseline", 0.0 if ok else 1.0,
+                  f"{'OK' if ok else 'DRIFT'}: {detail}"))
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,6 @@ Run:  PYTHONPATH=src python examples/solve_mapping.py
 
 from repro.configs.paper_models import TABLE_II
 from repro.core.schedule import line_schedule, ring_schedule, simulate
-from repro.wafer import mapping as wmap
 from repro.wafer.fault import inject_faults, recover
 from repro.wafer.solver import dlws_solve, ilp_search
 from repro.wafer.tcme import optimize_phase

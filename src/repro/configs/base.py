@@ -8,8 +8,7 @@ only through the dry-run (ShapeDtypeStruct; no allocation).
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 
@@ -140,6 +139,38 @@ class ModelConfig:
 
     def norm_params(self) -> int:
         return 2 * self.d_model
+
+    # -- serving-side cache accounting (shared by the decode cost model and
+    # the continuous-batching engine's KV-budget admission) -----------------
+    def cache_bytes_per_seq(self, ctx_len: int, *, bytes_act: int = 2,
+                            bytes_state: int = 4) -> float:
+        """Decode-cache bytes one sequence holds at context ``ctx_len``,
+        summed over layers: per-token KV for attention layers (sliding
+        windows cap at the window), O(1) recurrent state for SSM layers.
+        The wafer decode objective and the serve engine's admission both
+        price a request through this one function, so the solver's KV
+        budget and the runtime's occupancy accounting cannot diverge."""
+        total = 0.0
+        kv_tok = 2 * self.kv_dim * bytes_act
+        for kind in self.pattern_for_layers():
+            if kind in ("G", "S"):
+                total += kv_tok * ctx_len
+            elif kind == "L":
+                w = min(ctx_len, self.sliding_window or ctx_len)
+                total += kv_tok * w
+            elif kind == "M":
+                # SSM recurrent state + conv tail: context-length-free
+                total += (self.d_inner * self.ssm_state
+                          + 4 * self.d_inner) * bytes_state
+        return total
+
+    def cache_bytes_per_token(self, ctx_len: int, *,
+                              bytes_act: int = 2) -> float:
+        """Marginal cache bytes appended per generated token at context
+        ``ctx_len`` (zero once every attention layer's window is full —
+        SSM state never grows)."""
+        grown = self.cache_bytes_per_seq(ctx_len + 1, bytes_act=bytes_act)
+        return grown - self.cache_bytes_per_seq(ctx_len, bytes_act=bytes_act)
 
 
 # ---------------------------------------------------------------------------

@@ -362,6 +362,204 @@ def load_or_compile(plan_path: Optional[str], wafer, cfg, batch: int,
 
 
 # ---------------------------------------------------------------------------
+# serve plans: the decode mesh + KV-cache contract for continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServePlan:
+    """Executable serving plan — the decode twin of :class:`WaferPlan`.
+
+    Wraps the decode-objective WaferPlan (mesh degrees, snake device
+    order, stream codec — everything a launch needs to build the mesh)
+    with the serving-side contract the continuous-batching engine
+    executes against:
+
+    * ``max_batch`` — decode slots: the max number of in-flight sequences
+      one iteration advances (the jitted decode step's batch shape),
+    * ``max_seq`` — per-sequence context budget in tokens (the KV cache's
+      sequence dimension),
+    * ``kv_layout`` — how the cache shards per axis (dp over batch, sp
+      over sequence, tp over KV heads, tatp around the ring),
+    * ``kv_bytes_per_die`` / ``kv_budget_tokens`` — the admission budget:
+      the scheduler never holds more in-flight cache than the solver
+      proved fits beside the weight shard,
+    * ``prefill_chunk`` — iteration-level admission granularity (how many
+      waiting requests one iteration may prefill into free slots).
+
+    The plan is what makes serve launches go through the same
+    solve → plan → execute pipeline as training: ``compile_serve_plan``
+    runs ``dlws_solve(objective="decode")`` and caches the result on disk
+    keyed on (arch, serving shape, wafer incl. faults, knobs).
+    """
+
+    plan: WaferPlan  # decode mesh (solved with objective="decode")
+    max_batch: int
+    max_seq: int
+    kv_layout: tuple[tuple[str, int], ...]
+    kv_bytes_per_die: float
+    kv_budget_tokens: int
+    stream_dtype: str = "native"
+    prefill_chunk: int = 4
+    predicted: dict = field(default_factory=dict)
+    solver: dict = field(default_factory=dict)
+    version: int = PLAN_VERSION
+
+    @property
+    def plan_hash(self) -> str:
+        """Executable-surface hash (telemetry excluded; the inner decode
+        mesh contributes through its own ``plan_hash``)."""
+        d = self.to_dict()
+        d.pop("predicted", None)
+        d.pop("solver", None)
+        d["plan"] = self.plan.plan_hash
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["plan"] = self.plan.to_dict()
+        d["kv_layout"] = [list(kv) for kv in self.kv_layout]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServePlan":
+        d = dict(d)
+        if d.get("version", PLAN_VERSION) > PLAN_VERSION:
+            raise ValueError(f"plan version {d['version']} is newer than "
+                             f"this runtime ({PLAN_VERSION})")
+        d["plan"] = WaferPlan.from_dict(d["plan"])
+        d["kv_layout"] = tuple((str(a), int(v))
+                               for a, v in d.get("kv_layout", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True)
+
+    @classmethod
+    def loads(cls, s: str) -> "ServePlan":
+        return cls.from_dict(json.loads(s))
+
+    def dump(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.dumps())
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ServePlan":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    # -- executable views --------------------------------------------------
+    @property
+    def arch(self) -> str:
+        return self.plan.arch
+
+    def parallel_config(self):
+        """Decode-time ParallelConfig: the inner plan's, with remat off
+        (there is no backward pass to rematerialize for)."""
+        return dataclasses.replace(self.plan.parallel_config(), remat=False)
+
+    def cache_tokens_per_request(self, prompt_len: int,
+                                 max_new_tokens: int) -> int:
+        """Budget tokens one request consumes while in flight: its full
+        context window.  A request over ``max_seq`` can never be admitted
+        (the cache's sequence dim physically cannot hold it)."""
+        return prompt_len + max_new_tokens
+
+    def summary(self) -> str:
+        pred = self.predicted or {}
+        parts = [
+            f"ServePlan[{self.plan_hash}] {self.plan.arch} "
+            f"max_batch={self.max_batch} max_seq={self.max_seq}",
+            f"  decode mesh (dp,tp,sp,tatp)={self.plan.degrees_tuple()} "
+            f"engine={self.plan.engine} codec={self.stream_dtype} "
+            f"prefill_chunk={self.prefill_chunk}",
+            f"  kv {self.kv_bytes_per_die / 1e9:.2f} GB/die "
+            f"({self.kv_budget_tokens} budget tokens, layout "
+            f"{dict(self.kv_layout)})",
+        ]
+        if pred.get("token_latency") is not None:
+            parts.append(
+                f"  predicted {pred['token_latency'] * 1e3:.3f} ms/token, "
+                f"{pred.get('tokens_per_s', 0):.0f} tok/s at full batch")
+        return "\n".join(parts)
+
+
+def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
+                       arch: Optional[str] = None, engine: str = "tcme",
+                       space: str = "temp",
+                       dies: Optional[Sequence[int]] = None,
+                       stream_dtype: str = "native",
+                       prefill_chunk: int = 4, seed: int = 0,
+                       cache_dir: Optional[str] = None,
+                       use_cache: bool = True) -> ServePlan:
+    """solve(objective="decode") → map → ServePlan, with the same on-disk
+    cache discipline as :func:`compile_plan` (any die/link death misses
+    and re-solves; ``splan_*.json`` entries never alias train plans)."""
+    from repro.wafer.simulator import StepCostContext, _decode_kv_divisors
+    from repro.wafer.simulator import decode_memory_components
+    from repro.wafer.solver import dlws_solve
+
+    arch = arch or cfg.name
+    cache_dir = cache_dir if cache_dir is not None else default_cache_dir()
+    key = plan_cache_key(arch, max_batch, max_seq, wafer, dies,
+                         engine=engine, space=space,
+                         knobs=("decode", stream_dtype, prefill_chunk))
+    path = os.path.join(cache_dir, f"splan_{key}.json")
+    if use_cache and os.path.exists(path):
+        try:
+            plan = ServePlan.load(path)
+        except (ValueError, KeyError, json.JSONDecodeError, OSError):
+            plan = None  # corrupt/foreign cache entry: fall through
+        if plan is not None:
+            PLAN_STATS["cache_hits"] += 1
+            return plan
+    PLAN_STATS["cache_misses"] += 1
+
+    PLAN_STATS["solver_calls"] += 1
+    sol = dlws_solve(wafer, cfg, max_batch, max_seq, engine=engine,
+                     space=space, seed=seed, dies=dies, objective="decode")
+    inner = plan_from_solution(
+        wafer, sol, arch=arch, batch=max_batch, seq=max_seq, engine=engine,
+        space=space, dies=dies, stream="auto", bidirectional=True,
+        stream_dtype=stream_dtype, remat=False)
+    deg = sol.config
+    ctx = StepCostContext(wafer, cfg, max_batch, max_seq, engine,
+                          dies=dies, objective="decode")
+    _, cache_bytes, _ = decode_memory_components(ctx, deg)
+    kv_div, _ = _decode_kv_divisors(cfg, deg.dp, deg.tp, deg.sp, deg.tatp)
+    kv_layout = (("dp", deg.dp), ("sp", deg.sp),
+                 ("tp", int(min(deg.tp, max(cfg.n_kv_heads, 1)))),
+                 ("tatp", deg.tatp))
+    best = sol.best
+    plan = ServePlan(
+        plan=inner, max_batch=max_batch, max_seq=max_seq,
+        kv_layout=kv_layout, kv_bytes_per_die=cache_bytes,
+        kv_budget_tokens=max_batch * max_seq,
+        stream_dtype=stream_dtype, prefill_chunk=prefill_chunk,
+        predicted={
+            "token_latency": best.step_time,
+            "tokens_per_s": best.throughput,
+            "mem_per_die": best.mem_per_die,
+            "oom": best.oom,
+            "kv_shards": int(kv_div),
+        },
+        solver={
+            "method": sol.method,
+            "search_time_s": sol.search_time_s,
+            "evaluated": sol.evaluated,
+        },
+    )
+    plan.dump(path)
+    return plan
+
+
+# ---------------------------------------------------------------------------
 # multi-wafer pipeline plans (§VIII-E): solve → plan → execute across wafers
 # ---------------------------------------------------------------------------
 

@@ -190,7 +190,6 @@ def dgrad_stream_w(dy: jax.Array, w: jax.Array, axis: str, axis_size: int,
     """dx[..., m, N] = dy[..., m, R·kb] @ W_fullᵀ — contraction over K."""
     r = axis_size
     kb = w.shape[-1]
-    n = w.shape[0]
 
     def take(dy, j):
         return lax.dynamic_slice_in_dim(dy, j * kb, kb, axis=-1)

@@ -11,7 +11,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.tatp_matmul.kernel import matmul
 from repro.kernels.tatp_matmul.ref import matmul_ref

@@ -149,7 +149,7 @@ def _build_lowered(cfg, shape, mesh, strategy, bidirectional,
     sb = make_serve_fns(cfg, par, dist, shape)
     c_struct = cache_shapes(cfg, shape, dist)
     tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
-    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    clen = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     return sb.decode_fn.lower(p_struct, tok, c_struct, clen)
 
 

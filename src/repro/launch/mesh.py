@@ -60,8 +60,11 @@ def make_plan_mesh(plan, devices: Optional[Sequence] = None) -> Mesh:
     The plan's tatp degree becomes the ``model`` axis (shrunk to divide the
     actual device count — elastic restarts and CPU smoke runs have fewer
     devices than the solved wafer); the snake permutation embeds every
-    model-axis ring on physically contiguous devices.
+    model-axis ring on physically contiguous devices.  A
+    :class:`~repro.core.plan.ServePlan` is accepted directly (its decode
+    mesh is the wrapped WaferPlan).
     """
+    plan = getattr(plan, "plan", plan)  # ServePlan wraps its decode mesh
     devs = list(devices) if devices is not None else list(jax.devices())
     data, model = plan.mesh_shape_for(len(devs))
     devs = [devs[i] for i in plan_device_permutation(plan, len(devs))]

@@ -47,6 +47,38 @@ def resolve_plan(cfg, batch: int, seq: int, *,
     return plan
 
 
+def resolve_serve_plan(cfg, max_batch: int, max_seq: int, *,
+                       plan_path: Optional[str] = None,
+                       cache_dir: Optional[str] = None,
+                       failed_dies: Optional[str] = None) \
+        -> planlib.ServePlan:
+    """Serving analogue of :func:`resolve_plan`: explicit ServePlan file
+    wins; otherwise ``compile_serve_plan`` runs the decode-objective solve
+    (or hits the ``splan_*`` cache) for the wafer at hand."""
+    from repro.wafer.topology import Wafer, WaferSpec
+
+    if plan_path:
+        if failed_dies:
+            print(f"[plan] WARNING: --failed-dies {failed_dies} is ignored "
+                  f"when an explicit --plan file is given")
+        plan = planlib.ServePlan.load(plan_path)
+        print(f"[plan] loaded {plan_path} (hash {plan.plan_hash})")
+        return plan
+    wafer = Wafer(WaferSpec())
+    if failed_dies:
+        dead = [int(x) for x in failed_dies.split(",") if x]
+        wafer = wafer.with_faults(dies=dead)
+    before = dict(planlib.PLAN_STATS)
+    plan = planlib.compile_serve_plan(wafer, cfg, max_batch, max_seq,
+                                      arch=cfg.name, cache_dir=cache_dir)
+    hit = planlib.PLAN_STATS["cache_hits"] > before["cache_hits"]
+    solves = planlib.PLAN_STATS["solver_calls"] - before["solver_calls"]
+    src = "cache hit (solver skipped)" if hit \
+        else f"solved fresh ({solves} solver call)"
+    print(f"[plan] {src}: hash {plan.plan_hash}")
+    return plan
+
+
 def resolve_multiwafer_plan(cfg, batch: int, seq: int, *, n_wafers: int,
                             plan_path: Optional[str] = None,
                             cache_dir: Optional[str] = None,

@@ -1,18 +1,35 @@
-"""Serving driver: prefill a batch of prompts, then decode with the
-context-parallel sharded KV / SSM caches.
+"""Serving driver: plan-driven continuous-batching decode.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
-        --reduced --batch 4 --prompt-len 32 --gen 16
+Two modes share the solve → plan → execute pipeline:
 
-``--auto-plan`` / ``--plan PATH`` launch from a WaferPlan exactly like the
-train driver: the mesh comes from the plan's degrees + snake device order
-and the ParallelConfig from its stream policy (plans are shared with
-training through the same on-disk cache, keyed on arch/shape/wafer)."""
+* **Engine mode** (``--serve``): compile (or load) a
+  :class:`repro.core.plan.ServePlan` — ``dlws_solve(objective="decode")``
+  picks the decode mesh and proves the KV budget — then run the
+  continuous-batching engine (:mod:`repro.serve.engine`) over a synthetic
+  open-loop request stream against the real jitted model::
+
+      PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \\
+          --reduced --serve --auto-plan --requests 8 --rate 4 \\
+          --max-batch 4 --prompt-len 16 --max-new 8
+
+  ``--sim`` swaps the jax executor for the cost-model executor (no
+  weights, simulation speed — same scheduler, deterministic clock).
+
+* **One-shot mode** (default, the original driver): prefill a batch of
+  prompts, then decode a fixed number of tokens::
+
+      PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \\
+          --reduced --batch 4 --prompt-len 32 --gen 16
+
+``--auto-plan`` / ``--plan PATH`` work in both modes; plans come from the
+same on-disk cache as training (keyed on arch/shape/wafer incl. faults).
+"""
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -20,19 +37,173 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def serve(args) -> dict:
-    from repro.configs import get_config, get_reduced
-    from repro.configs.base import ParallelConfig, ShapeConfig
-    from repro.core.dist import Dist, make_mesh
-    from repro.models import lm
-    from repro.models.transformer import RunCtx, init_params
+def _build_bundle(cfg, mesh, par, max_batch: int, max_seq: int):
+    from repro.configs.base import ShapeConfig
+    from repro.core.dist import Dist
+    from repro.models.transformer import init_params
     from repro.train.train_loop import make_serve_fns
     from jax.sharding import NamedSharding
+
+    dist = Dist(mesh)
+    shape = ShapeConfig("serve", "decode", max_seq, max_batch)
+    sb = make_serve_fns(cfg, par, dist, shape)
+    params = jax.jit(lambda k: init_params(k, cfg), out_shardings=jax.tree.map(
+        lambda s: NamedSharding(mesh, s), sb.pspecs))(jax.random.key(0))
+    return sb, params, dist
+
+
+# ---------------------------------------------------------------------------
+# engine mode: real-model executor for the continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+class JaxServeExecutor:
+    """ServeEngine executor running the real jitted model off a ServePlan.
+
+    Slot-structured: the decode step always runs the plan's full
+    ``max_batch`` shape (idle slots carry dummy tokens at ``cache_len=1``
+    and are ignored); admission prefills the newly admitted prompts in
+    one padded batch and grafts their prompt-window caches into the
+    resident max-seq cache at their slots
+    (:func:`repro.models.lm.graft_cache_slots`), leaving every other
+    in-flight request's state untouched.  Per-slot context positions go
+    into the decode step as the ``cache_len`` vector.
+    """
+
+    def __init__(self, plan, cfg, *, mesh=None):
+        from dataclasses import replace
+        from repro.launch.mesh import make_plan_mesh
+        from repro.models import lm
+        from repro.models.transformer import RunCtx
+
+        self.plan = plan
+        self.cfg = cfg
+        mesh = mesh if mesh is not None else make_plan_mesh(plan.plan)
+        par = replace(plan.parallel_config(), remat=False)
+        self.sb, self.params, dist = _build_bundle(
+            cfg, mesh, par, plan.max_batch, plan.max_seq)
+        self._dec_ctx = RunCtx(cfg, par, dist, phase="decode")
+        bl = plan.max_batch // max(dist.batch_degree, 1) \
+            if plan.max_batch % max(dist.batch_degree, 1) == 0 \
+            else plan.max_batch
+        self.caches = lm.init_cache(self._dec_ctx, bl, plan.max_seq,
+                                    enc_len=cfg.frontend_tokens or None)
+        self.last_tok = np.zeros(plan.max_batch, np.int32)
+        self._rng = np.random.RandomState(0)
+
+    def _prompt(self, req):
+        rng = np.random.RandomState(1000 + req.rid)
+        return rng.randint(0, self.cfg.vocab_size, (req.prompt_len,))
+
+    def prefill(self, states):
+        # prefill_fn returns only the final position's logits, so one
+        # batched call cannot serve mixed prompt lengths: group by length
+        # (jit re-traces once per distinct length; synthetic workloads are
+        # uniform, so this is one group — and one compile — in practice)
+        by_len: dict = {}
+        for st in states:
+            by_len.setdefault(st.req.prompt_len, []).append(st)
+        for group in by_len.values():
+            self._prefill_group(group)
+        return None  # wall clock: real elapsed time stands
+
+    def _prefill_group(self, states):
+        from repro.models import lm
+        cfg, plan = self.cfg, self.plan
+        plen = states[0].req.prompt_len
+        toks = np.zeros((plan.max_batch, plen), np.int64)
+        for i, st in enumerate(states):
+            toks[i] = self._prompt(st.req)
+        pre = {"tokens": jnp.asarray(toks)}
+        if cfg.frontend and cfg.family != "encdec":
+            pre["prefix_embeds"] = jnp.asarray(
+                self._rng.randn(plan.max_batch, cfg.frontend_tokens,
+                                cfg.d_model).astype(cfg.dtype) * 0.02)
+        if cfg.n_enc_layers:
+            pre["enc_embeds"] = jnp.asarray(
+                self._rng.randn(plan.max_batch, cfg.frontend_tokens,
+                                cfg.d_model).astype(cfg.dtype) * 0.02)
+        small, logits = self.sb.prefill_fn(self.params, pre)
+        slots = [st.slot for st in states]
+        merged = lm.graft_cache_slots(jax.device_get(self.caches),
+                                      jax.device_get(small), slots,
+                                      rows=range(len(states)))
+        self.caches = jax.tree.map(jnp.asarray, merged)
+        first = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)) \
+            % cfg.vocab_size
+        for i, st in enumerate(states):
+            st.tokens.append(int(first[i]))
+            self.last_tok[st.slot] = first[i]
+
+    def decode(self, states):
+        toks = np.zeros((self.plan.max_batch, 1), np.int32)
+        clen = np.ones(self.plan.max_batch, np.int32)
+        for st in states:
+            toks[st.slot, 0] = self.last_tok[st.slot]
+            clen[st.slot] = st.context_len  # prompt + generated so far
+        nxt, _, self.caches = self.sb.decode_fn(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(clen))
+        nxt = np.asarray(nxt)[:, 0]
+        for st in states:
+            st.tokens.append(int(nxt[st.slot]))
+            self.last_tok[st.slot] = nxt[st.slot]
+        return None
+
+
+def serve_engine(args) -> dict:
+    """Engine mode: solve → ServePlan → continuous-batching run."""
+    from repro.configs import get_config, get_reduced
+    from repro.launch.planning import resolve_serve_plan
+    from repro.serve.engine import (CostModelExecutor, ServeEngine,
+                                    VirtualClock, WallClock,
+                                    poisson_arrivals)
+    from repro.wafer.topology import Wafer, WaferSpec
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    plan = resolve_serve_plan(cfg, args.max_batch,
+                              args.prompt_len + args.max_new,
+                              plan_path=args.plan,
+                              cache_dir=args.plan_cache,
+                              failed_dies=args.failed_dies)
+    print(plan.summary())
+    reqs = poisson_arrivals(
+        args.requests, args.rate, seed=args.seed,
+        prompt_len=args.prompt_len, max_new_tokens=args.max_new,
+        slo_ttft=args.slo_ttft or math.inf,
+        slo_tpot=args.slo_tpot or math.inf)
+    if args.sim:
+        wafer = Wafer(WaferSpec(rows=plan.plan.wafer_rows,
+                                cols=plan.plan.wafer_cols),
+                      frozenset(plan.plan.failed_dies))
+        ex = CostModelExecutor(plan, cfg, wafer)
+        engine = ServeEngine(plan, ex, clock=VirtualClock())
+    else:
+        ex = JaxServeExecutor(plan, cfg)
+        engine = ServeEngine(plan, ex, clock=WallClock())
+    rep = engine.run(reqs)
+    out = rep.to_dict()
+    out["plan_hash"] = plan.plan_hash
+    out["mode"] = "sim" if args.sim else "jax"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one-shot mode (the original driver)
+# ---------------------------------------------------------------------------
+
+
+def serve(args) -> dict:
+    from dataclasses import replace
+    from repro.configs import get_config, get_reduced
+    from repro.configs.base import ParallelConfig
+    from repro.core.dist import make_mesh
+    from repro.models import lm
+    from repro.models.transformer import RunCtx
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     max_seq = args.prompt_len + args.gen
     if args.plan or args.auto_plan:
-        from dataclasses import replace
         from repro.launch.mesh import make_plan_mesh
         from repro.launch.planning import resolve_plan
         plan = resolve_plan(cfg, args.batch, max_seq, plan_path=args.plan,
@@ -44,17 +215,11 @@ def serve(args) -> dict:
         names = ("data", "model")[: len(args.mesh)]
         mesh = make_mesh(tuple(args.mesh), names)
         par = ParallelConfig(strategy="tatp", remat=False)
-    dist = Dist(mesh)
-    shape = ShapeConfig("serve", "decode", max_seq, args.batch)
-    sb = make_serve_fns(cfg, par, dist, shape)
-
-    params = jax.jit(lambda k: init_params(k, cfg), out_shardings=jax.tree.map(
-        lambda s: NamedSharding(mesh, s), sb.pspecs))(jax.random.key(0))
+    sb, params, dist = _build_bundle(cfg, mesh, par, args.batch, max_seq)
 
     rng = np.random.RandomState(0)
     prompts = rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len))
     # prefill into a max_seq cache: pad the prompt window
-    ctx = RunCtx(cfg, par, dist, phase="prefill")
     # build full-size caches and write prompt K/V via a padded prefill
     pre_batch = {"tokens": jnp.asarray(prompts)}
     if cfg.frontend and cfg.family != "encdec":
@@ -75,26 +240,19 @@ def serve(args) -> dict:
                         else args.batch,
                         max_seq, enc_len=cfg.frontend_tokens or None)
 
-    def graft(d, s):
-        if d.shape == s.shape:
-            return s
-        # host-side merge: device_get hands back numpy arrays
-        d = np.array(d)
-        sl = [slice(None)] * d.ndim
-        sl[2] = slice(0, s.shape[2])
-        d[tuple(sl)] = np.asarray(s).astype(d.dtype)
-        return jnp.asarray(d)
-
-    # merge on host to respect shardings of the decode layout
-    caches = jax.tree.map(graft, jax.device_get(big),
-                          jax.device_get(caches))
+    # merge on host to respect shardings of the decode layout (the shared
+    # continuous-batching graft, applied to every slot at once)
+    caches = jax.tree.map(jnp.asarray, lm.graft_cache_slots(
+        jax.device_get(big), jax.device_get(caches),
+        slots=range(args.batch)))
 
     toks = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32) \
         % cfg.vocab_size
     out_tokens = [np.asarray(toks)]
     t0 = time.perf_counter()
     for i in range(args.gen):
-        cache_len = jnp.int32(args.prompt_len + i + 1)
+        cache_len = jnp.full((args.batch,), args.prompt_len + i + 1,
+                             jnp.int32)
         toks, logits, caches = sb.decode_fn(params, toks, caches, cache_len)
         out_tokens.append(np.asarray(toks))
     dt = time.perf_counter() - t0
@@ -116,14 +274,35 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", type=int, nargs="+", default=[1, 1])
     ap.add_argument("--plan", default=None,
-                    help="launch from an explicit WaferPlan JSON file")
+                    help="launch from an explicit plan JSON file "
+                         "(a ServePlan in --serve mode)")
     ap.add_argument("--auto-plan", action="store_true",
-                    help="solve (or load the cached) WaferPlan and build "
-                         "the mesh/ParallelConfig from it")
+                    help="solve (or load the cached) plan and build the "
+                         "mesh/ParallelConfig from it")
     ap.add_argument("--plan-cache", default=None,
                     help="plan cache dir (default results/plans)")
+    ap.add_argument("--failed-dies", default=None,
+                    help="comma-separated dead dies (degraded launch)")
+    # engine mode
+    ap.add_argument("--serve", action="store_true",
+                    help="continuous-batching engine mode (needs "
+                         "--auto-plan or a ServePlan --plan)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="open-loop arrival rate (req/s)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (max in-flight sequences)")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slo-ttft", type=float, default=None)
+    ap.add_argument("--slo-tpot", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sim", action="store_true",
+                    help="cost-model executor (no jax; virtual clock)")
     args = ap.parse_args()
-    print(json.dumps(serve(args)))
+    if args.serve:
+        print(json.dumps(serve_engine(args)))
+    else:
+        print(json.dumps(serve(args)))
 
 
 if __name__ == "__main__":

@@ -27,7 +27,6 @@ from __future__ import annotations
 import math
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -44,20 +43,26 @@ def _block_update(q, k, v, m, l, acc, qpos, kpos, *, scale, causal,
     q: [B, sq, Hk, G, dh]   (G = q heads per kv head)
     k/v: [B, sk, Hk, dh]
     m/l: [B, Hk, G, sq]     acc: [B, Hk, G, sq, dh]
-    qpos: [sq] global query positions; kpos: [sk] global key positions.
-    valid_len: optional scalar — keys with kpos > valid_len are masked
-    (decode: cache fill level).
+    qpos: [sq] global query positions — or [B, sq] when rows sit at
+    different positions (continuous-batching decode).
+    valid_len: optional scalar or [B] — keys with kpos > valid_len are
+    masked (decode: per-request cache fill level).
     """
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     s = softcap(s, cap)
+    qp = qpos[..., :, None]  # [sq, 1] or [B, sq, 1]
     mask = jnp.ones(s.shape[-2:], bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask = mask & (kpos[None, :] <= qp)
     if window is not None:
-        mask &= (qpos[:, None] - kpos[None, :]) < window
+        mask = mask & ((qp - kpos[None, :]) < window)
     if valid_len is not None:
-        mask &= (kpos[None, :] <= valid_len)
+        vl = jnp.asarray(valid_len)
+        mask = mask & (kpos[None, :]
+                       <= (vl[..., None, None] if vl.ndim else vl))
+    if mask.ndim == 3:  # per-row mask: broadcast over (Hk, G)
+        mask = mask[:, None, None]
     s = jnp.where(mask, s, NEG_INF)
     m_new = jnp.maximum(m, jnp.max(s, axis=-1))
     # guard fully-masked rows
@@ -101,7 +106,9 @@ def local_attention(q, k, v, *, causal=True, window=None, cap=None,
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
     qg = _group(q, hk)
     m, l, acc = _init_state(b, hk, hq // hk, sq, dh)
-    qpos = q_offset + jnp.arange(sq)
+    qo = jnp.asarray(q_offset)
+    qpos = (qo[..., None] + jnp.arange(sq)) if qo.ndim \
+        else q_offset + jnp.arange(sq)
     kpos = jnp.arange(k.shape[1])
     m, l, acc = _block_update(qg, k, v, m, l, acc, qpos, kpos, scale=scale,
                               causal=causal, window=window, cap=cap,
@@ -284,27 +291,33 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, axis: str,
 
     q: [B, 1, Hq, dh] (replicated over the ring axis);
     k_cache/v_cache: [B, S_loc, Hkv, dh] — this die's context slice;
-    cache_len: scalar int — number of valid positions *including* the token
-    written this step.
+    cache_len: int scalar or [B] vector — number of valid positions
+    *including* the token written this step (per-row under continuous
+    batching, where in-flight requests sit at different context lengths).
     """
     r = axis_size
     b, sq, hq, dh = q.shape
     hk = k_cache.shape[2]
     sloc = k_cache.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    cl = jnp.asarray(cache_len)
     if r == 1:
+        # q_offset places the query at its true position so the sliding-
+        # window mask is live (without it qpos=0 made the window vacuous
+        # and windowed layers attended the whole cache)
         return local_attention(q, k_cache, v_cache, causal=False,
                                window=window, cap=cap, scale=scale,
-                               valid_len=cache_len - 1)
+                               q_offset=cl - 1, valid_len=cl - 1)
 
     i = lax.axis_index(axis)
     qg = _group(q, hk)
     kpos = i * sloc + jnp.arange(sloc)
-    qpos = jnp.full((sq,), cache_len - 1)
+    qpos = (cl - 1)[..., None] + jnp.zeros((sq,), cl.dtype) \
+        if cl.ndim else jnp.full((sq,), cache_len - 1)
     m, l, acc = _init_state(b, hk, hq // hk, sq, dh)
     m, l, acc = _block_update(qg, k_cache, v_cache, m, l, acc, qpos, kpos,
                               scale=scale, causal=False, window=window,
-                              cap=cap, valid_len=cache_len - 1)
+                              cap=cap, valid_len=cl - 1)
     # distributed (max, sum, acc) combine over the ring axis
     m_g = lax.pmax(m, axis)
     alpha = jnp.exp(m - m_g)
@@ -316,8 +329,32 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, axis: str,
 def write_kv_cache(k_cache, v_cache, k_new, v_new, pos, *, axis: str,
                    axis_size: int):
     """Insert this step's K/V (replicated) into the sharded cache at global
-    position ``pos``; only the owning die writes."""
+    position ``pos``; only the owning die writes.
+
+    ``pos`` may be a [B] vector (continuous batching: each in-flight row
+    writes at its own context position) — the per-row path scatters one
+    (Hkv, dh) slab per row instead of a batch-wide slice update."""
     sloc = k_cache.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim:
+        b = k_cache.shape[0]
+        rows = jnp.arange(b)
+        if axis_size == 1:
+            local = pos
+            keep = jnp.ones((b,), bool)
+        else:
+            i = lax.axis_index(axis)
+            owner = pos // sloc
+            local = jnp.where(owner == i, pos - i * sloc, 0)
+            keep = owner == i
+
+        def wr(cache, new):
+            cur = cache[rows, local]
+            upd = jnp.where(keep[:, None, None],
+                            new[:, 0].astype(cache.dtype), cur)
+            return cache.at[rows, local].set(upd)
+
+        return wr(k_cache, k_new), wr(v_cache, v_new)
     if axis_size == 1:
         kc = lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
         vc = lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)

@@ -7,7 +7,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 
 def rms_norm(x, scale, eps: float = 1e-6):

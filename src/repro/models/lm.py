@@ -15,12 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ModelConfig
-from repro.models import transformer as tfm
 from repro.models.common import rms_norm, softcap
 from repro.models.transformer import (CONV_K, RunCtx, _unit_and_reps,
                                       attn_block, mamba_block, mlp_block,
-                                      moe_block, padded_vocab)
+                                      moe_block)
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +334,9 @@ def prefill(ctx: RunCtx, params, batch):
 
 def decode_step(ctx: RunCtx, params, tokens, caches, cache_len):
     """One decode step.  tokens: [B, 1]; caches sharded; cache_len includes
-    the token being processed.  Returns (next_token, logits_loc, caches)."""
+    the token being processed — a scalar (uniform batch) or a [B] vector
+    (continuous batching: every in-flight request advances at its own
+    context position).  Returns (next_token, logits_loc, caches)."""
     cfg = ctx.cfg
     ctx = RunCtx(cfg, ctx.par, ctx.dist, phase="decode")
     x = embed_tokens(ctx, params["embed"], tokens,
@@ -407,3 +407,33 @@ def init_cache(ctx: RunCtx, batch_local: int, max_seq: int,
         return c
 
     return jax.vmap(one_rep)(jnp.arange(reps))
+
+
+def graft_cache_slots(big, small, slots, rows=None):
+    """Host-side slot graft: write ``small``'s batch rows into ``big``'s
+    batch *slots* (axis 1 of every cache leaf — axis 0 is the layer-scan
+    rep dim).
+
+    This is the continuous-batching admission primitive: a freshly
+    prefilled request's prompt-window cache is merged into the resident
+    max-seq decode cache at its assigned slot, leaving every other
+    in-flight request's state untouched.  Attention K/V leaves copy the
+    prompt window into the head of the slot's sequence axis; SSM
+    state/conv leaves (context-length-free) copy whole rows.  Operates on
+    host (numpy) trees — callers ``device_get`` / ``device_put`` around
+    it to respect the decode layout's shardings.
+    """
+    import numpy as np
+    rows = list(rows) if rows is not None else list(range(len(slots)))
+    slots = list(slots)
+
+    def one(d, s):
+        d = np.array(d)
+        s = np.asarray(s)
+        if d.ndim >= 3 and d.shape[2] != s.shape[2]:
+            d[:, slots, :s.shape[2]] = s[:, rows].astype(d.dtype)
+        else:
+            d[:, slots] = s[:, rows].astype(d.dtype)
+        return d
+
+    return jax.tree.map(one, jax.device_get(big), jax.device_get(small))

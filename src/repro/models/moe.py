@@ -38,7 +38,6 @@ def router_topk(xf, w_router, n_experts: int, top_k: int):
 
 def load_balance_loss(probs, idx, n_experts: int):
     """GShard aux loss: E · Σ_e (token fraction)·(mean prob)."""
-    t = probs.shape[0]
     sel = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
     frac = sel.mean(0)
     mean_p = probs.mean(0)

@@ -146,7 +146,6 @@ def ssd_sequence_sharded(x, dt, a, bmat, cmat, chunk: int, *, axis: str,
     if axis_size == 1:
         return local.y, local.state
     b, l, h, p = x.shape
-    n = bmat.shape[-1]
     g = local.decay[:, :, None, None]  # [B,H,1,1]
     ge, se = ring_exclusive_scan((g, local.state), axis, axis_size,
                                  mode=scan_mode, wire=wire)
@@ -194,7 +193,6 @@ def causal_conv1d(x, w, b, *, axis: str, axis_size: int):
 
 def conv_decode_step(x_new, conv_cache, w, b):
     """x_new: [B, C]; conv_cache: [B, K-1, C] (previous inputs)."""
-    k = w.shape[0]
     window = jnp.concatenate([conv_cache, x_new[:, None, :]], axis=1)
     out = jnp.einsum("bkc,kc->bc", window, w) + b
     return out, window[:, 1:, :]

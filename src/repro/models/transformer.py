@@ -21,12 +21,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -37,7 +35,7 @@ from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.common import (act_fn, apply_rope, dense_init, embed_init,
-                                 is_gated, rms_norm, softcap)
+                                 is_gated, rms_norm)
 
 VOCAB_PAD_MULTIPLE = 512
 CONV_K = 4  # mamba2 depthwise conv width
@@ -395,12 +393,14 @@ def attn_block(ctx: RunCtx, p, x, *, kind: str, pos_offset, cache=None,
     causal = not (is_cross or bidir_self)
     new_cache = cache
     if ctx.phase == "decode":
-        qpos = cache_len - 1
+        # cache_len is a scalar (uniform batch) or a [B] vector
+        # (continuous batching: per-request context positions)
+        qpos = jnp.asarray(cache_len) - 1
+        rope_pos = qpos[:, None] if qpos.ndim \
+            else qpos + jnp.zeros((1,), jnp.int32)
         if not is_cross:
-            q = apply_rope(q, qpos + jnp.zeros((1,), jnp.int32),
-                           cfg.rope_theta)
-            k = apply_rope(k, qpos + jnp.zeros((1,), jnp.int32),
-                           cfg.rope_theta)
+            q = apply_rope(q, rope_pos, cfg.rope_theta)
+            k = apply_rope(k, rope_pos, cfg.rope_theta)
             kc, vc = attn_lib.write_kv_cache(
                 cache["k"], cache["v"], k, v, qpos,
                 axis=ctx.axis, axis_size=ctx.r)

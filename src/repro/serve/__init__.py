@@ -1,0 +1,19 @@
+"""Plan-driven serving subsystem: continuous-batching decode off a
+compiled :class:`repro.core.plan.ServePlan`."""
+
+from repro.serve.engine import (ContinuousBatchingScheduler,
+                                CostModelExecutor, Request, RequestState,
+                                ServeEngine, ServeReport, VirtualClock,
+                                WallClock, poisson_arrivals)
+
+__all__ = [
+    "ContinuousBatchingScheduler",
+    "CostModelExecutor",
+    "Request",
+    "RequestState",
+    "ServeEngine",
+    "ServeReport",
+    "VirtualClock",
+    "WallClock",
+    "poisson_arrivals",
+]

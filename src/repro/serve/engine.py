@@ -1,0 +1,449 @@
+"""Continuous-batching serving engine, executing off a compiled ServePlan.
+
+The engine is the runtime half of the serving pipeline (solve → plan →
+serve): :func:`repro.core.plan.compile_serve_plan` proves a decode mesh +
+KV budget with the wafer cost model, and this module schedules real
+requests against that contract —
+
+* :class:`ContinuousBatchingScheduler` — the request queue: strict-FCFS
+  iteration-level admission into ``max_batch`` decode slots, bounded by
+  the plan's KV-token budget (a request's whole context window is
+  reserved at admission, so an admitted request can never OOM the cache
+  mid-generation), prefill/decode split, per-request SLO accounting.
+* :class:`ServeEngine` — the iteration loop: deliver arrivals → admit +
+  prefill → one decode iteration for every in-flight sequence → retire
+  finished requests.  The loop is clock-agnostic: a :class:`WallClock`
+  serves real jax execution (repro.launch.serve) while a
+  :class:`VirtualClock` driven by executor-reported durations makes whole
+  arrival-rate sweeps deterministic (benchmarks/serve_decode.py and the
+  ``serve/decode_baseline`` drift gate).
+* :class:`CostModelExecutor` — a model-free executor whose step durations
+  come from the same decode cost model the plan was solved with
+  (latency linearized in in-flight sequences and resident cache tokens),
+  so scheduler experiments run at simulation speed without touching jax.
+
+Scheduling policy (kept deliberately simple and fully deterministic):
+admission is strict FCFS — a request that does not fit (no free slot, or
+KV budget exhausted) blocks everything behind it.  No bypass means no
+starvation, and makes the admission order a pure function of arrivals,
+which the drift gate hashes.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request as submitted by a client."""
+    rid: int
+    arrival: float  # seconds on the engine clock
+    prompt_len: int
+    max_new_tokens: int
+    slo_ttft: float = math.inf  # s: arrival -> first token
+    slo_tpot: float = math.inf  # s: per output token (steady decode)
+
+
+@dataclass
+class RequestState:
+    """Lifecycle + accounting of one admitted request."""
+    req: Request
+    slot: int = -1
+    kv_reserved: int = 0  # budget tokens reserved at admission
+    admitted_at: float = math.nan
+    first_token_at: float = math.nan
+    finished_at: float = math.nan
+    tokens_done: int = 0  # generated tokens (prefill yields the first)
+    token_times: list[float] = field(default_factory=list)
+    tokens: list[int] = field(default_factory=list)  # generated token ids
+
+    @property
+    def done(self) -> bool:
+        return self.tokens_done >= self.req.max_new_tokens
+
+    @property
+    def context_len(self) -> int:
+        """Tokens currently resident in this request's KV slot."""
+        return self.req.prompt_len + self.tokens_done
+
+    # -- SLO accounting ----------------------------------------------------
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.req.arrival
+
+    @property
+    def tpots(self) -> list[float]:
+        """Inter-token latencies of the steady decode phase."""
+        ts = [self.first_token_at] + self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+    @property
+    def slo_ok(self) -> bool:
+        tp = self.tpots
+        return self.ttft <= self.req.slo_ttft and \
+            (not tp or max(tp) <= self.req.slo_tpot)
+
+
+class ContinuousBatchingScheduler:
+    """Strict-FCFS iteration-level admission under the ServePlan contract.
+
+    Invariants (asserted here, property-tested in tests/test_serve.py):
+
+    * at most ``plan.max_batch`` requests in flight,
+    * reserved KV tokens never exceed ``plan.kv_budget_tokens``,
+    * admission order == arrival order (no bypass),
+    * a request decodes only after its prefill completed, gains exactly
+      one token per decode iteration, and leaves its slot the iteration
+      it finishes.
+    """
+
+    def __init__(self, plan):
+        self.plan = plan
+        self.waiting: deque[Request] = deque()
+        self.active: dict[int, RequestState] = {}  # slot -> state
+        self.free_slots = list(range(plan.max_batch - 1, -1, -1))
+        self.kv_reserved = 0
+        self.finished: list[RequestState] = []
+        self.admission_trace: list[tuple[int, int]] = []  # (iteration, rid)
+        self.iterations = 0
+        self.occupancy_sum = 0  # Σ active per iteration (mean occupancy)
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if self.waiting and req.arrival < self.waiting[-1].arrival:
+            raise ValueError("submissions must be in arrival order")
+        self.waiting.append(req)
+
+    def kv_cost(self, req: Request) -> int:
+        return self.plan.cache_tokens_per_request(req.prompt_len,
+                                                  req.max_new_tokens)
+
+    @property
+    def kv_headroom(self) -> int:
+        return self.plan.kv_budget_tokens - self.kv_reserved
+
+    def admissible(self) -> bool:
+        """Can the head-of-line request start this iteration?"""
+        if not (self.waiting and self.free_slots):
+            return False
+        cost = self.kv_cost(self.waiting[0])
+        # a context over max_seq can never fit the cache's sequence dim
+        return cost <= self.plan.max_seq and cost <= self.kv_headroom
+
+    # -- iteration-level admission ----------------------------------------
+    def admit(self, now: float) -> list[RequestState]:
+        """Admit up to ``prefill_chunk`` head-of-line requests into free
+        slots (strict FCFS: the first request that does not fit blocks
+        the rest — deterministic, starvation-free)."""
+        out: list[RequestState] = []
+        while len(out) < self.plan.prefill_chunk and self.admissible():
+            req = self.waiting.popleft()
+            st = RequestState(req, slot=self.free_slots.pop(),
+                              kv_reserved=self.kv_cost(req),
+                              admitted_at=now)
+            self.kv_reserved += st.kv_reserved
+            assert self.kv_reserved <= self.plan.kv_budget_tokens
+            assert len(self.active) < self.plan.max_batch
+            self.active[st.slot] = st
+            self.admission_trace.append((self.iterations, req.rid))
+            out.append(st)
+        return out
+
+    def mark_prefilled(self, states: Sequence[RequestState],
+                       now: float) -> None:
+        """Prefill completion: the prefill pass yields each request's
+        first generated token (TTFT is measured here)."""
+        for st in states:
+            assert st.tokens_done == 0
+            st.first_token_at = now
+            st.tokens_done = 1
+            self._retire_if_done(st, now)
+
+    # -- decode iterations -------------------------------------------------
+    def decode_batch(self) -> list[RequestState]:
+        """In-flight states this iteration advances (prefilled, un-done),
+        in slot order so the executor's batch layout is stable."""
+        return [self.active[s] for s in sorted(self.active)
+                if self.active[s].tokens_done > 0]
+
+    def mark_decoded(self, states: Sequence[RequestState],
+                     now: float) -> None:
+        self.iterations += 1
+        self.occupancy_sum += len(states)
+        for st in states:
+            assert 0 < st.tokens_done < st.req.max_new_tokens
+            st.tokens_done += 1
+            st.token_times.append(now)
+            self._retire_if_done(st, now)
+
+    def _retire_if_done(self, st: RequestState, now: float) -> None:
+        if st.done:
+            st.finished_at = now
+            del self.active[st.slot]
+            self.free_slots.append(st.slot)
+            self.kv_reserved -= st.kv_reserved
+            assert self.kv_reserved >= 0
+            self.finished.append(st)
+
+    @property
+    def drained(self) -> bool:
+        return not self.waiting and not self.active
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+
+class WallClock:
+    """Real time: executor durations are ignored, elapsed time is
+    whatever the jax calls actually took."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def advance(self, dt: Optional[float]) -> float:
+        return self.now()
+
+    def wait_until(self, t: float) -> float:
+        # serving loop has nothing to run: don't busy-spin the host
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(min(dt, 0.05))
+        return self.now()
+
+
+class VirtualClock:
+    """Deterministic simulation time driven by executor-reported
+    durations (benchmarks, tests, the drift gate)."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = start
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: Optional[float]) -> float:
+        self.t += float(dt or 0.0)
+        return self.t
+
+    def wait_until(self, t: float) -> float:
+        self.t = max(self.t, t)
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+
+class CostModelExecutor:
+    """Executor whose step durations come from the decode cost model the
+    plan was solved with — no jax, no weights, simulation speed.
+
+    Decode-iteration latency is linearized from three anchor evaluations
+    of :func:`repro.wafer.simulator.simulate_decode_batch` as
+    ``lat ≈ a + b·n_active + c·resident_cache_tokens`` (the cost model is
+    affine in both to first order: the weight-read term is occupancy-free,
+    flops scale with sequences, the KV scan scales with resident tokens).
+    Prefill is charged per prompt token at the compute-bound rate
+    (``prefill_eff`` tokens prefill in the time one token decodes).
+    """
+
+    def __init__(self, plan, cfg, wafer=None, *, prefill_eff: int = 16):
+        from repro.wafer.simulator import (ParallelDegrees, StepCostContext,
+                                           simulate_decode_batch)
+        from repro.wafer.topology import Wafer, WaferSpec
+        if wafer is None:
+            wafer = Wafer(WaferSpec(rows=plan.plan.wafer_rows,
+                                    cols=plan.plan.wafer_cols),
+                          frozenset(plan.plan.failed_dies),
+                          frozenset(tuple(l)
+                                    for l in plan.plan.failed_links))
+        self.plan = plan
+        deg = ParallelDegrees(*plan.plan.degrees_tuple(),
+                              seq_par=plan.plan.seq_par)
+        B, S = plan.max_batch, plan.max_seq
+        dies = list(plan.plan.alive_dies)
+
+        def lat(b, s):
+            ctx = StepCostContext(wafer, cfg, max(b, 1), max(s, 1),
+                                  plan.plan.engine, dies=dies,
+                                  objective="decode")
+            return simulate_decode_batch(ctx, [deg])[0].step_time
+
+        l_full = lat(B, S)
+        l_half_b = lat(max(B // 2, 1), S)
+        l_half_s = lat(B, max(S // 2, 1))
+        # solve a + b*n + c*(n*s) through the three anchors
+        self.c = (l_full - l_half_s) / max(B * S - B * (S // 2), 1)
+        bspan = max(B - B // 2, 1)
+        self.b = (l_full - l_half_b
+                  - self.c * (B * S - (B // 2) * S)) / bspan
+        self.a = l_full - self.b * B - self.c * B * S
+        self.prefill_tok = l_full / max(plan.max_batch, 1) / prefill_eff \
+            + self.c
+        self._next_tok = 0
+
+    def decode_latency(self, n_active: int, resident_tokens: int) -> float:
+        return max(self.a + self.b * n_active
+                   + self.c * resident_tokens, 1e-9)
+
+    # -- executor protocol -------------------------------------------------
+    def prefill(self, states: Sequence[RequestState]) -> float:
+        return sum(self.prefill_tok * st.req.prompt_len for st in states)
+
+    def decode(self, states: Sequence[RequestState]) -> float:
+        resident = sum(st.context_len for st in states)
+        for st in states:
+            st.tokens.append(self._next_tok)
+            self._next_tok += 1
+        return self.decode_latency(len(states), resident)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServeReport:
+    """Aggregate serving metrics of one engine run."""
+    n_requests: int
+    n_finished: int
+    generated_tokens: int
+    makespan: float
+    tokens_per_s: float
+    ttft_p50: float
+    ttft_p99: float
+    tpot_p50: float
+    tpot_p99: float
+    slo_attainment: float
+    mean_occupancy: float
+    iterations: int
+    trace_hash: str
+
+    def to_dict(self) -> dict:
+        import dataclasses
+        return dataclasses.asdict(self)
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile (no numpy: exact, platform-independent)."""
+    if not xs:
+        return math.nan
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, math.ceil(q / 100.0 * len(s)) - 1))
+    return s[k]
+
+
+class ServeEngine:
+    """The iteration loop: arrivals → admission+prefill → decode → retire.
+
+    ``executor`` provides ``prefill(states) -> duration`` and
+    ``decode(states) -> duration`` (return None under a WallClock to let
+    real elapsed time stand).  ``on_iteration`` is an optional hook for
+    logging/tracing.
+    """
+
+    def __init__(self, plan, executor, *, clock=None,
+                 on_iteration: Optional[Callable] = None):
+        self.plan = plan
+        self.executor = executor
+        self.clock = clock if clock is not None else VirtualClock()
+        self.sched = ContinuousBatchingScheduler(plan)
+        self.on_iteration = on_iteration
+
+    def run(self, requests: Sequence[Request],
+            max_iterations: int = 1_000_000) -> ServeReport:
+        import dataclasses
+        sched, clock = self.sched, self.clock
+        t0 = clock.now()
+        # arrivals are relative to the engine start (a WallClock's origin
+        # is arbitrary; a VirtualClock starts at 0 so this is a no-op)
+        pending = [dataclasses.replace(r, arrival=r.arrival + t0)
+                   for r in sorted(requests,
+                                   key=lambda r: (r.arrival, r.rid))]
+        i = 0
+        for _ in range(max_iterations):
+            now = clock.now()
+            while i < len(pending) and pending[i].arrival <= now:
+                sched.submit(pending[i])
+                i += 1
+            if sched.drained and i == len(pending):
+                break
+            newly = sched.admit(now)
+            if newly:
+                dt = self.executor.prefill(newly)
+                now = clock.advance(dt)
+                sched.mark_prefilled(newly, now)
+            batch = sched.decode_batch()
+            if batch:
+                dt = self.executor.decode(batch)
+                now = clock.advance(dt)
+                sched.mark_decoded(batch, now)
+            elif not newly:
+                # nothing in flight and head-of-line blocked or queue
+                # empty: jump to the next arrival
+                if i < len(pending):
+                    clock.wait_until(pending[i].arrival)
+                elif sched.waiting:
+                    head = sched.waiting[0]
+                    raise RuntimeError(
+                        f"head-of-line request {head.rid} can never fit "
+                        f"the plan (prompt+gen="
+                        f"{sched.kv_cost(head)} tokens vs max_seq="
+                        f"{self.plan.max_seq}, KV budget="
+                        f"{self.plan.kv_budget_tokens})")
+            if self.on_iteration:
+                self.on_iteration(self)
+        return self.report(clock.now() - t0)
+
+    def report(self, makespan: float) -> ServeReport:
+        fin = self.sched.finished
+        ttfts = [st.ttft for st in fin]
+        tpots = [t for st in fin for t in st.tpots]
+        gen = sum(st.tokens_done for st in fin) \
+            + sum(st.tokens_done for st in self.sched.active.values())
+        trace = hashlib.sha256(
+            str(self.sched.admission_trace).encode()).hexdigest()[:16]
+        return ServeReport(
+            n_requests=len(fin) + len(self.sched.active)
+            + len(self.sched.waiting),
+            n_finished=len(fin),
+            generated_tokens=gen,
+            makespan=makespan,
+            tokens_per_s=gen / makespan if makespan > 0 else 0.0,
+            ttft_p50=_percentile(ttfts, 50), ttft_p99=_percentile(ttfts, 99),
+            tpot_p50=_percentile(tpots, 50), tpot_p99=_percentile(tpots, 99),
+            slo_attainment=(sum(st.slo_ok for st in fin) / len(fin))
+            if fin else math.nan,
+            mean_occupancy=self.sched.occupancy_sum
+            / max(self.sched.iterations, 1),
+            iterations=self.sched.iterations,
+            trace_hash=trace,
+        )
+
+
+def poisson_arrivals(n: int, rate: float, *, seed: int = 0,
+                     prompt_len: int = 128, max_new_tokens: int = 64,
+                     slo_ttft: float = math.inf,
+                     slo_tpot: float = math.inf) -> list[Request]:
+    """A deterministic synthetic open-loop workload: exponential
+    inter-arrivals at ``rate`` req/s (seeded), fixed prompt/gen shape."""
+    import random
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for rid in range(n):
+        t += rng.expovariate(rate) if rate > 0 else 0.0
+        out.append(Request(rid=rid, arrival=t, prompt_len=prompt_len,
+                           max_new_tokens=max_new_tokens,
+                           slo_ttft=slo_ttft, slo_tpot=slo_tpot))
+    return out

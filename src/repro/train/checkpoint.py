@@ -20,11 +20,9 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 

@@ -12,7 +12,6 @@ optimizer (their fp32 Adam states dominate wafer memory, Fig. 4c).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -127,7 +126,6 @@ class AdamW:
     # -- update ------------------------------------------------------------
     def update(self, params, grads, state: OptState):
         cfg = self.cfg
-        dp = self.dp
         step = state.step
 
         if cfg.grad_compress:

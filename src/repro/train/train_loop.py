@@ -13,21 +13,18 @@ sharded KV / SSM caches.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.core.dist import Dist
 from repro.models import lm
-from repro.models.transformer import (RunCtx, init_params, param_shapes,
-                                      param_specs, padded_vocab)
-from repro.train.optimizer import AdamW, AdamWConfig, OptState
+from repro.models.transformer import RunCtx, init_params, param_specs
+from repro.train.optimizer import AdamW, AdamWConfig
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +197,6 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, dist: Dist,
     pspecs = param_specs(cfg, par.strategy)
     ospecs = opt.state_specs(pspecs)
     bspecs = batch_specs(cfg, shape, par, dist)
-    n_shards = dist.n_devices
 
     tok_axes = token_axes(par, dist)
     n_loss_shards = 1
@@ -294,13 +290,17 @@ def make_serve_fns(cfg: ModelConfig, par: ParallelConfig, dist: Dist,
         out_specs=(cspecs, logit_spec), check_vma=False))
 
     tok_spec = dec_bspecs["tokens"]
+    # cache_len is a [B] vector sharded like the token batch axis so every
+    # in-flight request can sit at its own context position (continuous
+    # batching); uniform-batch callers pass jnp.full((B,), n)
+    len_spec = P(tok_spec[0])
 
     def _decode(params, tokens, caches, cache_len):
         return lm.decode_step(ctx, params, tokens, caches, cache_len)
 
     decode_fn = jax.jit(jax.shard_map(
         _decode, mesh=mesh,
-        in_specs=(pspecs, tok_spec, cspecs, P()),
+        in_specs=(pspecs, tok_spec, cspecs, len_spec),
         out_specs=(tok_spec, logit_spec, cspecs), check_vma=False),
         donate_argnums=(2,))
 

@@ -12,10 +12,7 @@ comparison (DNN: r>0.99, err <5%; regression: r<0.98, err ~10%).
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, replace
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -24,8 +24,7 @@ from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.wafer.simulator import (ParallelDegrees, SimResult,
-                                   StepCostContext, simulate_step)
-from repro.wafer.solver import dlws_solve
+                                   StepCostContext)
 from repro.wafer.topology import Wafer
 
 

@@ -176,12 +176,17 @@ class StepCostContext:
                  tatp_bidirectional: bool = True, stream: str = "auto",
                  dies: Optional[Sequence[int]] = None,
                  evaluator: str = "batch",
-                 stage1: Optional[str] = None):
+                 stage1: Optional[str] = None,
+                 objective: str = "train"):
         self.wafer = wafer
         self.cfg = cfg
         self.batch = batch
         self.seq = seq
         self.engine = engine
+        # "train" scores one training step; "decode" scores one
+        # continuous-batching decode iteration (batch = in-flight
+        # sequences, seq = per-sequence KV budget in tokens)
+        self.objective = objective
         self.fsdp = fsdp
         self.tatp_bidirectional = tatp_bidirectional
         self.stream = stream
@@ -210,6 +215,15 @@ class StepCostContext:
         self.hbm_bytes = self.n_l * (4 * BYTES_W * self.p_active + 6
                                      * self.tokens * cfg.d_model * BYTES_ACT)
         self.e_hbm = self.hbm_bytes * spec.e_hbm
+        # decode-objective invariants (cheap; computed unconditionally so a
+        # context can answer decode memory queries even when solving train)
+        self.kv_seq_bytes = cfg.cache_bytes_per_seq(seq)  # full KV budget
+        self.state_seq_bytes = cfg.cache_bytes_per_seq(0)  # ctx-free part
+        # fwd-only per-token flops (one layer / the lm head); the training
+        # numbers above are fwd+bwd (3x)
+        self.dec_layer_flops = 2 * self.p_active \
+            + 4 * self.seq * cfg.d_model
+        self.dec_head_flops = 2 * cfg.d_model * cfg.vocab_size
         # memoization
         self._groups: dict = {}
         self.results: dict = {}
@@ -280,7 +294,11 @@ class StepCostContext:
                 slots.append((i, key))
                 missing.append(d)
         if missing:
-            if self.evaluator == "reference":
+            if self.objective == "decode":
+                # decode iterations have no TCME-final / remat split: the
+                # same vectorized evaluator serves search and final scoring
+                res = simulate_decode_batch(self, missing)
+            elif self.evaluator == "reference":
                 res = [simulate_step_reference(
                     self.wafer, self.cfg, self.batch, self.seq, d,
                     self.engine, fsdp=self.fsdp,
@@ -1649,6 +1667,235 @@ def memory_components(ctx: StepCostContext,
     fixed = w_bytes + g_bytes + opt_bytes + transient
     seqs_per_die = max(1, int(ctx.batch // deg.dp))
     return fixed, act_full, seqs_per_die
+
+
+# ---------------------------------------------------------------------------
+# decode objective: one continuous-batching decode iteration
+# ---------------------------------------------------------------------------
+
+# GEMV/attention arithmetic efficiency during decode: single-token matmuls
+# run far below the training GEMM efficiency (the workload is
+# memory-bandwidth-bound; this floor only matters for very large in-flight
+# batches where decode tips back to compute)
+DECODE_GEMV_EFF = 0.25
+# per-token workspace: a handful of d_model-wide activation buffers per
+# in-flight sequence (q/k/v/o + mlp transients)
+DECODE_WS_COEFF = 8
+
+
+def _decode_kv_divisors(cfg: ModelConfig, dp, tp, sp, ta):
+    """(kv_div, state_div): how many ways the per-sequence decode cache
+    shards under a degree tuple.
+
+    Attention KV shards over heads only up to ``n_kv_heads`` (GQA
+    replicates past that), over the sequence dim via sp, around the TATP
+    ring via tatp, and over the batch via dp.  SSM state has no sequence
+    dim — sp replicates it — but its d_inner axis splits fully over tp.
+    """
+    kv_heads = max(cfg.n_kv_heads, 1)
+    kv_div = dp * sp * ta * np.minimum(tp, kv_heads)
+    state_div = dp * ta * tp
+    return kv_div, state_div
+
+
+def decode_memory_components(ctx: StepCostContext, deg: ParallelDegrees) \
+        -> tuple[float, float, float]:
+    """``(weight_bytes, cache_bytes, workspace_bytes)`` per die for one
+    candidate at the context's full KV budget (``batch`` in-flight
+    sequences × ``seq`` context tokens).
+
+    Inference holds no gradients and no optimizer state: the fixed term is
+    the weight shard alone (dp replicas each keep a full copy of their
+    model shard), and the variable term is the decode cache priced through
+    :meth:`repro.configs.base.ModelConfig.cache_bytes_per_seq` — the same
+    function the serve engine's admission uses, so plan-time budgets and
+    runtime occupancy agree byte-for-byte.
+    """
+    cfg, n_dies = ctx.cfg, ctx.n_dies
+    w_bytes = BYTES_W * ctx.p_total / min(deg.tp * deg.tatp, n_dies)
+    kv_div, state_div = _decode_kv_divisors(
+        cfg, deg.dp, deg.tp, deg.sp, deg.tatp)
+    kv_ctx = ctx.kv_seq_bytes - ctx.state_seq_bytes  # ctx-length-dependent
+    cache = ctx.batch * (kv_ctx / kv_div
+                         + ctx.state_seq_bytes / state_div)
+    ws = (ctx.batch / deg.dp) * cfg.d_model * BYTES_ACT * DECODE_WS_COEFF
+    return w_bytes, float(cache), float(ws)
+
+
+def _decode_ring_hops(ctx: StepCostContext, deg: ParallelDegrees) \
+        -> tuple[int, int]:
+    """(tatp ring hop factor, sp ring hop factor) for one candidate —
+    the same wafer-cached group structures the training path uses, so
+    degraded wafers (holes, detours) stretch decode rings identically."""
+    groups = ctx.groups_for(deg)
+    ta_h = _tatp_hop_factor(groups.get("tatp", []), ctx.wafer,
+                            ctx.tatp_bidirectional) if deg.tatp > 1 else 1
+    sp_h = _sp_hop_factor(groups.get("sp", []), ctx.wafer) \
+        if deg.sp > 1 else 1
+    return ta_h, sp_h
+
+
+def simulate_decode_batch(ctx: StepCostContext,
+                          degrees: list[ParallelDegrees]) -> list[SimResult]:
+    """Score one continuous-batching decode iteration for a batch of
+    candidate degree tuples (the decode twin of :func:`simulate_batch`).
+
+    The returned :class:`SimResult` reuses the training field contract so
+    the DLWS machinery runs unchanged — ``step_time`` is the per-token
+    iteration latency (every in-flight sequence gains one token per
+    iteration), ``throughput`` is decode tokens/s across the wafer, and
+    ``mem_per_die`` includes the full-budget KV cache.
+
+    Cost structure per layer::
+
+        t_layer = t_coll + max(t_comp, t_ring) + t_sched
+
+    * ``t_comp`` — max of GEMV flop time and the HBM time to read the
+      weight shard once per iteration (amortized over the whole in-flight
+      batch: the term that makes continuous batching pay) plus the KV
+      scan of every active sequence.
+    * ``t_ring`` — the ring-KV stream: per-token query/partial blocks
+      circulating the sp and tatp rings.  Decode messages are tiny and
+      latency-bound, so hops are priced at ``bytes/link_bw +
+      hop_latency`` — the sustained-stream granularity ramp
+      (``spec.bw_eff``) models DMA efficiency of tens-of-MB training
+      streams and would overcharge a KB-scale decode hop by ~100×.
+    * ``t_coll`` — exposed TP all-reduces of the token activations
+      (2/layer, ring algorithm: ``2(tp-1)`` latency-bound hops each).
+
+    Weight streaming (the training TATP trade) is deliberately absent:
+    re-streaming weights every generated token can never win, so the
+    decode TATP axis is modeled as a cache-ring split — WaferLLM's
+    inference regime, where the partition trade-offs genuinely differ
+    from the training solve.
+    """
+    if not degrees:
+        return []
+    cfg, spec = ctx.cfg, ctx.spec
+    n_dies = ctx.n_dies
+    nC = len(degrees)
+
+    dkey = tuple(d.key for d in degrees)
+    arrs = _DEGREE_ARRAYS.get(dkey)
+    if arrs is None:
+        arrs = (np.array([d.dp for d in degrees], np.int64),
+                np.array([d.tp for d in degrees], np.int64),
+                np.array([d.sp for d in degrees], np.int64),
+                np.array([d.tatp for d in degrees], np.int64),
+                np.array([d.seq_par for d in degrees], bool))
+        if len(_DEGREE_ARRAYS) >= _DEGREE_ARRAYS_CAP:
+            _DEGREE_ARRAYS.clear()
+        _DEGREE_ARRAYS[dkey] = arrs
+    dp, tp, sp, ta, _seq_par = arrs
+    B, S = ctx.batch, ctx.seq
+    # decode feasibility: the die product must fit, tp cannot split more
+    # query heads than the model has, and dp cannot exceed (or unevenly
+    # split) the in-flight batch — each dp replica serves whole sequences,
+    # so dp > B would emit an unexecutable mesh that the fractional
+    # tok = B/dp arithmetic also underprices
+    feasible = (dp * tp * sp * ta <= n_dies) \
+        & (tp <= max(cfg.n_heads, 1)) \
+        & (dp <= B) & (B % dp == 0)
+    tok = B / dp  # tokens computed per dp replica per iteration
+
+    # ---------------- memory (vectorized decode_memory_components) --------
+    w_bytes = BYTES_W * ctx.p_total / np.minimum(tp * ta, n_dies)
+    kv_div, state_div = _decode_kv_divisors(cfg, dp, tp, sp, ta)
+    kv_ctx = ctx.kv_seq_bytes - ctx.state_seq_bytes
+    cache_bytes = B * (kv_ctx / kv_div + ctx.state_seq_bytes / state_div)
+    ws = tok * cfg.d_model * BYTES_ACT * DECODE_WS_COEFF
+    mem = w_bytes + cache_bytes + ws
+    oom = mem > spec.hbm_cap
+
+    # ---------------- per-layer compute / HBM ------------------------------
+    lin_flops = 2 * ctx.p_active * tok / (tp * ta)
+    attn_flops = 4 * S * cfg.d_model * tok / (tp * sp * ta)
+    t_flops = (lin_flops + attn_flops) / (spec.flops * DECODE_GEMV_EFF)
+    w_read = BYTES_W * ctx.p_active / (tp * ta)
+    kv_read = tok * (kv_ctx / ctx.n_l) / (kv_div / dp)  # per-die KV scan
+    t_hbm = (w_read + kv_read) / spec.hbm_bw
+    t_comp = np.maximum(t_flops, t_hbm)
+
+    # ---------------- ring-KV stream + TP collectives ----------------------
+    ta_hops = np.ones(nC)
+    sp_hops = np.ones(nC)
+    need = np.nonzero(feasible & ((ta > 1) | (sp > 1)))[0]
+    for i in need:
+        ta_hops[i], sp_hops[i] = _decode_ring_hops(ctx, degrees[i])
+    q_bytes = tok * cfg.d_model * BYTES_ACT  # query + partial-out block
+    t_ring = (sp - 1) * (q_bytes / spec.link_bw
+                         + sp_hops * spec.hop_latency) \
+        + (ta - 1) * (q_bytes / spec.link_bw
+                      + ta_hops * spec.hop_latency)
+    ar_bytes = 2 * q_bytes / np.maximum(tp, 1)  # ring all-reduce chunk
+    t_coll = np.where(tp > 1,
+                      2 * 2 * (tp - 1) * (ar_bytes / spec.link_bw
+                                          + spec.hop_latency), 0.0)
+    t_sched = np.where(ta > 1, (ta + 1) // 2 * T_DISPATCH, 0.0) \
+        + np.where(sp > 1, T_DISPATCH, 0.0)
+
+    # ---------------- per-token latency / throughput -----------------------
+    t_layer = t_coll + np.maximum(t_comp, t_ring) + t_sched
+    head_read = BYTES_W * cfg.d_model * cfg.vocab_size / (tp * ta)
+    t_head = np.maximum(ctx.dec_head_flops * tok / (tp * ta)
+                        / (spec.flops * DECODE_GEMV_EFF),
+                        head_read / spec.hbm_bw)
+    lat = ctx.n_l * t_layer + t_head
+    thr = B / lat
+
+    # ---------------- power ------------------------------------------------
+    flops_step = (ctx.dec_layer_flops * ctx.n_l + ctx.dec_head_flops) * B
+    hbm_step = (w_read + kv_read) * ctx.n_l * dp * np.minimum(tp * ta,
+                                                              n_dies)
+    d2d_step = ctx.n_l * (q_bytes * (sp - 1) * sp_hops
+                          + q_bytes * (ta - 1) * ta_hops
+                          + np.where(tp > 1, 4 * q_bytes * (tp - 1), 0.0)) \
+        * dp
+    energy = flops_step * spec.e_flop + hbm_step * spec.e_hbm \
+        + d2d_step * spec.e_d2d + 450.0 * n_dies * lat
+    power = energy / lat
+    bw_cap = n_dies * 4 * spec.link_bw
+    bw_util = np.minimum(1.0, d2d_step / lat / bw_cap)
+
+    out: list[SimResult] = []
+    for i, deg in enumerate(degrees):
+        if not feasible[i]:
+            if tp[i] > max(cfg.n_heads, 1):
+                reason = "tp exceeds heads"
+            elif dp[i] > B or B % dp[i]:
+                reason = "dp does not divide batch"
+            else:
+                reason = "degree exceeds dies"
+            out.append(SimResult(math.inf, 0.0, math.inf, True, 0.0, 0.0,
+                                 0.0, {"objective": "decode",
+                                       "reason": reason},
+                                 deg, ctx.engine))
+            continue
+        out.append(SimResult(
+            step_time=float(lat[i]),
+            throughput=float(thr[i]),
+            mem_per_die=float(mem[i]),
+            oom=bool(oom[i]),
+            power=float(power[i]),
+            power_eff=float(thr[i] / power[i]) if power[i] > 0 else 0.0,
+            bw_util=float(bw_util[i]),
+            breakdown={
+                "objective": "decode",
+                "t_comp_layer": float(t_comp[i]),
+                "t_hbm_layer": float(t_hbm[i]),
+                "t_ring_layer": float(t_ring[i]),
+                "t_coll_layer": float(t_coll[i]),
+                "t_head": float(t_head[i]),
+                "w_bytes": float(w_bytes[i]),
+                "cache_bytes": float(cache_bytes[i]),
+                "kv_read_per_iter": float(kv_read[i]),
+                "ta_hops": int(ta_hops[i]),
+                "sp_hops": int(sp_hops[i]),
+            },
+            degrees=deg,
+            engine=ctx.engine,
+        ))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -257,27 +257,44 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                engine: str = "tcme", space: str = "temp", seed: int = 0,
                dies: Optional[list[int]] = None,
                evaluator: str = "batch",
-               stage1: Optional[str] = None) -> SolveResult:
+               stage1: Optional[str] = None,
+               objective: str = "train") -> SolveResult:
     """Dual-level solve.  ``evaluator="reference"`` routes every score
     through the seed scalar path (same trajectory — results are bitwise
     identical — used by benchmarks to measure the engine speedup);
     ``stage1="jax"`` runs the Tier-B stage-1 arithmetic through the jitted
-    twin (million-candidate sweeps)."""
+    twin (million-candidate sweeps).
+
+    ``objective="decode"`` scores candidates as one continuous-batching
+    decode iteration instead of a training step (``batch`` = max in-flight
+    sequences, ``seq`` = per-sequence KV budget): the same DP/GA search
+    runs against :func:`repro.wafer.simulator.simulate_decode_batch`, so
+    serving solves inherit every search-level optimization while trading
+    ring-KV stream latency and cache capacity instead of step time."""
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
     t0 = time.time()
     ctx = StepCostContext(wafer, cfg, batch, seq, engine,
                           fsdp=spec["fsdp"], dies=dies, evaluator=evaluator,
-                          stage1=stage1)
+                          stage1=stage1, objective=objective)
     subs = partition_graph(cfg)  # level 0 (scopes the DP passes)
     start = ParallelDegrees(dp=ctx.n_dies, seq_par=spec["seq_par"])
-    cur = start
+    if objective == "decode" and ctx.n_dies > 1:
+        # dp=n replicates full weights per die — hopeless for big models;
+        # seed the search from a balanced data × ring split as well
+        r = max(d for d in divisors(ctx.n_dies) if d * d <= ctx.n_dies)
+        start2 = ParallelDegrees(dp=ctx.n_dies // r, tatp=r,
+                                 seq_par=spec["seq_par"])
+        seeds = [start, start2]
+    else:
+        seeds = [start]
+    cur = seeds[-1]
     for _ in subs:  # one DP pass per residual-free sub-graph
         cur = dp_refine(ctx, cur)
-    best = ga_refine(ctx, [cur, start], rng=random.Random(seed))
+    best = ga_refine(ctx, [cur] + seeds, rng=random.Random(seed))
     res = ctx.evaluate(best, final=True)
     return SolveResult(res, best, engine, time.time() - t0, ctx.evaluated,
-                       "dlws")
+                       "dlws-decode" if objective == "decode" else "dlws")
 
 
 def ilp_search(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,

@@ -16,7 +16,6 @@ Five-phase communication optimizer:
 
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass, field
 
 from repro.wafer.topology import Link, Wafer

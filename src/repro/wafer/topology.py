@@ -6,7 +6,7 @@ WSC: 4×8 compute dies, TSMC-7nm logic + HBM3 stacks).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
 Link = tuple[int, int]  # (src_die, dst_die), directed

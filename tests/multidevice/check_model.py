@@ -12,14 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_reduced
 from repro.configs.base import ParallelConfig, ShapeConfig
 from repro.core.dist import Dist, make_mesh
 from repro.models import lm
 from repro.models.transformer import RunCtx, init_params, param_specs
-from repro.train.train_loop import (batch_specs, cache_shapes, cache_specs,
-                                    make_serve_fns, make_train_step)
-from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import batch_specs, make_serve_fns
 
 B, S = 4, 32
 ARCHS = ["deepseek-7b", "gemma2-9b", "olmoe-1b-7b", "zamba2-2.7b",

@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
 sweeping shapes and dtypes."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

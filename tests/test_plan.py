@@ -4,7 +4,6 @@ tuple (multi-wafer), degraded-wafer re-planning with single-stage
 re-solve + layer rebalancing, and the plan → mesh / ParallelConfig
 executable views."""
 
-import json
 import os
 
 import pytest

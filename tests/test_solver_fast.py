@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs.paper_models import TABLE_II
 from repro.wafer.simulator import (STRATEGY_SPACES, ParallelDegrees,
-                                   SimResult, StepCostContext, best_config,
+                                   SimResult, StepCostContext,
                                    candidate_degrees, divisors,
                                    memory_components, simulate_batch,
                                    simulate_step, simulate_step_reference,

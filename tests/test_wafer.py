@@ -2,7 +2,6 @@
 contention reduction, simulator invariants, DLWS solver quality, fault
 recovery, and the DNN cost surrogate."""
 
-import numpy as np
 import pytest
 
 from repro.configs.paper_models import TABLE_II
@@ -11,7 +10,7 @@ from repro.wafer.simulator import (ParallelDegrees, best_config,
                                    candidate_degrees, simulate_step)
 from repro.wafer.tcme import optimize_phase
 from repro.wafer.topology import Wafer, WaferSpec
-from repro.wafer.traffic import CommOp, link_loads, max_ring_hops, phase_time
+from repro.wafer.traffic import CommOp, phase_time
 
 WAFER = Wafer(WaferSpec())
 CFG, SHAPE = TABLE_II["gpt3-6.7b"]
@@ -89,7 +88,6 @@ def _contended_ops():
     for g in wmap.make_groups(WAFER, 4, "smap"):
         ops.append(CommOp("allgather", g, 100e6, tag="fsdp"))
     # crossing rings: column-strided groups (non-contiguous)
-    cols = WAFER.spec.cols
     for c in range(4):
         g = tuple(WAFER.die(r, c) for r in range(4))
         ops.append(CommOp("p2p_ring", g, 100e6, tag="tatp"))
