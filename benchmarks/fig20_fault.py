@@ -1,6 +1,7 @@
 """Paper Fig. 20: fault tolerance — normalized throughput vs link/core
 fault rate.  Paper: resilient to core faults (≈80% at 25%), link-fault
-cliff near 35%."""
+cliff near 35%.  A ``mixed`` sweep (dies and links failing together, the
+worst case §VIII-F classifies) rides along as the lower envelope."""
 
 from __future__ import annotations
 
@@ -20,6 +21,9 @@ def run() -> dict:
                                          kind="core", ctx_cache=ctx_cache),
         "link": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
                                          kind="link", ctx_cache=ctx_cache),
+        "mixed": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
+                                          kind="mixed",
+                                          ctx_cache=ctx_cache),
     }
     save_rows("fig20_fault", out)
     return out
@@ -27,7 +31,7 @@ def run() -> dict:
 
 def main():
     out = run()
-    for kind in ("core", "link"):
+    for kind in ("core", "link", "mixed"):
         for r in out[kind]:
             print(csv_row(f"fig20/{kind}@{r['rate']:.2f}",
                           r["normalized"] * 1e6,

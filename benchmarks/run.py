@@ -7,7 +7,9 @@ records land in results/bench/*.json.
 ``search/engine_baseline`` drift check, the fig19 multi-wafer smoke
 (GPT-3 175B ×2 through the solve→plan→schedule pipeline) and the
 ``serve/decode_baseline`` gate (decode solve + continuous-batching
-scheduler + serving cost model, pinned by plan/trace hashes), so
+scheduler + serving cost model, pinned by plan/trace hashes) and the
+``serve/fault_recovery`` gate (mid-run die fault → live replan → KV
+migration, pinned by trace/plan hashes and recovery metrics), so
 plan-pipeline regressions, cost-engine drift, multi-wafer drift and
 serving drift are caught together.  A per-gate pass/fail summary table
 prints at the end (exit 1 on any failure).
@@ -30,6 +32,7 @@ BENCHES = [
     "fig21_costmodel",
     "search_time",
     "serve_decode",
+    "serve_fault",
     "kernel_bench",
 ]
 
@@ -133,6 +136,18 @@ def check() -> None:
     except Exception as e:
         traceback.print_exc()
         gates.append(("serve/decode_baseline", False, repr(e)))
+
+    print("== serve/fault_recovery drift ==", flush=True)
+    try:
+        from benchmarks.serve_fault import (check_gate as fault_gate,
+                                            run as fault_run)
+        rows, _, baseline = fault_run(fast=True)
+        ok, detail = fault_gate(rows, baseline)
+        print(f"serve_fault {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("serve/fault_recovery", ok, detail))
+    except Exception as e:
+        traceback.print_exc()
+        gates.append(("serve/fault_recovery", False, repr(e)))
 
     # ---- per-gate summary table ----------------------------------------
     width = max(len(n) for n, _, _ in gates)

@@ -537,17 +537,39 @@ def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
                  ("tp", int(min(deg.tp, max(cfg.n_kv_heads, 1)))),
                  ("tatp", deg.tatp))
     best = sol.best
+    # KV-budget cap: when the wafer cannot hold the *full* B×S cache
+    # beside the weight shard (degraded meshes mostly — fewer dies means
+    # fewer KV shards), the plan is still servable with fewer resident
+    # tokens.  Cap ``kv_budget_tokens`` at what actually fits instead of
+    # declaring OOM, as long as at least one max-context request fits.
+    # On a healthy solve the cache fits by construction and the budget
+    # stays at max_batch*max_seq, so pristine plans are unchanged.
+    kv_budget = max_batch * max_seq
+    kv_bytes = cache_bytes
+    mem_pred = best.mem_per_die
+    oom_pred = best.oom
+    kv_capped = False
+    if best.oom and cache_bytes > 0:
+        free = wafer.spec.hbm_cap - (best.mem_per_die - cache_bytes)
+        budget = int(free / cache_bytes * max_batch * max_seq)
+        if budget >= max_seq:
+            kv_budget = budget
+            kv_bytes = cache_bytes * budget / (max_batch * max_seq)
+            mem_pred = best.mem_per_die - cache_bytes + kv_bytes
+            oom_pred = False
+            kv_capped = True
     plan = ServePlan(
         plan=inner, max_batch=max_batch, max_seq=max_seq,
-        kv_layout=kv_layout, kv_bytes_per_die=cache_bytes,
-        kv_budget_tokens=max_batch * max_seq,
+        kv_layout=kv_layout, kv_bytes_per_die=kv_bytes,
+        kv_budget_tokens=kv_budget,
         stream_dtype=stream_dtype, prefill_chunk=prefill_chunk,
         predicted={
             "token_latency": best.step_time,
             "tokens_per_s": best.throughput,
-            "mem_per_die": best.mem_per_die,
-            "oom": best.oom,
+            "mem_per_die": mem_pred,
+            "oom": oom_pred,
             "kv_shards": int(kv_div),
+            "kv_budget_capped": kv_capped,
         },
         solver={
             "method": sol.method,
@@ -557,6 +579,55 @@ def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
     )
     plan.dump(path)
     return plan
+
+
+def replan_serve(plan: ServePlan, cfg, wafer=None, *,
+                 failed_dies: Sequence[int] = (),
+                 failed_links: Sequence[tuple[int, int]] = (),
+                 min_batch: int = 1, seed: int = 0,
+                 cache_dir: Optional[str] = None,
+                 use_cache: bool = True) -> ServePlan:
+    """Re-solve a serving plan on a degraded wafer (§VIII-F, live).
+
+    The elastic-serving recovery path: given the plan currently being
+    executed and the fault state, re-run ``dlws_solve(objective="decode")``
+    on the surviving dies and emit a new :class:`ServePlan` with the same
+    serving contract knobs (``max_seq``, codec, prefill chunk).  Goes
+    through :func:`compile_serve_plan`, so the fault-keyed plan cache
+    applies — a wafer that already degraded the same way replans from
+    disk, and an offline ``compile_serve_plan`` on the same degraded
+    wafer produces the *identical* plan (pinned by the fault_recovery
+    gate's fresh-solve control).
+
+    Capacity may shrink two ways: the KV-budget cap inside
+    ``compile_serve_plan`` trims ``kv_budget_tokens`` when the full cache
+    no longer fits beside the (now larger) weight shard, and if even one
+    max-context request cannot fit, ``max_batch`` halves until the plan
+    is feasible (floor ``min_batch``).  The caller migrates resident
+    sequences into whatever contract comes back
+    (:func:`repro.serve.migrate.plan_kv_migration`).
+
+    ``wafer``, when given, is the live degraded wafer and takes
+    precedence over the plan's grid-only record — pass it whenever the
+    deployment runs a non-default :class:`WaferSpec`.  ``failed_dies`` /
+    ``failed_links`` apply *additional* faults on top (cumulative
+    failures compose).
+    """
+    degraded = wafer if wafer is not None else plan.plan.wafer()
+    if failed_dies or failed_links:
+        degraded = degraded.with_faults(failed_dies, failed_links)
+    if not degraded.alive_dies():
+        raise ValueError("replan_serve: no surviving dies to replan onto")
+    max_batch = plan.max_batch
+    while True:
+        new = compile_serve_plan(
+            degraded, cfg, max_batch, plan.max_seq, arch=plan.arch,
+            engine=plan.plan.engine, space=plan.plan.space,
+            stream_dtype=plan.stream_dtype, prefill_chunk=plan.prefill_chunk,
+            seed=seed, cache_dir=cache_dir, use_cache=use_cache)
+        if not new.predicted.get("oom") or max_batch <= min_batch:
+            return new
+        max_batch = max(min_batch, max_batch // 2)
 
 
 # ---------------------------------------------------------------------------

@@ -150,6 +150,52 @@ class JaxServeExecutor:
             self.last_tok[st.slot] = nxt[st.slot]
         return None
 
+    def migrate(self, new_plan, mig, wafer=None):
+        """Adopt a post-fault plan: rebuild the mesh/step functions for
+        the new contract and graft the survivors' resident KV rows from
+        the old cache into their new slots
+        (:func:`repro.models.lm.graft_cache_slots` — the same primitive
+        admission uses, here with a slot→slot remap).
+
+        Single-process scope: the degraded mesh is rebuilt over the same
+        local device set (``make_plan_mesh`` folds the plan's ring degree
+        onto however many devices exist), so "migration" moves cache rows
+        between batch slots, not across hosts.  ``max_seq`` is contract-
+        stable across replans, so K/V windows copy row-for-row.  Returns
+        None: under a WallClock the real rebuild+graft time stands.
+        """
+        from dataclasses import replace
+        from repro.launch.mesh import make_plan_mesh
+        from repro.models import lm
+        from repro.models.transformer import RunCtx
+
+        old_caches = jax.device_get(self.caches)
+        old_last = self.last_tok
+        cfg = self.cfg
+        self.plan = new_plan
+        mesh = make_plan_mesh(new_plan.plan)
+        par = replace(new_plan.parallel_config(), remat=False)
+        self.sb, self.params, dist = _build_bundle(
+            cfg, mesh, par, new_plan.max_batch, new_plan.max_seq)
+        self._dec_ctx = RunCtx(cfg, par, dist, phase="decode")
+        bl = new_plan.max_batch // max(dist.batch_degree, 1) \
+            if new_plan.max_batch % max(dist.batch_degree, 1) == 0 \
+            else new_plan.max_batch
+        fresh = lm.init_cache(self._dec_ctx, bl, new_plan.max_seq,
+                              enc_len=cfg.frontend_tokens or None)
+        if mig.survivors:
+            slots = [new_slot for _, _, new_slot in mig.survivors]
+            rows = [old_slot for _, old_slot, _ in mig.survivors]
+            merged = lm.graft_cache_slots(jax.device_get(fresh),
+                                          old_caches, slots, rows=rows)
+            self.caches = jax.tree.map(jnp.asarray, merged)
+        else:
+            self.caches = fresh
+        self.last_tok = np.zeros(new_plan.max_batch, np.int32)
+        for _, old_slot, new_slot in mig.survivors:
+            self.last_tok[new_slot] = old_last[old_slot]
+        return None
+
 
 def serve_engine(args) -> dict:
     """Engine mode: solve → ServePlan → continuous-batching run."""
@@ -172,15 +218,25 @@ def serve_engine(args) -> dict:
         prompt_len=args.prompt_len, max_new_tokens=args.max_new,
         slo_ttft=args.slo_ttft or math.inf,
         slo_tpot=args.slo_tpot or math.inf)
+    wafer = Wafer(WaferSpec(rows=plan.plan.wafer_rows,
+                            cols=plan.plan.wafer_cols),
+                  frozenset(plan.plan.failed_dies))
+    faults = ()
+    if args.fault_at is not None:
+        from repro.wafer.fault import sample_die_faults
+        rep_f = sample_die_faults(wafer, args.fault_frac, seed=args.seed)
+        faults = (rep_f.as_event(args.fault_at),)
+        print(f"fault scheduled at t={args.fault_at}s: "
+              f"dies {rep_f.failed_dies}")
     if args.sim:
-        wafer = Wafer(WaferSpec(rows=plan.plan.wafer_rows,
-                                cols=plan.plan.wafer_cols),
-                      frozenset(plan.plan.failed_dies))
         ex = CostModelExecutor(plan, cfg, wafer)
-        engine = ServeEngine(plan, ex, clock=VirtualClock())
+        clock = VirtualClock()
     else:
         ex = JaxServeExecutor(plan, cfg)
-        engine = ServeEngine(plan, ex, clock=WallClock())
+        clock = WallClock()
+    engine = ServeEngine(plan, ex, clock=clock, cfg=cfg, wafer=wafer,
+                         faults=faults, readmission=args.readmission,
+                         plan_cache_dir=args.plan_cache)
     rep = engine.run(reqs)
     out = rep.to_dict()
     out["plan_hash"] = plan.plan_hash
@@ -298,6 +354,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sim", action="store_true",
                     help="cost-model executor (no jax; virtual clock)")
+    # elastic serving: mid-run fault injection
+    ap.add_argument("--fault-at", type=float, default=None,
+                    help="inject a die-kill fault at this engine time (s): "
+                         "live replan + KV migration")
+    ap.add_argument("--fault-frac", type=float, default=0.125,
+                    help="fraction of alive dies the fault kills "
+                         "(exact, seeded)")
+    ap.add_argument("--readmission", choices=("live", "drain"),
+                    default="live",
+                    help="evicted-sequence policy after a migration")
     args = ap.parse_args()
     if args.serve:
         print(json.dumps(serve_engine(args)))

@@ -422,16 +422,28 @@ def graft_cache_slots(big, small, slots, rows=None):
     state/conv leaves (context-length-free) copy whole rows.  Operates on
     host (numpy) trees — callers ``device_get`` / ``device_put`` around
     it to respect the decode layout's shardings.
+
+    It is also the KV *migration* move (elastic serving): with ``rows``
+    given, survivors of a fault-triggered plan swap copy old-slot →
+    new-slot between two full decode caches — there ``small`` is the old
+    resident cache, whose batch axis may be *larger* than ``big``'s (a
+    shrunken ``max_batch``).  When the sequence windows differ, only the
+    common head is copied: admission grafts a prompt window into a longer
+    slot, and a (hypothetical) shrink-seq migration must not read past
+    the destination window.
     """
     import numpy as np
     rows = list(rows) if rows is not None else list(range(len(slots)))
     slots = list(slots)
+    if not slots:
+        return jax.tree.map(np.array, jax.device_get(big))
 
     def one(d, s):
         d = np.array(d)
         s = np.asarray(s)
         if d.ndim >= 3 and d.shape[2] != s.shape[2]:
-            d[:, slots, :s.shape[2]] = s[:, rows].astype(d.dtype)
+            w = min(d.shape[2], s.shape[2])
+            d[:, slots, :w] = s[:, rows, :w].astype(d.dtype)
         else:
             d[:, slots] = s[:, rows].astype(d.dtype)
         return d

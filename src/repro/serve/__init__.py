@@ -1,19 +1,29 @@
 """Plan-driven serving subsystem: continuous-batching decode off a
-compiled :class:`repro.core.plan.ServePlan`."""
+compiled :class:`repro.core.plan.ServePlan`, with elastic fault recovery
+(live replan + KV-cache migration, :mod:`repro.serve.migrate`)."""
 
 from repro.serve.engine import (ContinuousBatchingScheduler,
-                                CostModelExecutor, Request, RequestState,
-                                ServeEngine, ServeReport, VirtualClock,
-                                WallClock, poisson_arrivals)
+                                CostModelExecutor, FaultEvent, RecoveryEvent,
+                                Request, RequestState, ServeEngine,
+                                ServeReport, VirtualClock, WallClock,
+                                poisson_arrivals, rolling_peak_throughput,
+                                validate_request)
+from repro.serve.migrate import KVMigration, plan_kv_migration
 
 __all__ = [
     "ContinuousBatchingScheduler",
     "CostModelExecutor",
+    "FaultEvent",
+    "KVMigration",
+    "RecoveryEvent",
     "Request",
     "RequestState",
     "ServeEngine",
     "ServeReport",
     "VirtualClock",
     "WallClock",
+    "plan_kv_migration",
     "poisson_arrivals",
+    "rolling_peak_throughput",
+    "validate_request",
 ]

@@ -26,7 +26,20 @@ Scheduling policy (kept deliberately simple and fully deterministic):
 admission is strict FCFS — a request that does not fit (no free slot, or
 KV budget exhausted) blocks everything behind it.  No bypass means no
 starvation, and makes the admission order a pure function of arrivals,
-which the drift gate hashes.
+which the drift gate hashes.  The one exception: a request that can
+*never* fit the plan (context over ``max_seq`` or the whole KV budget)
+is rejected with a recorded reason instead of deadlocking the queue.
+
+Elastic serving (§VIII-F under live traffic): the engine accepts a
+timeline of :class:`FaultEvent`s.  When one fires mid-run, the engine
+re-solves the decode mesh on the surviving dies
+(:func:`repro.core.plan.replan_serve`), plans a KV-cache migration into
+the new contract (:mod:`repro.serve.migrate`), lets the executor carry
+it out (``migrate()`` — a priced pause on the cost model, a real
+``graft_cache_slots`` move on jax), and re-admits evicted sequences as
+continuations with prefix-recompute accounting.  Each recovery is
+recorded as a :class:`RecoveryEvent` with SLO-dip depth and
+time-to-recover, which ``benchmarks/serve_fault.py`` gates on.
 """
 
 from __future__ import annotations
@@ -41,13 +54,36 @@ from typing import Callable, Optional, Sequence
 
 @dataclass(frozen=True)
 class Request:
-    """One generation request as submitted by a client."""
+    """One generation request as submitted by a client.
+
+    ``prior_tokens`` marks a *continuation*: when a fault-triggered
+    migration evicts an in-flight sequence, the scheduler re-queues it
+    as a fresh request whose prompt is the full evicted context (prefix
+    recompute) and whose budget is the remaining tokens; ``prior_tokens``
+    carries how many tokens the rid already generated before eviction.
+    Client submissions leave it at 0.
+    """
     rid: int
     arrival: float  # seconds on the engine clock
     prompt_len: int
     max_new_tokens: int
     slo_ttft: float = math.inf  # s: arrival -> first token
     slo_tpot: float = math.inf  # s: per output token (steady decode)
+    prior_tokens: int = 0
+
+
+def validate_request(req: Request) -> None:
+    """Fail fast on requests that would violate scheduler assertions deep
+    in the decode loop (``mark_decoded`` requires ``0 < tokens_done <
+    max_new_tokens``; a negative prompt would corrupt KV accounting)."""
+    if req.max_new_tokens <= 0:
+        raise ValueError(
+            f"request {req.rid}: max_new_tokens must be positive "
+            f"(got {req.max_new_tokens})")
+    if req.prompt_len < 0:
+        raise ValueError(
+            f"request {req.rid}: prompt_len must be non-negative "
+            f"(got {req.prompt_len})")
 
 
 @dataclass
@@ -113,12 +149,39 @@ class ContinuousBatchingScheduler:
         self.admission_trace: list[tuple[int, int]] = []  # (iteration, rid)
         self.iterations = 0
         self.occupancy_sum = 0  # Σ active per iteration (mean occupancy)
+        self.rejected: list[tuple[Request, str]] = []  # never-fit requests
+        self.evicted_partials: list[RequestState] = []  # migration evictions
+        self.readmitted = 0  # continuations re-queued by migrations
+        self.drain_hold = False  # drain policy: block admission until empty
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        validate_request(req)
         if self.waiting and req.arrival < self.waiting[-1].arrival:
             raise ValueError("submissions must be in arrival order")
         self.waiting.append(req)
+
+    def reject_never_fit(self, now: float) -> list[Request]:
+        """Pop head-of-line requests that can *never* be admitted under
+        the current plan (context over ``max_seq`` or over the whole KV
+        budget) into ``self.rejected`` with a recorded reason, so the
+        queue behind them keeps being served.  Requests that merely have
+        to wait for headroom are left in place (strict FCFS)."""
+        out: list[Request] = []
+        while self.waiting:
+            head = self.waiting[0]
+            cost = self.kv_cost(head)
+            if cost <= self.plan.max_seq and \
+                    cost <= self.plan.kv_budget_tokens:
+                break
+            self.waiting.popleft()
+            limit = (f"max_seq={self.plan.max_seq}"
+                     if cost > self.plan.max_seq else
+                     f"KV budget={self.plan.kv_budget_tokens} tokens")
+            self.rejected.append(
+                (head, f"prompt+gen={cost} tokens can never fit {limit}"))
+            out.append(head)
+        return out
 
     def kv_cost(self, req: Request) -> int:
         return self.plan.cache_tokens_per_request(req.prompt_len,
@@ -130,6 +193,12 @@ class ContinuousBatchingScheduler:
 
     def admissible(self) -> bool:
         """Can the head-of-line request start this iteration?"""
+        if self.drain_hold:
+            # drain readmission policy: after a migration, no admission
+            # until every surviving in-flight sequence has retired
+            if self.active:
+                return False
+            self.drain_hold = False
         if not (self.waiting and self.free_slots):
             return False
         cost = self.kv_cost(self.waiting[0])
@@ -191,6 +260,52 @@ class ContinuousBatchingScheduler:
             assert self.kv_reserved >= 0
             self.finished.append(st)
 
+    # -- plan-to-plan migration (elastic serving) --------------------------
+    def apply_migration(self, new_plan, mig, now: float,
+                        policy: str = "live") -> None:
+        """Adopt a post-fault plan: remap survivors into their new slots,
+        rebuild the free list and KV reservation for the new contract,
+        and re-queue evicted sequences as continuations.
+
+        A continuation re-enters *head-of-line* in original admission
+        order (the displaced were admitted before anything still
+        waiting, so FCFS is preserved across the migration) with its
+        full evicted context as the prompt — the prefix is recomputed at
+        prefill cost, honestly charged, rather than the request being
+        dropped.  ``policy="drain"`` additionally holds all admission
+        until the surviving in-flight sequences retire.
+        """
+        import dataclasses
+        old_active = dict(self.active)
+        self.plan = new_plan
+        self.active = {}
+        for rid, old_slot, new_slot in mig.survivors:
+            st = old_active.pop(old_slot)
+            assert st.req.rid == rid
+            st.slot = new_slot
+            self.active[new_slot] = st
+        self.free_slots = [s for s in range(new_plan.max_batch - 1, -1, -1)
+                           if s not in self.active]
+        self.kv_reserved = sum(st.kv_reserved
+                               for st in self.active.values())
+        assert self.kv_reserved <= new_plan.kv_budget_tokens
+        assert len(self.active) <= new_plan.max_batch
+        conts: list[Request] = []
+        for rid, old_slot in mig.evicted:
+            st = old_active.pop(old_slot)
+            assert st.req.rid == rid
+            self.evicted_partials.append(st)
+            conts.append(dataclasses.replace(
+                st.req, arrival=now, prompt_len=st.context_len,
+                max_new_tokens=st.req.max_new_tokens - st.tokens_done,
+                prior_tokens=st.req.prior_tokens + st.tokens_done))
+        assert not old_active, "migration must account for every slot"
+        for cont in reversed(conts):  # earliest-admitted back at the head
+            self.waiting.appendleft(cont)
+        self.readmitted += len(conts)
+        if policy == "drain":
+            self.drain_hold = True
+
     @property
     def drained(self) -> bool:
         return not self.waiting and not self.active
@@ -239,6 +354,86 @@ class VirtualClock:
 
 
 # ---------------------------------------------------------------------------
+# fault timeline + recovery accounting (elastic serving)
+# ---------------------------------------------------------------------------
+
+# rolling window (in engine iterations) over which throughput is measured
+# for the recovery metrics, and the fraction of the pre-fault rate —
+# scaled by the degraded plan's capacity ratio — at which the engine
+# declares itself recovered.
+RECOVERY_WINDOW = 16
+RECOVERY_FRACTION = 0.85
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """A fault injection scheduled on the engine clock (seconds relative
+    to the engine start, like ``Request.arrival``).  Faults compose: each
+    event's dies/links fail *in addition to* whatever already failed."""
+    time: float
+    failed_dies: tuple[int, ...] = ()
+    failed_links: tuple[tuple[int, int], ...] = ()
+
+
+@dataclass
+class RecoveryEvent:
+    """Per-fault recovery record: what the replan+migration did and how
+    the SLO timeline absorbed it.  ``dip_depth``/``time_to_recover``/
+    ``thr_after`` are filled in post-run (they need the samples that come
+    *after* the event)."""
+    time: float
+    failed_dies: tuple[int, ...]
+    failed_links: tuple[tuple[int, int], ...]
+    old_plan_hash: str
+    new_plan_hash: str
+    old_max_batch: int
+    new_max_batch: int
+    old_kv_budget: int
+    new_kv_budget: int
+    n_active: int          # in flight when the fault hit
+    n_survivors: int
+    n_evicted: int
+    moved_bytes: float
+    pause_s: float         # what the executor actually charged
+    recompute_tokens: int  # evicted prefix tokens to re-prefill
+    tokens_lost: int       # generated tokens whose KV was evicted
+    capacity_ratio: float  # degraded/healthy predicted tokens_per_s
+    thr_before: float      # rolling throughput entering the fault
+    thr_after: float = 0.0   # post-recovery steady (peak rolling) rate
+    dip_depth: float = 0.0   # 1 - mean rate during the dip / thr_before
+    time_to_recover: float = 0.0
+    recovered: bool = False
+
+    def to_dict(self) -> dict:
+        import dataclasses
+        return dataclasses.asdict(self)
+
+
+def _window_throughput(samples: Sequence[tuple]) -> float:
+    """tokens/s over (t_end, tokens, duration, kind) iteration samples."""
+    toks = sum(s[1] for s in samples)
+    dt = sum(s[2] for s in samples)
+    return toks / dt if dt > 0 else 0.0
+
+
+def rolling_peak_throughput(samples: Sequence[tuple],
+                            w: int = RECOVERY_WINDOW,
+                            kind: Optional[str] = None) -> float:
+    """Peak ``w``-sample rolling throughput.  With ``kind="decode"`` only
+    decode iterations count — the steady decode rate is what the
+    fault-recovery gate compares against a fresh solve on the degraded
+    wafer (all-sample windows depend on how prefills happened to
+    interleave, which a mid-run migration legitimately perturbs)."""
+    samples = [s for s in samples if kind is None or s[3] == kind]
+    if not samples:
+        return 0.0
+    if len(samples) <= w:
+        return _window_throughput(samples)
+    return max(_window_throughput(samples[j:j + w])
+               for j in range(len(samples) - w + 1))
+
+
+# ---------------------------------------------------------------------------
 # executors
 # ---------------------------------------------------------------------------
 
@@ -257,8 +452,6 @@ class CostModelExecutor:
     """
 
     def __init__(self, plan, cfg, wafer=None, *, prefill_eff: int = 16):
-        from repro.wafer.simulator import (ParallelDegrees, StepCostContext,
-                                           simulate_decode_batch)
         from repro.wafer.topology import Wafer, WaferSpec
         if wafer is None:
             wafer = Wafer(WaferSpec(rows=plan.plan.wafer_rows,
@@ -266,6 +459,17 @@ class CostModelExecutor:
                           frozenset(plan.plan.failed_dies),
                           frozenset(tuple(l)
                                     for l in plan.plan.failed_links))
+        self.cfg = cfg
+        self.prefill_eff = prefill_eff
+        self._next_tok = 0
+        self._calibrate(plan, wafer)
+
+    def _calibrate(self, plan, wafer) -> None:
+        """Fit the affine latency surface for ``plan`` on ``wafer`` (run
+        at construction, and again by ``migrate`` when a fault swaps the
+        plan for one solved on the degraded wafer)."""
+        from repro.wafer.simulator import (ParallelDegrees, StepCostContext,
+                                           simulate_decode_batch)
         self.plan = plan
         deg = ParallelDegrees(*plan.plan.degrees_tuple(),
                               seq_par=plan.plan.seq_par)
@@ -273,7 +477,7 @@ class CostModelExecutor:
         dies = list(plan.plan.alive_dies)
 
         def lat(b, s):
-            ctx = StepCostContext(wafer, cfg, max(b, 1), max(s, 1),
+            ctx = StepCostContext(wafer, self.cfg, max(b, 1), max(s, 1),
                                   plan.plan.engine, dies=dies,
                                   objective="decode")
             return simulate_decode_batch(ctx, [deg])[0].step_time
@@ -281,15 +485,34 @@ class CostModelExecutor:
         l_full = lat(B, S)
         l_half_b = lat(max(B // 2, 1), S)
         l_half_s = lat(B, max(S // 2, 1))
+        # a half anchor can be infeasible for the solved degrees (e.g. the
+        # dp degree exceeds the halved batch) and come back inf — pinning
+        # it to the full-shape latency zeroes that slope instead of
+        # letting a non-finite duration poison the engine clock
+        if not math.isfinite(l_full):
+            l_full = plan.predicted.get("token_latency") or 1e-3
+        if not math.isfinite(l_half_b):
+            l_half_b = l_full
+        if not math.isfinite(l_half_s):
+            l_half_s = l_full
         # solve a + b*n + c*(n*s) through the three anchors
         self.c = (l_full - l_half_s) / max(B * S - B * (S // 2), 1)
         bspan = max(B - B // 2, 1)
         self.b = (l_full - l_half_b
                   - self.c * (B * S - (B // 2) * S)) / bspan
         self.a = l_full - self.b * B - self.c * B * S
-        self.prefill_tok = l_full / max(plan.max_batch, 1) / prefill_eff \
-            + self.c
-        self._next_tok = 0
+        self.prefill_tok = l_full / max(plan.max_batch, 1) \
+            / self.prefill_eff + self.c
+
+    def migrate(self, new_plan, mig, wafer=None) -> float:
+        """Adopt a post-fault plan: refit the latency surface on the
+        degraded wafer and charge the migration as a priced pause — the
+        planner's deterministic estimate of re-shard + lost-shard
+        recompute time (:class:`repro.serve.migrate.KVMigration`)."""
+        if wafer is None:
+            wafer = new_plan.plan.wafer()
+        self._calibrate(new_plan, wafer)
+        return mig.est_pause_s
 
     def decode_latency(self, n_active: int, resident_tokens: int) -> float:
         return max(self.a + self.b * n_active
@@ -328,6 +551,12 @@ class ServeReport:
     mean_occupancy: float
     iterations: int
     trace_hash: str
+    # elastic-serving accounting (zero on fault-free runs)
+    n_rejected: int = 0      # never-fit requests rejected, not crashed on
+    n_evicted: int = 0       # in-flight sequences displaced by migrations
+    n_readmitted: int = 0    # continuations re-queued (== n_evicted)
+    rejected: tuple = ()     # (rid, reason) per rejected request
+    recovery: tuple = ()     # RecoveryEvent.to_dict() per fault
 
     def to_dict(self) -> dict:
         import dataclasses
@@ -348,17 +577,135 @@ class ServeEngine:
 
     ``executor`` provides ``prefill(states) -> duration`` and
     ``decode(states) -> duration`` (return None under a WallClock to let
-    real elapsed time stand).  ``on_iteration`` is an optional hook for
-    logging/tracing.
+    real elapsed time stand), and optionally ``migrate(new_plan, mig,
+    wafer) -> duration`` for fault recovery.  ``on_iteration`` /
+    ``on_recovery`` are optional hooks for logging/tracing.
+
+    Elastic serving: pass ``faults`` (a timeline of :class:`FaultEvent`)
+    plus the model ``cfg`` the plan was compiled for.  When an event
+    fires, the engine re-solves on the survivors, migrates the resident
+    KV cache and — per ``readmission`` — either re-queues evicted
+    sequences live (``"live"``) or additionally holds new admissions
+    until the survivors retire (``"drain"``).  ``wafer`` is the live
+    wafer when the deployment runs a non-default :class:`WaferSpec` (the
+    plan's grid-only record cannot reconstruct hardware constants).
     """
 
-    def __init__(self, plan, executor, *, clock=None,
-                 on_iteration: Optional[Callable] = None):
+    def __init__(self, plan, executor, *, clock=None, cfg=None, wafer=None,
+                 faults: Sequence[FaultEvent] = (),
+                 readmission: str = "live",
+                 plan_cache_dir: Optional[str] = None,
+                 plan_use_cache: bool = True,
+                 on_iteration: Optional[Callable] = None,
+                 on_recovery: Optional[Callable] = None):
+        if readmission not in ("live", "drain"):
+            raise ValueError(f"readmission must be 'live' or 'drain', "
+                             f"got {readmission!r}")
+        if faults and cfg is None:
+            raise ValueError("fault recovery needs the model cfg the plan "
+                             "was compiled for (pass cfg=...)")
         self.plan = plan
         self.executor = executor
         self.clock = clock if clock is not None else VirtualClock()
         self.sched = ContinuousBatchingScheduler(plan)
+        self.cfg = cfg
+        self.wafer = wafer if wafer is not None else plan.plan.wafer()
+        self.faults = tuple(sorted(faults, key=lambda e: e.time))
+        self.readmission = readmission
+        self.plan_cache_dir = plan_cache_dir
+        self.plan_use_cache = plan_use_cache
         self.on_iteration = on_iteration
+        self.on_recovery = on_recovery
+        self.events: list[RecoveryEvent] = []
+        # iteration timeline: (t_end, tokens, duration, kind) with kind in
+        # prefill | decode | pause — the raw material of recovery metrics
+        self.samples: list[tuple[float, int, float, str]] = []
+
+    def _sample(self, t_end: float, tokens: int, dt: float,
+                kind: str) -> None:
+        self.samples.append((t_end, tokens, dt, kind))
+
+    def _recover(self, ev: FaultEvent, now: float) -> float:
+        """Fault hits: replan on survivors, migrate resident KV, swap the
+        contract, re-queue the displaced.  Returns the post-pause time."""
+        from repro.core.plan import replan_serve
+        from repro.serve.migrate import plan_kv_migration
+        old_plan = self.plan
+        self.wafer = self.wafer.with_faults(ev.failed_dies, ev.failed_links)
+        new_plan = replan_serve(old_plan, self.cfg, wafer=self.wafer,
+                                cache_dir=self.plan_cache_dir,
+                                use_cache=self.plan_use_cache)
+        mig = plan_kv_migration(old_plan, new_plan,
+                                list(self.sched.active.values()),
+                                self.cfg, self.wafer)
+        thr_before = _window_throughput(self.samples[-RECOVERY_WINDOW:])
+        mig_fn = getattr(self.executor, "migrate", None)
+        dt = mig_fn(new_plan, mig, self.wafer) if mig_fn is not None \
+            else mig.est_pause_s
+        t_before = now
+        now = self.clock.advance(dt)
+        self._sample(now, 0, now - t_before, "pause")  # part of the dip
+        self.sched.apply_migration(new_plan, mig, now, self.readmission)
+        self.plan = new_plan
+        old_pred = old_plan.predicted.get("tokens_per_s") or 0.0
+        new_pred = new_plan.predicted.get("tokens_per_s") or 0.0
+        rec = RecoveryEvent(
+            time=t_before,
+            failed_dies=tuple(ev.failed_dies),
+            failed_links=tuple(tuple(l) for l in ev.failed_links),
+            old_plan_hash=old_plan.plan_hash,
+            new_plan_hash=new_plan.plan_hash,
+            old_max_batch=old_plan.max_batch,
+            new_max_batch=new_plan.max_batch,
+            old_kv_budget=old_plan.kv_budget_tokens,
+            new_kv_budget=new_plan.kv_budget_tokens,
+            n_active=len(mig.survivors) + len(mig.evicted),
+            n_survivors=len(mig.survivors),
+            n_evicted=len(mig.evicted),
+            moved_bytes=mig.moved_bytes,
+            pause_s=now - t_before,
+            recompute_tokens=mig.recompute_tokens,
+            tokens_lost=mig.tokens_lost,
+            capacity_ratio=new_pred / old_pred if old_pred > 0 else 1.0,
+            thr_before=thr_before,
+        )
+        self.events.append(rec)
+        if self.on_recovery:
+            self.on_recovery(self, rec)
+        return now
+
+    def _finalize_events(self, t_end: float) -> None:
+        """Fill each RecoveryEvent's dip/recovery metrics from the full
+        iteration-sample timeline (needs samples *after* the event)."""
+        w = RECOVERY_WINDOW
+        for ev in self.events:
+            after = [s for s in self.samples if s[0] > ev.time]
+            target = RECOVERY_FRACTION * ev.thr_before \
+                * min(1.0, ev.capacity_ratio)
+            rec_t = None
+            n_win = max(1, len(after) - w + 1)
+            for j in range(n_win):
+                win = after[j:j + w]
+                if win and _window_throughput(win) >= target:
+                    rec_t = win[-1][0]
+                    break
+            if rec_t is not None:
+                ev.recovered = True
+                ev.time_to_recover = rec_t - ev.time
+                tail = [s for s in after if s[0] > rec_t]
+                ev.thr_after = rolling_peak_throughput(tail or after, w,
+                                                       kind="decode")
+            else:
+                rec_t = t_end
+                ev.time_to_recover = t_end - ev.time
+                ev.thr_after = rolling_peak_throughput(after, w,
+                                                       kind="decode")
+            span = rec_t - ev.time
+            if ev.thr_before > 0 and span > 0:
+                dip_rate = sum(s[1] for s in self.samples
+                               if ev.time < s[0] <= rec_t) / span
+                ev.dip_depth = min(max(1.0 - dip_rate / ev.thr_before,
+                                       0.0), 1.0)
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 1_000_000) -> ServeReport:
@@ -370,39 +717,52 @@ class ServeEngine:
         pending = [dataclasses.replace(r, arrival=r.arrival + t0)
                    for r in sorted(requests,
                                    key=lambda r: (r.arrival, r.rid))]
+        fault_q = deque(dataclasses.replace(ev, time=ev.time + t0)
+                        for ev in self.faults)
         i = 0
         for _ in range(max_iterations):
             now = clock.now()
+            while fault_q and fault_q[0].time <= now:
+                now = self._recover(fault_q.popleft(), now)
             while i < len(pending) and pending[i].arrival <= now:
                 sched.submit(pending[i])
                 i += 1
+            sched.reject_never_fit(now)
             if sched.drained and i == len(pending):
                 break
             newly = sched.admit(now)
             if newly:
+                t_before = now
                 dt = self.executor.prefill(newly)
                 now = clock.advance(dt)
                 sched.mark_prefilled(newly, now)
+                self._sample(now, len(newly), now - t_before, "prefill")
             batch = sched.decode_batch()
             if batch:
+                t_before = now
                 dt = self.executor.decode(batch)
                 now = clock.advance(dt)
                 sched.mark_decoded(batch, now)
+                self._sample(now, len(batch), now - t_before, "decode")
             elif not newly:
                 # nothing in flight and head-of-line blocked or queue
-                # empty: jump to the next arrival
+                # empty: jump to the next arrival or scheduled fault
+                horizon = []
                 if i < len(pending):
-                    clock.wait_until(pending[i].arrival)
+                    horizon.append(pending[i].arrival)
+                if fault_q:
+                    horizon.append(fault_q[0].time)
+                if horizon:
+                    clock.wait_until(min(horizon))
                 elif sched.waiting:
-                    head = sched.waiting[0]
+                    # unreachable: never-fit heads were rejected above and
+                    # an idle mesh always has headroom for a fitting head
                     raise RuntimeError(
-                        f"head-of-line request {head.rid} can never fit "
-                        f"the plan (prompt+gen="
-                        f"{sched.kv_cost(head)} tokens vs max_seq="
-                        f"{self.plan.max_seq}, KV budget="
-                        f"{self.plan.kv_budget_tokens})")
+                        f"scheduler deadlock: request "
+                        f"{sched.waiting[0].rid} blocked on an idle mesh")
             if self.on_iteration:
                 self.on_iteration(self)
+        self._finalize_events(clock.now())
         return self.report(clock.now() - t0)
 
     def report(self, makespan: float) -> ServeReport:
@@ -410,12 +770,13 @@ class ServeEngine:
         ttfts = [st.ttft for st in fin]
         tpots = [t for st in fin for t in st.tpots]
         gen = sum(st.tokens_done for st in fin) \
-            + sum(st.tokens_done for st in self.sched.active.values())
+            + sum(st.tokens_done for st in self.sched.active.values()) \
+            + sum(st.tokens_done for st in self.sched.evicted_partials)
         trace = hashlib.sha256(
             str(self.sched.admission_trace).encode()).hexdigest()[:16]
         return ServeReport(
             n_requests=len(fin) + len(self.sched.active)
-            + len(self.sched.waiting),
+            + len(self.sched.waiting) + len(self.sched.rejected),
             n_finished=len(fin),
             generated_tokens=gen,
             makespan=makespan,
@@ -428,6 +789,12 @@ class ServeEngine:
             / max(self.sched.iterations, 1),
             iterations=self.sched.iterations,
             trace_hash=trace,
+            n_rejected=len(self.sched.rejected),
+            n_evicted=len(self.sched.evicted_partials),
+            n_readmitted=self.sched.readmitted,
+            rejected=tuple((req.rid, reason)
+                           for req, reason in self.sched.rejected),
+            recovery=tuple(ev.to_dict() for ev in self.events),
         )
 
 

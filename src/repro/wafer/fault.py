@@ -42,6 +42,15 @@ class FaultReport:
             return "link"
         return "healthy"
 
+    def as_event(self, time: float):
+        """This report as a serve-engine fault-timeline event firing at
+        ``time`` seconds on the engine clock (elastic serving)."""
+        from repro.serve.engine import FaultEvent
+        return FaultEvent(time=time,
+                          failed_dies=tuple(self.failed_dies),
+                          failed_links=tuple(tuple(l)
+                                             for l in self.failed_links))
+
 
 def inject_faults(wafer: Wafer, *, die_rate: float = 0.0,
                   link_rate: float = 0.0, seed: int = 0) -> FaultReport:
@@ -57,6 +66,24 @@ def inject_faults(wafer: Wafer, *, die_rate: float = 0.0,
                 if rng.random() < link_rate:
                     links.append((d, wafer.die(nr, nc)))
     return FaultReport(dies, links)
+
+
+def sample_die_faults(wafer: Wafer, frac: float, *,
+                      seed: int = 0) -> FaultReport:
+    """Kill *exactly* ``ceil(frac * alive)`` dies, seeded.
+
+    :func:`inject_faults` draws per-die Bernoulli failures, so the
+    realized severity wobbles around the rate; the elastic-serving
+    benchmark and its drift gate need the severity axis to be exact
+    ("kill ≥10% of the dies" must mean exactly that, deterministically).
+    """
+    import math
+    alive = wafer.alive_dies()
+    if frac <= 0 or not alive:
+        return FaultReport()
+    k = min(len(alive), max(1, math.ceil(frac * len(alive))))
+    rng = random.Random(seed)
+    return FaultReport(failed_dies=sorted(rng.sample(alive, k)))
 
 
 def random_degraded_wafer(seed: int, *, spec=None,
@@ -161,15 +188,23 @@ def recover_multiwafer(plan, cfg: ModelConfig, wafer_idx: int,
 
 def throughput_vs_fault_rate(wafer: Wafer, cfg: ModelConfig, batch: int,
                              seq: int, *, kind: str = "core",
+                             engine: str = "tcme",
                              rates=(0.0, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3,
                                     0.35, 0.4),
                              seed: int = 0,
                              ctx_cache: Optional[dict] = None) -> list[dict]:
-    """Paper Fig. 20b/20c sweep.  One ``ctx_cache`` spans the whole loop
+    """Paper Fig. 20b/20c sweep.  ``kind`` picks what the rate kills:
+    ``"core"`` (dies), ``"link"``, or ``"mixed"`` (both at once, the
+    worst case §VIII-F classifies).  ``engine`` selects the cost engine
+    the re-solve runs on (threaded to :func:`recover`, which keys its
+    context cache on it).  One ``ctx_cache`` spans the whole loop
     (callers may pass their own to share across kinds/seeds): adjacent
     rates that kill the same die subset — common at low rates, where the
     same seed draws the same failures — reuse one context instead of
     rebuilding invariants per rate."""
+    if kind not in ("core", "link", "mixed"):
+        raise ValueError(f"kind must be 'core', 'link' or 'mixed', "
+                         f"got {kind!r}")
     out = []
     base = None
     if ctx_cache is None:
@@ -177,10 +212,11 @@ def throughput_vs_fault_rate(wafer: Wafer, cfg: ModelConfig, batch: int,
     for rate in rates:
         rep = inject_faults(
             wafer,
-            die_rate=rate if kind == "core" else 0.0,
-            link_rate=rate if kind == "link" else 0.0,
+            die_rate=rate if kind in ("core", "mixed") else 0.0,
+            link_rate=rate if kind in ("link", "mixed") else 0.0,
             seed=seed)
-        res = recover(wafer, rep, cfg, batch, seq, ctx_cache=ctx_cache)
+        res = recover(wafer, rep, cfg, batch, seq, engine=engine,
+                      ctx_cache=ctx_cache)
         if base is None:
             base = res.throughput
         out.append({

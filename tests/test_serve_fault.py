@@ -1,0 +1,385 @@
+"""Elastic serving under faults: exact-severity fault sampling, degraded
+replan (KV-budget cap, plan-cache identity with the offline solve), the
+KV-migration planner (FCFS survivor selection under the new contract),
+mid-run engine recovery invariants under both readmission policies, and
+cost-model vs real-model (jax) executor agreement across a migration."""
+
+import dataclasses
+import math
+import types
+
+import pytest
+
+from repro.configs.paper_models import TABLE_II
+from repro.core.plan import (PLAN_STATS, compile_serve_plan,
+                             replan_serve, reset_plan_stats)
+from repro.serve.engine import (CostModelExecutor, Request, RequestState,
+                                ServeEngine, VirtualClock)
+from repro.serve.migrate import plan_kv_migration
+from repro.wafer.fault import sample_die_faults, throughput_vs_fault_rate
+from repro.wafer.topology import Wafer, WaferSpec
+
+CFG, _ = TABLE_II["gpt3-6.7b"]
+MAX_BATCH, MAX_SEQ = 8, 256
+
+
+@pytest.fixture(autouse=True)
+def _fresh_stats():
+    reset_plan_stats()
+    yield
+    reset_plan_stats()
+
+
+# ---------------------------------------------------------------------------
+# exact-severity fault sampling
+# ---------------------------------------------------------------------------
+
+
+def test_sample_die_faults_exact_count_and_deterministic():
+    w = Wafer(WaferSpec())
+    n = len(w.alive_dies())
+    for frac in (0.01, 0.125, 0.25):
+        rep = sample_die_faults(w, frac, seed=3)
+        assert len(rep.failed_dies) == min(n, max(1, math.ceil(frac * n)))
+        assert set(rep.failed_dies) <= set(w.alive_dies())
+        assert list(rep.failed_dies) == sorted(rep.failed_dies)
+        again = sample_die_faults(w, frac, seed=3)
+        assert again.failed_dies == rep.failed_dies
+    # different seeds draw different subsets (k=8 of 32: collisions are
+    # astronomically unlikely; k=1 can collide, so only check here)
+    assert sample_die_faults(w, 0.25, seed=4).failed_dies \
+        != sample_die_faults(w, 0.25, seed=3).failed_dies
+    assert not sample_die_faults(w, 0.0).failed_dies
+
+
+def test_fault_report_as_event_carries_time():
+    w = Wafer(WaferSpec())
+    ev = sample_die_faults(w, 0.1, seed=0).as_event(2.5)
+    assert ev.time == 2.5 and len(ev.failed_dies) > 0
+    assert ev.failed_links == ()
+
+
+# ---------------------------------------------------------------------------
+# degraded replan
+# ---------------------------------------------------------------------------
+
+
+def test_replan_serve_keeps_contract_and_hits_cache(tmp_path):
+    w = Wafer(WaferSpec())
+    base = compile_serve_plan(w, CFG, MAX_BATCH, MAX_SEQ,
+                              cache_dir=str(tmp_path))
+    dead = sample_die_faults(w, 0.1, seed=0).failed_dies
+    new = replan_serve(base, CFG, wafer=w, failed_dies=dead,
+                       cache_dir=str(tmp_path))
+    assert new.max_seq == base.max_seq
+    assert new.plan_hash != base.plan_hash
+    assert set(new.plan.alive_dies).isdisjoint(dead)
+    # same degraded solve from cold cache → byte-identical plan, no solver
+    hits = PLAN_STATS["cache_hits"]
+    offline = compile_serve_plan(w.with_faults(dead, ()), CFG, MAX_BATCH,
+                                 MAX_SEQ, cache_dir=str(tmp_path))
+    assert PLAN_STATS["cache_hits"] == hits + 1
+    assert offline.plan_hash == new.plan_hash
+
+
+def test_kv_budget_caps_instead_of_oom(tmp_path):
+    """When the degraded wafer can't hold the full KV budget, the plan
+    caps ``kv_budget_tokens`` to what fits rather than reporting OOM.
+    Needs a cache-dominated shape (long max_seq): when weights dominate,
+    shedding cache can't fit the plan and replan shrinks the batch
+    instead (covered by the mid-run tests)."""
+    mb, ms = 8, 8192
+    w0 = Wafer(WaferSpec())
+    probe = compile_serve_plan(w0, CFG, mb, ms, use_cache=False)
+    spec = WaferSpec(hbm_cap=probe.predicted["mem_per_die"] * 1.05)
+    w = Wafer(spec)
+    base = compile_serve_plan(w, CFG, mb, ms, cache_dir=str(tmp_path))
+    assert not base.predicted["oom"]
+    dead = sample_die_faults(w, 0.25, seed=0).failed_dies
+    new = replan_serve(base, CFG, wafer=w, failed_dies=dead,
+                       cache_dir=str(tmp_path))
+    assert not new.predicted["oom"]
+    assert new.kv_budget_tokens < base.kv_budget_tokens
+    assert new.predicted["kv_budget_capped"]
+    assert new.kv_budget_tokens >= new.max_seq  # one request still fits
+
+
+# ---------------------------------------------------------------------------
+# KV-migration planner (pure selection logic on a stub contract)
+# ---------------------------------------------------------------------------
+
+
+def _state(rid, slot, admitted, kv, tokens_done=2, prompt=10):
+    return RequestState(
+        req=Request(rid=rid, arrival=0.0, prompt_len=prompt,
+                    max_new_tokens=tokens_done + 8),
+        slot=slot, kv_reserved=kv, admitted_at=admitted,
+        tokens_done=tokens_done)
+
+
+def _stub_plan(real_plan, *, max_batch, kv_budget, max_seq):
+    return types.SimpleNamespace(
+        max_batch=max_batch, kv_budget_tokens=kv_budget, max_seq=max_seq,
+        plan=real_plan.plan, predicted=dict(real_plan.predicted))
+
+
+def test_kv_migration_fcfs_under_shrunk_budget(tmp_path):
+    w = Wafer(WaferSpec())
+    base = compile_serve_plan(w, CFG, MAX_BATCH, MAX_SEQ,
+                              cache_dir=str(tmp_path))
+    # four in flight; new contract only holds the two earliest-admitted
+    states = [_state(7, 3, admitted=0.3, kv=100),
+              _state(5, 1, admitted=0.1, kv=100),
+              _state(6, 2, admitted=0.2, kv=100),
+              _state(8, 0, admitted=0.4, kv=100)]
+    new = _stub_plan(base, max_batch=8, kv_budget=250, max_seq=MAX_SEQ)
+    mig = plan_kv_migration(base, new, states, CFG, w)
+    assert [rid for rid, _, _ in mig.survivors] == [5, 6]  # FCFS
+    assert [s for _, _, s in mig.survivors] == [0, 1]  # dense new slots
+    assert [(5, 1), (6, 2)] == [(r, s) for r, s, _ in mig.survivors]
+    assert sorted(rid for rid, _ in mig.evicted) == [7, 8]
+    assert mig.kv_tokens_kept == 200 <= 250
+    assert mig.tokens_lost == 2 * 2  # tokens_done of each evicted
+    assert mig.recompute_tokens == sum(10 + 2 for _ in range(2))
+    assert mig.est_pause_s > 0
+
+
+def test_kv_migration_respects_batch_and_seq_limits(tmp_path):
+    w = Wafer(WaferSpec())
+    base = compile_serve_plan(w, CFG, MAX_BATCH, MAX_SEQ,
+                              cache_dir=str(tmp_path))
+    states = [_state(i, i, admitted=0.1 * i, kv=50) for i in range(4)]
+    # batch cap binds before the budget does
+    mig = plan_kv_migration(
+        base, _stub_plan(base, max_batch=2, kv_budget=10_000,
+                         max_seq=MAX_SEQ), states, CFG, w)
+    assert len(mig.survivors) == 2 and len(mig.evicted) == 2
+    # a sequence longer than the new max_seq can never survive
+    states[0] = _state(0, 0, admitted=0.0, kv=MAX_SEQ + 1)
+    mig = plan_kv_migration(
+        base, _stub_plan(base, max_batch=8, kv_budget=10_000,
+                         max_seq=MAX_SEQ), states, CFG, w)
+    assert 0 in [rid for rid, _ in mig.evicted]
+
+
+def test_kv_migration_prices_degraded_fabric(tmp_path):
+    w = Wafer(WaferSpec())
+    base = compile_serve_plan(w, CFG, MAX_BATCH, MAX_SEQ,
+                              cache_dir=str(tmp_path))
+    dead = sample_die_faults(w, 0.2, seed=0).failed_dies
+    wf = w.with_faults(dead, ())
+    new = replan_serve(base, CFG, wafer=w, failed_dies=dead,
+                       cache_dir=str(tmp_path))
+    states = [_state(i, i, admitted=0.1 * i, kv=64, tokens_done=4)
+              for i in range(4)]
+    mig = plan_kv_migration(base, new, states, CFG, wf)
+    assert mig.moved_bytes == pytest.approx(
+        sum(CFG.cache_bytes_per_seq(st.context_len) for st in states))
+    # dies died under the old plan → part of the resident cache is lost
+    # and must be recomputed; the rest reshards over surviving links
+    assert 0 < mig.lost_bytes < mig.moved_bytes
+    assert mig.reshard_s > 0 and mig.recompute_s > 0
+    assert mig.avg_hops >= 1
+    assert mig.est_pause_s >= mig.reshard_s + mig.recompute_s
+
+
+# ---------------------------------------------------------------------------
+# mid-run recovery: engine invariants under both policies
+# ---------------------------------------------------------------------------
+
+
+def _pressured_setup(tmp_path):
+    """A wafer whose HBM just fits the pristine plan, so killing 25% of
+    the dies genuinely shrinks the serving contract."""
+    probe = compile_serve_plan(Wafer(WaferSpec()), CFG, MAX_BATCH, MAX_SEQ,
+                               use_cache=False)
+    w = Wafer(WaferSpec(hbm_cap=probe.predicted["mem_per_die"] * 1.05))
+    plan = compile_serve_plan(w, CFG, MAX_BATCH, MAX_SEQ,
+                              cache_dir=str(tmp_path))
+    assert not plan.predicted["oom"]
+    return w, plan
+
+
+def _reqs(n, prompt=200, gen=56):
+    return [Request(rid=i, arrival=0.0, prompt_len=prompt,
+                    max_new_tokens=gen) for i in range(n)]
+
+
+@pytest.mark.parametrize("policy", ["live", "drain"])
+def test_mid_run_replan_invariants(tmp_path, policy):
+    w, plan = _pressured_setup(tmp_path)
+    fault = sample_die_faults(w, 0.25, seed=1)
+    t_fault = plan.predicted["token_latency"] * 20  # mid-decode
+    seen = []
+
+    def probe(engine):
+        s = engine.sched
+        seen.append(len(s.active))
+        assert len(s.active) <= s.plan.max_batch
+        assert s.kv_reserved <= s.plan.kv_budget_tokens
+
+    engine = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                         clock=VirtualClock(), cfg=CFG, wafer=w,
+                         faults=[fault.as_event(t_fault)],
+                         readmission=policy,
+                         plan_cache_dir=str(tmp_path),
+                         on_iteration=probe)
+    rep = engine.run(_reqs(24))
+    (ev,) = engine.events
+    assert ev.new_plan_hash != ev.old_plan_hash
+    assert (ev.new_kv_budget < ev.old_kv_budget
+            or ev.new_max_batch < ev.old_max_batch)
+    assert ev.n_survivors + ev.n_evicted == ev.n_active
+    assert rep.n_evicted == ev.n_evicted == rep.n_readmitted
+    # nothing is dropped: every request finishes, continuations included
+    assert rep.n_finished == 24
+    for st in engine.sched.finished:
+        # a continuation carries its pre-eviction progress in
+        # prior_tokens; every request ends with its full 56 tokens
+        assert st.tokens_done + st.req.prior_tokens == 56
+    for st in engine.sched.evicted_partials:
+        assert st.tokens_done < st.req.max_new_tokens
+    assert max(seen) <= plan.max_batch
+
+
+def test_engine_replan_identical_to_offline_solve(tmp_path):
+    """The plan the live engine adopts must be the plan an offline
+    ``compile_serve_plan`` on the same degraded wafer produces (shared
+    fault-keyed cache ⇒ second solve is a cache hit)."""
+    w, plan = _pressured_setup(tmp_path)
+    fault = sample_die_faults(w, 0.25, seed=1)
+    engine = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                         clock=VirtualClock(), cfg=CFG, wafer=w,
+                         faults=[fault.as_event(
+                             plan.predicted["token_latency"] * 20)],
+                         plan_cache_dir=str(tmp_path))
+    engine.run(_reqs(16))
+    (ev,) = engine.events
+    hits = PLAN_STATS["cache_hits"]
+    # compile at the contract the replan converged on (it may have shrunk
+    # max_batch to fit the degraded wafer) — must be a byte-identical
+    # cache hit, not a fresh solve
+    offline = compile_serve_plan(
+        w.with_faults(fault.failed_dies, ()), CFG, ev.new_max_batch,
+        MAX_SEQ, cache_dir=str(tmp_path))
+    assert PLAN_STATS["cache_hits"] == hits + 1
+    assert offline.plan_hash == ev.new_plan_hash
+
+
+def test_recovery_metrics_deterministic(tmp_path):
+    w, plan = _pressured_setup(tmp_path)
+    fault = sample_die_faults(w, 0.25, seed=1)
+
+    def one():
+        eng = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                          clock=VirtualClock(), cfg=CFG, wafer=w,
+                          faults=[fault.as_event(
+                              plan.predicted["token_latency"] * 20)],
+                          plan_cache_dir=str(tmp_path))
+        rep = eng.run(_reqs(24))
+        return rep.trace_hash, eng.events[0].to_dict()
+
+    (h1, e1), (h2, e2) = one(), one()
+    assert h1 == h2 and e1 == e2
+    assert e1["recovered"] and e1["time_to_recover"] > 0
+    assert 0 < e1["dip_depth"] <= 1
+    assert e1["pause_s"] > 0
+
+
+def test_drain_holds_admission_until_survivors_retire(tmp_path):
+    w, plan = _pressured_setup(tmp_path)
+    fault = sample_die_faults(w, 0.25, seed=1)
+    t_fault = plan.predicted["token_latency"] * 20
+    admits_after_fault = []
+
+    def probe(engine):
+        if engine.sched.drain_hold:
+            admits_after_fault.append(len(engine.sched.active))
+
+    engine = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                         clock=VirtualClock(), cfg=CFG, wafer=w,
+                         faults=[fault.as_event(t_fault)],
+                         readmission="drain", plan_cache_dir=str(tmp_path),
+                         on_iteration=probe)
+    rep = engine.run(_reqs(24))
+    assert rep.n_finished == 24  # hold releases, nothing starves
+    if admits_after_fault:  # occupancy only shrinks while draining
+        assert all(a <= b for a, b in zip(admits_after_fault[1:],
+                                          admits_after_fault))
+
+
+# ---------------------------------------------------------------------------
+# fig20 sweep plumbing: mixed kind + engine kwarg
+# ---------------------------------------------------------------------------
+
+
+def test_throughput_vs_fault_rate_mixed_kind():
+    w = Wafer(WaferSpec())
+    rows = throughput_vs_fault_rate(w, CFG, 64, 2048, kind="mixed",
+                                    rates=(0.0, 0.2), engine="tcme")
+    assert len(rows) == 2
+    assert rows[0]["throughput"] >= rows[1]["throughput"] > 0
+    assert rows[1]["alive"] < rows[0]["alive"]  # dies actually died
+    assert rows[0]["normalized"] == 1.0 >= rows[1]["normalized"] > 0
+    with pytest.raises(ValueError):
+        throughput_vs_fault_rate(w, CFG, 64, 2048, kind="bogus",
+                                 rates=(0.1,))
+
+
+# ---------------------------------------------------------------------------
+# real-model executor: migration agreement with the cost model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_jax_and_cost_model_agree_on_survivors(tmp_path):
+    """Same plan, same fault, same logical fault point (all requests in
+    flight): the real-model executor must adopt the same degraded plan
+    and keep the same survivors the cost model does, and every surviving
+    sequence must finish on the grafted cache."""
+    from repro.configs import get_reduced
+    from repro.launch.serve import JaxServeExecutor
+    cfg = get_reduced("deepseek-7b")
+    w = Wafer(WaferSpec())
+    plan = compile_serve_plan(w, cfg, 4, 32, cache_dir=str(tmp_path))
+    fault = sample_die_faults(w, 0.1, seed=2)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=6, max_new_tokens=12)
+            for i in range(4)]
+
+    class FixedDuration:
+        """Real-model compute on a virtual clock: the jax executor keeps
+        wall time (returns None), so stand in fixed step durations to
+        align the fault at a deterministic logical point."""
+
+        def __init__(self, inner):
+            self.inner = inner
+
+        def prefill(self, states):
+            self.inner.prefill(states)
+            return 1.0
+
+        def decode(self, states):
+            self.inner.decode(states)
+            return 1.0
+
+        def migrate(self, new_plan, mig, wafer=None):
+            self.inner.migrate(new_plan, mig, wafer)
+            return 1.0
+
+    def run_one(executor, t_fault):
+        eng = ServeEngine(plan, executor, clock=VirtualClock(), cfg=cfg,
+                          wafer=w, faults=[fault.as_event(t_fault)],
+                          plan_cache_dir=str(tmp_path))
+        rep = eng.run([dataclasses.replace(r) for r in reqs])
+        return rep, eng.events[0]
+
+    # t_fault≈0+: fires on the iteration after the first admission wave,
+    # when all four are in flight — the same logical point in both runs
+    rep_j, ev_j = run_one(FixedDuration(JaxServeExecutor(plan, cfg)), 1e-9)
+    rep_c, ev_c = run_one(CostModelExecutor(plan, cfg, w), 1e-9)
+    assert ev_j.new_plan_hash == ev_c.new_plan_hash
+    assert (ev_j.n_active, ev_j.n_survivors, ev_j.n_evicted) \
+        == (ev_c.n_active, ev_c.n_survivors, ev_c.n_evicted)
+    assert ev_j.n_survivors == 4 and ev_j.n_evicted == 0
+    assert rep_j.n_finished == rep_c.n_finished == 4
+    assert rep_j.generated_tokens == rep_c.generated_tokens == 48
