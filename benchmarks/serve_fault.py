@@ -144,10 +144,12 @@ def run(fast: bool = False, rebaseline: bool = False):
 
     cfg = get_config(MODEL)
     wafer = Wafer(WaferSpec(hbm_cap=HBM_CAP))
-    # throwaway plan cache per run: the base solve and every replan run
-    # fresh (the gate must catch solver drift), while the live engine's
-    # replan and the offline control still share one cache — their
-    # identical fault key is exactly the plan-identity check
+    # throwaway plan cache per run, purely for drift isolation: the base
+    # solve and every replan run fresh (the gate must catch solver drift),
+    # while the live engine's replan and the offline control still share
+    # one cache — their identical fault key is exactly the plan-identity
+    # check.  (The reduced-HBM spec no longer *needs* a dedicated dir:
+    # plan_cache_key folds the full WaferSpec into the identity.)
     cache_dir = tempfile.mkdtemp(prefix="serve_fault_plans_")
     base_plan = compile_serve_plan(wafer, cfg, MAX_BATCH, MAX_SEQ,
                                    cache_dir=cache_dir, use_cache=False)

@@ -35,7 +35,10 @@ from typing import Optional, Sequence
 
 # v2: GA legality fix (subset totals) changes solver output — the bump
 # changes every cache key so pre-fix on-disk plans miss and re-solve
-PLAN_VERSION = 2
+# v3: plan_cache_key now folds the full WaferSpec into the identity (it
+# keyed only on the grid shape before, so non-default-spec deployments
+# could alias default-spec entries) — the bump retires every pre-spec key
+PLAN_VERSION = 3
 
 # observable pipeline counters (reset via reset_plan_stats; the launch
 # drivers print them so "second run hit the cache" is checkable from logs)
@@ -223,14 +226,18 @@ def plan_cache_key(arch: str, batch: int, seq: int, wafer,
                    dies: Optional[Sequence[int]] = None, *,
                    engine: str = "tcme", space: str = "temp",
                    knobs: tuple = ()) -> str:
-    """Cache identity: (arch, shape, wafer incl. faults, alive-die subset,
-    executable knobs).
+    """Cache identity: (arch, shape, wafer spec incl. hardware constants,
+    faults, alive-die subset, executable knobs).
 
     Any die death or link failure changes the key, so a degraded wafer can
-    never replay a stale plan — the miss forces a re-solve.  ``knobs`` is
-    the tuple of launch-side settings compile_plan bakes into the plan
-    (stream/bidirectional/codec/remat): two launches requesting different
-    knobs must not alias one cache entry.
+    never replay a stale plan — the miss forces a re-solve.  The *full*
+    :class:`WaferSpec` is part of the identity (not just the grid shape):
+    wafers with different HBM caps / link bandwidths / energy constants
+    solve to different plans and must not alias one cache entry, so
+    non-default-spec deployments share the default cache dir safely.
+    ``knobs`` is the tuple of launch-side settings compile_plan bakes into
+    the plan (stream/bidirectional/codec/remat): two launches requesting
+    different knobs must not alias one cache entry.
     """
     alive = list(dies) if dies is not None else wafer.alive_dies()
     ident = {
@@ -238,8 +245,7 @@ def plan_cache_key(arch: str, batch: int, seq: int, wafer,
         "arch": arch,
         "batch": batch,
         "seq": seq,
-        "rows": wafer.spec.rows,
-        "cols": wafer.spec.cols,
+        "spec": dataclasses.asdict(wafer.spec),
         "failed_dies": sorted(wafer.failed_dies),
         "failed_links": sorted(list(l) for l in wafer.failed_links),
         "dies": sorted(alive),
@@ -261,13 +267,20 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
                  space: str = "temp", dies: Optional[Sequence[int]] = None,
                  stream: str = "auto", bidirectional: bool = True,
                  stream_dtype: str = "native", remat: bool = True,
-                 seed: int = 0, cache_dir: Optional[str] = None,
+                 seed: int = 0, tierb: Optional[str] = None,
+                 cache_dir: Optional[str] = None,
                  use_cache: bool = True) -> WaferPlan:
     """solve → map → plan, with an on-disk cache around the whole pipeline.
 
     ``cache_dir=None`` with ``use_cache=True`` uses :func:`default_cache_dir`;
     pass ``use_cache=False`` to force a fresh solve (the plan is still
     written back so the next launch hits).
+
+    ``tierb`` selects the cost-engine Tier-B backend for the solve
+    (``"numpy"``/``"jax"``, default from ``REPRO_TIERB``).  It is *not*
+    part of the cache key: both backends produce bitwise-identical
+    solutions (the jitted tier is pinned to the numpy anchor), so a plan
+    compiled under either backend is the same plan.
     """
     from repro.wafer.solver import dlws_solve
 
@@ -290,7 +303,7 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
     # --- solve (DLWS over the batched cost engine) ------------------------
     PLAN_STATS["solver_calls"] += 1
     sol = dlws_solve(wafer, cfg, batch, seq, engine=engine, space=space,
-                     seed=seed, dies=dies)
+                     seed=seed, dies=dies, tierb=tierb)
     plan = plan_from_solution(
         wafer, sol, arch=arch, batch=batch, seq=seq, engine=engine,
         space=space, dies=dies, stream=stream, bidirectional=bidirectional,
@@ -496,11 +509,14 @@ def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
                        dies: Optional[Sequence[int]] = None,
                        stream_dtype: str = "native",
                        prefill_chunk: int = 4, seed: int = 0,
+                       tierb: Optional[str] = None,
                        cache_dir: Optional[str] = None,
                        use_cache: bool = True) -> ServePlan:
     """solve(objective="decode") → map → ServePlan, with the same on-disk
     cache discipline as :func:`compile_plan` (any die/link death misses
-    and re-solves; ``splan_*.json`` entries never alias train plans)."""
+    and re-solves; ``splan_*.json`` entries never alias train plans).
+    ``tierb`` selects the Tier-B backend exactly as in
+    :func:`compile_plan` — backend-invariant, so never part of the key."""
     from repro.wafer.simulator import StepCostContext, _decode_kv_divisors
     from repro.wafer.simulator import decode_memory_components
     from repro.wafer.solver import dlws_solve
@@ -523,14 +539,16 @@ def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
 
     PLAN_STATS["solver_calls"] += 1
     sol = dlws_solve(wafer, cfg, max_batch, max_seq, engine=engine,
-                     space=space, seed=seed, dies=dies, objective="decode")
+                     space=space, seed=seed, dies=dies, tierb=tierb,
+                     objective="decode")
     inner = plan_from_solution(
         wafer, sol, arch=arch, batch=max_batch, seq=max_seq, engine=engine,
         space=space, dies=dies, stream="auto", bidirectional=True,
         stream_dtype=stream_dtype, remat=False)
     deg = sol.config
-    ctx = StepCostContext(wafer, cfg, max_batch, max_seq, engine,
-                          dies=dies, objective="decode")
+    ctx = StepCostContext.resident(wafer, cfg, max_batch, max_seq, engine,
+                                   dies=dies, tierb=tierb,
+                                   objective="decode")
     _, cache_bytes, _ = decode_memory_components(ctx, deg)
     kv_div, _ = _decode_kv_divisors(cfg, deg.dp, deg.tp, deg.sp, deg.tatp)
     kv_layout = (("dp", deg.dp), ("sp", deg.sp),
@@ -585,6 +603,7 @@ def replan_serve(plan: ServePlan, cfg, wafer=None, *,
                  failed_dies: Sequence[int] = (),
                  failed_links: Sequence[tuple[int, int]] = (),
                  min_batch: int = 1, seed: int = 0,
+                 tierb: Optional[str] = None,
                  cache_dir: Optional[str] = None,
                  use_cache: bool = True) -> ServePlan:
     """Re-solve a serving plan on a degraded wafer (§VIII-F, live).
@@ -609,9 +628,13 @@ def replan_serve(plan: ServePlan, cfg, wafer=None, *,
 
     ``wafer``, when given, is the live degraded wafer and takes
     precedence over the plan's grid-only record — pass it whenever the
-    deployment runs a non-default :class:`WaferSpec`.  ``failed_dies`` /
-    ``failed_links`` apply *additional* faults on top (cumulative
-    failures compose).
+    deployment runs a non-default :class:`WaferSpec` (the plan cache is
+    spec-keyed, so non-default specs share the default cache dir; the
+    plan record itself still only carries the grid shape).
+    ``failed_dies`` / ``failed_links`` apply *additional* faults on top
+    (cumulative failures compose).  ``tierb`` selects the Tier-B backend
+    for the re-solve (backend-invariant — the replanned contract is
+    byte-identical either way).
     """
     degraded = wafer if wafer is not None else plan.plan.wafer()
     if failed_dies or failed_links:
@@ -624,7 +647,7 @@ def replan_serve(plan: ServePlan, cfg, wafer=None, *,
             degraded, cfg, max_batch, plan.max_seq, arch=plan.arch,
             engine=plan.plan.engine, space=plan.plan.space,
             stream_dtype=plan.stream_dtype, prefill_chunk=plan.prefill_chunk,
-            seed=seed, cache_dir=cache_dir, use_cache=use_cache)
+            seed=seed, tierb=tierb, cache_dir=cache_dir, use_cache=use_cache)
         if not new.predicted.get("oom") or max_batch <= min_batch:
             return new
         max_batch = max(min_batch, max_batch // 2)
@@ -781,10 +804,13 @@ def compile_multiwafer_plan(
         inter_wafer_bw: Optional[float] = None,
         pp_multipliers=(1,), n_micro_candidates=(4, 8, 16, 32),
         families=("gpipe", "1f1b"),
+        tierb: Optional[str] = None,
         cache_dir: Optional[str] = None,
         use_cache: bool = True) -> MultiWaferPlan:
     """solve (upper + per-stage DLWS) → map → plan across ``wafers``, with
-    an on-disk cache keyed on the tuple of per-wafer fault states."""
+    an on-disk cache keyed on the tuple of per-wafer fault states.
+    ``tierb`` selects the Tier-B backend for every stage solve
+    (backend-invariant, never part of the key)."""
     from repro.wafer.solver import INTER_WAFER_BW, dlws_solve_multiwafer
     arch = arch or cfg.name
     bw = inter_wafer_bw if inter_wafer_bw is not None else INTER_WAFER_BW
@@ -810,7 +836,8 @@ def compile_multiwafer_plan(
         wafers, cfg, batch, seq, engine=engine, space=space, seed=seed,
         dies_per_wafer=dies_per_wafer, inter_wafer_bw=bw,
         pp_multipliers=pp_multipliers,
-        n_micro_candidates=n_micro_candidates, families=families)
+        n_micro_candidates=n_micro_candidates, families=families,
+        tierb=tierb)
     plan = _plan_from_multiwafer_solution(
         wafers, sol, cfg=cfg, arch=arch, batch=batch, seq=seq,
         engine=engine, space=space, stream=stream,

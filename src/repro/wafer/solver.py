@@ -258,12 +258,25 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                dies: Optional[list[int]] = None,
                evaluator: str = "batch",
                stage1: Optional[str] = None,
+               tierb: Optional[str] = None,
                objective: str = "train") -> SolveResult:
     """Dual-level solve.  ``evaluator="reference"`` routes every score
     through the seed scalar path (same trajectory — results are bitwise
     identical — used by benchmarks to measure the engine speedup);
     ``stage1="jax"`` runs the Tier-B stage-1 arithmetic through the jitted
-    twin (million-candidate sweeps).
+    twin (million-candidate sweeps); ``tierb="jax"`` (or ``REPRO_TIERB=jax``)
+    runs search-time evaluations through the fully-jitted Tier B — final
+    evaluations stay on the anchored numpy path, and the two tiers share
+    the candidate-sized arithmetic verbatim, so the search trajectory,
+    selected config and recorded throughput are backend-invariant.
+
+    The scoring context is *resident*: on a cache-enabled wafer the
+    :class:`StepCostContext` (and its per-candidate result memo) is shared
+    across calls with the same cost-surface identity, so a long-lived
+    solver re-solving a workload pays only the search logic — the engine
+    serves repeat evaluations from the memo.  ``evaluated`` on the returned
+    :class:`SolveResult` counts the cost-model evaluations *this call*
+    actually performed (0 for a fully-memoized re-solve).
 
     ``objective="decode"`` scores candidates as one continuous-batching
     decode iteration instead of a training step (``batch`` = max in-flight
@@ -274,9 +287,11 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
     t0 = time.time()
-    ctx = StepCostContext(wafer, cfg, batch, seq, engine,
-                          fsdp=spec["fsdp"], dies=dies, evaluator=evaluator,
-                          stage1=stage1, objective=objective)
+    ctx = StepCostContext.resident(wafer, cfg, batch, seq, engine,
+                                   fsdp=spec["fsdp"], dies=dies,
+                                   evaluator=evaluator, stage1=stage1,
+                                   tierb=tierb, objective=objective)
+    ev0 = ctx.evaluated
     subs = partition_graph(cfg)  # level 0 (scopes the DP passes)
     start = ParallelDegrees(dp=ctx.n_dies, seq_par=spec["seq_par"])
     if objective == "decode" and ctx.n_dies > 1:
@@ -293,7 +308,8 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
         cur = dp_refine(ctx, cur)
     best = ga_refine(ctx, [cur] + seeds, rng=random.Random(seed))
     res = ctx.evaluate(best, final=True)
-    return SolveResult(res, best, engine, time.time() - t0, ctx.evaluated,
+    return SolveResult(res, best, engine, time.time() - t0,
+                       ctx.evaluated - ev0,
                        "dlws-decode" if objective == "decode" else "dlws")
 
 
@@ -489,6 +505,7 @@ def dlws_solve_multiwafer(
         n_micro_candidates: Sequence[int] = (4, 8, 16, 32),
         families: Sequence[str] = ("gpipe", "1f1b"),
         max_rebalance: int = 8,
+        tierb: Optional[str] = None,
         stage_cache: Optional[dict] = None) -> MultiWaferSolveResult:
     """Upper DLWS level: solve pipeline parallelism across ``wafers``.
 
@@ -513,6 +530,10 @@ def dlws_solve_multiwafer(
     cost engine matters here.  Stage boundaries crossing wafers pay the
     inter-wafer bandwidth; boundaries internal to a wafer pay the D2D cut
     between the two die subsets (:func:`stage_boundary_p2p`).
+
+    ``tierb`` selects the Tier-B backend for every per-stage solve (same
+    contract as :func:`dlws_solve` — stage solutions are backend-invariant,
+    so a ``stage_cache`` may be shared across backends).
 
     Memory feasibility is re-judged at the pipeline level: stage ``s``
     holds ``inflight_s`` of ``n_micro`` microbatches' activations
@@ -542,9 +563,11 @@ def dlws_solve_multiwafer(
         if got is None:
             scfg = stage_config(cfg, n_layers)
             sol = dlws_solve(wafers[widx], scfg, batch, seq, engine=engine,
-                             space=space, seed=seed, dies=list(dies))
-            ctx = StepCostContext(wafers[widx], scfg, batch, seq, engine,
-                                  fsdp=spec["fsdp"], dies=list(dies))
+                             space=space, seed=seed, dies=list(dies),
+                             tierb=tierb)
+            ctx = StepCostContext.resident(wafers[widx], scfg, batch, seq,
+                                           engine, fsdp=spec["fsdp"],
+                                           dies=list(dies), tierb=tierb)
             fixed, act_full, _ = memory_components(ctx, sol.config)
             got = (sol, fixed, act_full)
             solve_cache[key] = got

@@ -78,6 +78,12 @@ class Wafer:
     _batch_cache: dict = field(default_factory=dict, repr=False,
                                compare=False)
     _tcme_cache: dict = field(default_factory=dict, repr=False, compare=False)
+    # resident solver contexts: StepCostContext instances keyed on the full
+    # cost-surface identity (workload + knobs + die subset), so repeated
+    # solves of one workload on a long-lived wafer reuse the per-candidate
+    # result memo instead of re-running the engine
+    # (repro.wafer.simulator.StepCostContext.resident)
+    _ctx_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     def uncached(self) -> "Wafer":
         """A copy with memoization disabled (fresh, empty caches)."""

@@ -97,6 +97,26 @@ def test_cache_key_tracks_alive_die_subset():
     assert plan_cache_key("b", BATCH, SEQ, w) != full
 
 
+def test_cache_key_tracks_wafer_spec():
+    """Every WaferSpec hardware constant is part of the plan identity —
+    two wafers with identical fault state but different silicon must
+    never share a cached plan (the PR-6 serve_fault workaround)."""
+    import dataclasses
+
+    base = plan_cache_key("a", BATCH, SEQ, Wafer(WaferSpec()))
+    small_hbm = WaferSpec(hbm_cap=WaferSpec().hbm_cap / 2)
+    assert plan_cache_key("a", BATCH, SEQ, Wafer(small_hbm)) != base
+    slow_d2d = WaferSpec(link_bw=WaferSpec().link_bw / 2)
+    assert plan_cache_key("a", BATCH, SEQ, Wafer(slow_d2d)) != base
+    # every scalar field participates, not just the hand-picked ones
+    for f in dataclasses.fields(WaferSpec):
+        v = getattr(WaferSpec(), f.name)
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            continue
+        tweaked = dataclasses.replace(WaferSpec(), **{f.name: v * 2 + 1})
+        assert plan_cache_key("a", BATCH, SEQ, Wafer(tweaked)) != base, f.name
+
+
 def test_degraded_wafer_invalidates_cache_and_replans(tmp_path):
     w = Wafer(WaferSpec())
     p1 = _compile(w, tmp_path)

@@ -242,6 +242,119 @@ def test_stage1_jax_matches_numpy():
 
 
 # ---------------------------------------------------------------------------
+# (a3) fully-jitted Tier B (tierb="jax"): bitwise parity with the scalar
+# reference — kernel reductions on device, candidate-sized arithmetic
+# shared verbatim with the numpy tier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("stream", ("auto", "weights", "acts"))
+def test_tierb_jax_bitwise_on_random_degraded_wafers(seed, stream):
+    """Property-style: the fused jitted Tier B is bitwise-identical to the
+    seed scalar reference on randomized degraded wafers (dead dies, dead
+    links, snake die subsets) × every stream policy × both orchestration
+    directions — fields AND breakdowns."""
+    pytest.importorskip("jax")
+    from repro.wafer.fault import random_degraded_wafer
+    from repro.wafer.simulator import _JAX_MIN_BATCH
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    dw, dies = random_degraded_wafer(seed)
+    spec = STRATEGY_SPACES["temp"]
+    bidir = seed % 2 == 1  # opposite phase to the numpy-tier test above
+    cands = _spread(candidate_degrees(len(dies), spec["allow"],
+                                      spec["seq_par"]))
+    # the jitted path only engages from _JAX_MIN_BATCH candidates up —
+    # below that this test would silently re-test the numpy tier
+    assert len(cands) >= _JAX_MIN_BATCH, (seed, len(cands))
+    ctx = StepCostContext(dw, cfg, 32, 2048, "tcme", stream=stream,
+                          tatp_bidirectional=bidir, dies=dies, tierb="jax")
+    fast = simulate_batch(ctx, cands, run_tcme_optimizer=False)
+    for deg, res in zip(cands, fast):
+        ref = simulate_step_reference(dw.uncached(), cfg, 32, 2048, deg,
+                                      "tcme", stream=stream,
+                                      tatp_bidirectional=bidir, dies=dies,
+                                      run_tcme_optimizer=False)
+        _assert_bitwise_equal(res, ref, (seed, stream, deg.as_tuple()))
+
+
+@pytest.mark.parametrize("seed", (1, 5))
+def test_dlws_trajectory_identity_under_tierb_jax(seed):
+    """Whole-solve equivalence under ``tierb="jax"``: the jitted engine
+    walks the same search trajectory as the scalar reference evaluator to
+    a bitwise-equal solution (same config, throughput, memory, and the
+    same number of performed evaluations)."""
+    pytest.importorskip("jax")
+    from repro.wafer.fault import random_degraded_wafer
+    from repro.wafer.solver import dlws_solve
+    cfg, _ = TABLE_II["llama2-7b"]
+    dw, dies = random_degraded_wafer(seed)
+    fast = dlws_solve(dw, cfg, 16, 2048, space="temp", dies=dies,
+                      tierb="jax")
+    ref = dlws_solve(dw.uncached(), cfg, 16, 2048, space="temp",
+                     dies=dies, evaluator="reference")
+    assert fast.config == ref.config
+    assert fast.best.throughput == ref.best.throughput
+    assert fast.best.mem_per_die == ref.best.mem_per_die
+    assert fast.evaluated == ref.evaluated  # same trajectory, same work
+
+
+def test_decode_objective_parity_tierb_jax():
+    """Decode twin parity: the jitted decode batch is bitwise-identical to
+    the numpy tier over a whole candidate space, and a full decode solve
+    selects the identical serving config under ``tierb="jax"``."""
+    pytest.importorskip("jax")
+    from repro.wafer.simulator import _JAX_MIN_BATCH, simulate_decode_batch
+    from repro.wafer.solver import dlws_solve
+    cfg, _ = TABLE_II["llama2-7b"]
+    spc = STRATEGY_SPACES["temp"]
+    cands = candidate_degrees(64, spc["allow"], spc["seq_par"])
+    assert len(cands) >= _JAX_MIN_BATCH
+    ctx_np = StepCostContext(WAFER, cfg, 64, 4096, "tcme",
+                             objective="decode")
+    ctx_jx = StepCostContext(WAFER, cfg, 64, 4096, "tcme",
+                             objective="decode", tierb="jax")
+    for deg, ra, rb in zip(cands, simulate_decode_batch(ctx_np, cands),
+                           simulate_decode_batch(ctx_jx, cands)):
+        _assert_bitwise_equal(ra, rb, ("decode", deg.as_tuple()))
+    s_np = dlws_solve(Wafer(WaferSpec()), cfg, 64, 4096, space="temp",
+                      objective="decode")
+    s_jx = dlws_solve(Wafer(WaferSpec()), cfg, 64, 4096, space="temp",
+                      objective="decode", tierb="jax")
+    assert s_np.config == s_jx.config
+    assert s_np.best.throughput == s_jx.best.throughput
+    assert s_np.evaluated == s_jx.evaluated
+
+
+def test_resident_context_reuse_and_isolation():
+    """``StepCostContext.resident`` returns the same instance for the same
+    cost-surface identity (so re-solves hit the result memo and perform 0
+    new evaluations), a different instance for any knob change, and never
+    caches on an uncached wafer."""
+    from repro.wafer.solver import dlws_solve
+    cfg, _ = TABLE_II["gpt3-6.7b"]
+    w = Wafer(WaferSpec())
+    # pin the backend knobs: the defaults resolve from REPRO_STAGE1 /
+    # REPRO_TIERB, and this test must hold under any env combination
+    a = StepCostContext.resident(w, cfg, 16, 2048, tierb="numpy")
+    assert StepCostContext.resident(w, cfg, 16, 2048, tierb="numpy") is a
+    assert StepCostContext.resident(w, cfg, 16, 2048, tierb="numpy",
+                                    stream="weights") is not a
+    assert StepCostContext.resident(w, cfg, 16, 2048, tierb="jax") is not a
+    assert StepCostContext.resident(w, cfg, 32, 2048, tierb="numpy") \
+        is not a
+    u = w.uncached()
+    assert StepCostContext.resident(u, cfg, 16, 2048) \
+        is not StepCostContext.resident(u, cfg, 16, 2048)
+    s1 = dlws_solve(w, cfg, 16, 2048, space="temp")
+    s2 = dlws_solve(w, cfg, 16, 2048, space="temp")
+    assert s1.evaluated > 0
+    assert s2.evaluated == 0  # fully served from the resident memo
+    assert s1.config == s2.config
+    assert s1.best.throughput == s2.best.throughput
+
+
+# ---------------------------------------------------------------------------
 # (b) solver-quality regression: DLWS never loses to SMap's fixed rule
 # ---------------------------------------------------------------------------
 
