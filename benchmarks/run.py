@@ -3,16 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV rows per the repo contract; detailed
 records land in results/bench/*.json.
 
-``--check`` is the one-command smoke gate: tier-1 pytest, the
-``search/engine_baseline`` drift check, the fig19 multi-wafer smoke
-(GPT-3 175B ×2 through the solve→plan→schedule pipeline) and the
-``serve/decode_baseline`` gate (decode solve + continuous-batching
-scheduler + serving cost model, pinned by plan/trace hashes) and the
-``serve/fault_recovery`` gate (mid-run die fault → live replan → KV
-migration, pinned by trace/plan hashes and recovery metrics), so
-plan-pipeline regressions, cost-engine drift, multi-wafer drift and
-serving drift are caught together.  A per-gate pass/fail summary table
-prints at the end (exit 1 on any failure).
+``--check`` is the one-command smoke gate: the ``analysis/lint``
+invariant linter (first — a broken invariant fails in seconds), tier-1
+pytest, the ``search/engine_baseline`` drift check, the fig19
+multi-wafer smoke (GPT-3 175B ×2 through the solve→plan→schedule
+pipeline), the ``serve/decode_baseline`` gate (decode solve +
+continuous-batching scheduler + serving cost model, pinned by
+plan/trace hashes), the ``serve/fault_recovery`` gate (mid-run die
+fault → live replan → KV migration, pinned by trace/plan hashes and
+recovery metrics), and finally ``analysis/verify-cache`` (static
+verification of every plan the run just cached), so plan-pipeline
+regressions, cost-engine drift, multi-wafer drift, serving drift and
+invariant violations are caught together.  A per-gate pass/fail summary
+table prints at the end (exit 1 on any failure).
 """
 
 from __future__ import annotations
@@ -50,6 +53,30 @@ def check() -> None:
     env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
                                if env.get("PYTHONPATH") else "")
     gates: list[tuple[str, bool, str]] = []  # (name, ok, detail)
+
+    # static analysis runs FIRST: a broken invariant fails in seconds,
+    # before the minutes-long test/bench lanes spin up
+    print("== analysis/lint (invariant linter) ==", flush=True)
+    try:
+        for p in (root, src):
+            if p not in sys.path:
+                sys.path.insert(0, p)
+        from repro.analysis.lint import lint_paths
+        from repro.analysis.violations import write_report
+        violations = lint_paths([os.path.join(src, "repro")])
+        report = os.path.join(root, "results", "bench",
+                              "analysis_lint.json")
+        write_report(violations, report, {"command": "lint"})
+        for v in violations:
+            print(v.format())
+        ok = not violations
+        detail = (f"{len(violations)} violation(s), report {report}"
+                  if violations else "clean")
+        print(f"lint {detail} -> {'OK' if ok else 'FAIL'}")
+        gates.append(("analysis/lint", ok, detail))
+    except Exception as e:
+        traceback.print_exc()
+        gates.append(("analysis/lint", False, repr(e)))
 
     print("== tier-1 pytest ==", flush=True)
     r = subprocess.run([sys.executable, "-m", "pytest", "-q"], env=env,
@@ -148,6 +175,34 @@ def check() -> None:
     except Exception as e:
         traceback.print_exc()
         gates.append(("serve/fault_recovery", False, repr(e)))
+
+    # verify-cache runs LAST so it sweeps every plan the benches above
+    # just compiled/cached, not just whatever was on disk beforehand
+    print("== analysis/verify-cache (static plan verifier) ==", flush=True)
+    try:
+        from repro.analysis.verify import verify_cache_dir
+        from repro.analysis.violations import errors, write_report
+        from repro.core.plan import default_cache_dir
+        cache = default_cache_dir()
+        n, violations = verify_cache_dir(cache, quarantine=True)
+        report = os.path.join(root, "results", "bench",
+                              "analysis_verify.json")
+        write_report(violations, report,
+                     {"command": "verify", "cache_dir": cache,
+                      "n_checked": n})
+        for v in violations:
+            print(v.format())
+        # quarantine retires bad entries (demoted to warnings), so the
+        # gate fails only if the *surviving* cache still has errors
+        bad = errors(violations)
+        ok = not bad
+        detail = (f"{n} plan(s) checked, {len(bad)} error(s), "
+                  f"{len(violations) - len(bad)} warning(s)")
+        print(f"verify-cache {detail} -> {'OK' if ok else 'FAIL'}")
+        gates.append(("analysis/verify-cache", ok, detail))
+    except Exception as e:
+        traceback.print_exc()
+        gates.append(("analysis/verify-cache", False, repr(e)))
 
     # ---- per-gate summary table ----------------------------------------
     width = max(len(n) for n, _, _ in gates)

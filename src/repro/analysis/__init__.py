@@ -1,0 +1,26 @@
+"""Static analysis layer: plan verifier + invariant linter.
+
+Two cooperating passes guard the invariants the rest of the system
+rests on (see ISSUE/ROADMAP): :mod:`repro.analysis.verify` statically
+checks compiled plan IRs (degrees, device order, memory, schedule
+legality, version/hash identity, on-disk schema) without running the
+engine, and :mod:`repro.analysis.lint` enforces source-level rules —
+cache-key completeness, determinism of key/hash builders, Tier-B
+host/jit purity, and bitwise-safety of the pinned modules.
+
+CLI: ``python -m repro.analysis {lint,verify}``.
+"""
+
+from repro.analysis.lint import lint_paths, lint_source
+from repro.analysis.verify import (assert_plan_valid, verify_cache_dir,
+                                   verify_plan, verify_plan_file)
+from repro.analysis.violations import (SEV_ERROR, SEV_WARNING,
+                                       PlanVerificationError, Violation,
+                                       errors, warnings, write_report)
+
+__all__ = [
+    "Violation", "PlanVerificationError", "SEV_ERROR", "SEV_WARNING",
+    "errors", "warnings", "write_report",
+    "verify_plan", "assert_plan_valid", "verify_plan_file",
+    "verify_cache_dir", "lint_source", "lint_paths",
+]

@@ -1,0 +1,102 @@
+"""``python -m repro.analysis`` — the static-analysis CLIs.
+
+``lint``   AST invariant linter over source trees (default ``src/``).
+``verify`` Static plan verifier over plan files or a plan-cache dir
+           (default: the live cache, ``repro.core.plan.default_cache_dir``).
+
+Both exit non-zero on error-severity findings and can write the
+machine-readable violation report consumed by CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.violations import errors, warnings, write_report
+
+
+def _emit(violations, json_out: Optional[str], meta: dict,
+          label: str) -> int:
+    for v in violations:
+        print(v.format())
+    if json_out:
+        write_report(violations, json_out, meta)
+        print(f"[report] {json_out}")
+    n_err = len(errors(violations))
+    n_warn = len(warnings(violations))
+    print(f"[{label}] {n_err} error(s), {n_warn} warning(s)")
+    return 1 if n_err else 0
+
+
+def cmd_lint(args: argparse.Namespace) -> int:
+    from repro.analysis.lint import ALL_RULES, lint_paths
+    rules = args.rule or list(ALL_RULES)
+    paths = args.paths or ["src"]
+    violations = lint_paths(paths, rules)
+    return _emit(violations, args.json,
+                 {"command": "lint", "paths": paths, "rules": rules},
+                 "lint")
+
+
+def cmd_verify(args: argparse.Namespace) -> int:
+    from repro.analysis.verify import verify_cache_dir, verify_plan_file
+    violations = []
+    n = 0
+    targets = args.paths
+    if not targets:
+        from repro.core.plan import default_cache_dir
+        targets = [default_cache_dir()]
+    for target in targets:
+        if os.path.isdir(target):
+            k, vs = verify_cache_dir(target, quarantine=args.quarantine)
+            n += k
+            violations += vs
+        else:
+            _plan, vs = verify_plan_file(target)
+            n += 1
+            violations += vs
+    print(f"[verify] checked {n} plan file(s)")
+    return _emit(violations, args.json,
+                 {"command": "verify", "targets": targets,
+                  "n_checked": n, "quarantine": args.quarantine},
+                 "verify")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static plan verifier + invariant linter")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    lp = sub.add_parser("lint", help="AST invariant linter")
+    lp.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src)")
+    lp.add_argument("--rule", action="append",
+                    help="restrict to one rule (repeatable)")
+    lp.add_argument("--json", metavar="PATH",
+                    help="write the machine-readable report here")
+    lp.set_defaults(func=cmd_lint)
+
+    vp = sub.add_parser("verify", help="static plan verifier")
+    vp.add_argument("paths", nargs="*",
+                    help="plan files or cache dirs (default: the live "
+                         "plan cache)")
+    vp.add_argument("--quarantine", action="store_true",
+                    help="rename entries with error findings to *.bad "
+                         "(the compile pipeline re-solves on next miss)")
+    vp.add_argument("--json", metavar="PATH",
+                    help="write the machine-readable report here")
+    vp.set_defaults(func=cmd_verify)
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.func(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

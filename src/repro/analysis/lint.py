@@ -1,0 +1,562 @@
+"""AST invariant linter over ``src/repro/``.
+
+Four rules, each machine-checking an invariant the repo previously
+stated only in prose (and whose violations produced the worst
+historical bugs):
+
+``cache-key-completeness``
+    Functions that build cache identities (``plan_cache_key`` /
+    ``multiwafer_cache_key`` / ``*_fingerprint`` / ``plan_hash`` /
+    ``StepCostContext.resident``) must fold *whole* dataclasses
+    (``dataclasses.asdict(wafer.spec)``, ``dataclasses.astuple(cfg)``,
+    or the bare object) — cherry-picking individual ``WaferSpec`` /
+    ``ModelConfig`` fields silently drops every field added later (the
+    PR-6 ``plan_cache_key`` bug class: it keyed on the grid shape only,
+    so non-default-spec deployments aliased default-spec entries).
+
+``determinism``
+    Inside key/hash/trace builders (the key-builder set above plus any
+    function that touches ``hashlib``): no wall-clock (``time.*``,
+    ``datetime.now``), no RNG (module-global samplers, or constructing
+    ``default_rng()``/``Random()`` without a seed), no ``id()``, no
+    ``json.dumps`` without ``sort_keys=True``, and no iterating a set
+    (``set()``/``frozenset()``/set literals/``.failed_dies``/
+    ``.failed_links``) without ``sorted(...)`` around it — any of these
+    makes two runs of the same solve disagree on identity.
+
+``tier-purity``
+    ``wafer/simulator.py`` keeps the numpy Tier-B anchor and its jitted
+    twin bitwise-identical by sharing host-side helpers *verbatim*.
+    Those helpers must never import or touch ``jax``/``jax.numpy``
+    (their numpy arithmetic IS the pin), and jitted bodies (functions
+    nested inside ``*_jax_fn`` builders) must never call a host helper
+    (tracing would re-stage its numpy arithmetic through XLA and break
+    the bitwise guarantee).
+
+``bitwise-safety``
+    The pinned modules (``wafer/simulator.py``, ``wafer/traffic.py``)
+    are anchored to ``simulate_step_reference``'s repeated-addition
+    chains.  ``sum()`` / ``np.sum`` / ``.sum()`` / ``math.fsum`` /
+    ``np.add.reduce`` reassociate floating-point addition and are
+    banned there outright — accumulate with an explicit loop or keep
+    the expression tree fixed.
+
+Suppress a finding with ``# repro: allow(<rule>)`` on the flagged line
+or on the enclosing ``def`` line.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, Optional, Sequence
+
+from repro.analysis.violations import SEV_ERROR, Violation
+
+RULE_CACHE_KEY = "cache-key-completeness"
+RULE_DETERMINISM = "determinism"
+RULE_TIER_PURITY = "tier-purity"
+RULE_BITWISE = "bitwise-safety"
+ALL_RULES = (RULE_CACHE_KEY, RULE_DETERMINISM, RULE_TIER_PURITY,
+             RULE_BITWISE)
+
+# functions whose name marks them as cache-identity builders
+_KEY_BUILDER_RE = re.compile(r"(cache_key|fingerprint|plan_hash)")
+# identity builders whose names don't say so (module suffix, qualname)
+EXTRA_KEY_BUILDERS = {
+    ("wafer/simulator.py", "StepCostContext.resident"),
+}
+
+# host-side helpers shared verbatim by the numpy tier and the jitted
+# tier's host epilogue — the bitwise pin rests on their numpy arithmetic
+SHARED_HOST_HELPERS = frozenset({
+    "_stream_select", "_slot_weights", "_d2d_volume",
+    "_contention_factor", "_overlap_stream_time",
+})
+TIER_SPLIT_MODULES = ("wafer/simulator.py",)
+PINNED_MODULES = ("wafer/simulator.py", "wafer/traffic.py")
+
+# dataclasses whose *whole* value must be folded into cache keys.
+# Resolved live when the package imports (so the rule tracks field
+# additions automatically); the hardcoded fallback keeps the linter
+# working in minimal environments (CI lint job installs no numpy) and
+# tests/test_analysis_lint.py asserts it matches the live dataclasses.
+WAFER_SPEC_FIELDS_FALLBACK = frozenset({
+    "rows", "cols", "link_bw", "hop_latency", "e_d2d", "flops",
+    "gemm_eff", "e_flop", "hbm_bw", "hbm_cap", "e_hbm", "sram_bytes",
+    "bw_half_size",
+})
+MODEL_CONFIG_FIELDS_FALLBACK = frozenset({
+    "name", "family", "n_layers", "d_model", "n_heads", "n_kv_heads",
+    "d_ff", "vocab_size", "d_head", "qkv_bias", "rope_theta",
+    "attn_softcap", "logit_softcap", "sliding_window", "layer_pattern",
+    "act", "n_experts", "top_k", "capacity_factor", "aux_coef",
+    "ssm_state", "ssm_head_dim", "ssm_expand", "ssm_chunk",
+    "n_enc_layers", "frontend", "frontend_tokens", "tie_embeddings",
+    "scale_embed", "norm_eps", "dtype", "source",
+})
+
+_NP_GLOBAL_SAMPLERS = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "uniform", "normal", "standard_normal",
+    "poisson", "exponential", "beta", "gamma",
+})
+_PY_RANDOM_SAMPLERS = frozenset({
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "expovariate",
+    "betavariate", "gammavariate", "triangular",
+})
+_SEEDABLE_CTORS = frozenset({
+    "default_rng", "RandomState", "SeedSequence", "Random",
+    "Generator", "PCG64",
+})
+_SET_VALUED_ATTRS = frozenset({"failed_dies", "failed_links"})
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([a-zA-Z0-9_,\- ]+)\)")
+
+
+def spec_fields() -> frozenset:
+    try:
+        import dataclasses
+
+        from repro.wafer.topology import WaferSpec
+        return frozenset(f.name for f in dataclasses.fields(WaferSpec))
+    except Exception:
+        return WAFER_SPEC_FIELDS_FALLBACK
+
+
+def config_fields() -> frozenset:
+    try:
+        import dataclasses
+
+        from repro.configs.base import ModelConfig
+        return frozenset(f.name for f in dataclasses.fields(ModelConfig))
+    except Exception:
+        return MODEL_CONFIG_FIELDS_FALLBACK
+
+
+def _module_key(path: str) -> str:
+    """Repo-stable module id: the path suffix below ``repro/``."""
+    p = path.replace(os.sep, "/")
+    if "/repro/" in p:
+        return p.rsplit("/repro/", 1)[1]
+    return p.rsplit("/", 1)[-1]
+
+
+def _suppressions(source: str) -> dict[int, set]:
+    sup: dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            sup[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return sup
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node  # type: ignore[attr-defined]
+
+
+def _parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_repro_parent", None)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('' when not a name)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _qualnames(tree: ast.Module) -> dict[ast.AST, str]:
+    """Map every function/class def to its dotted qualname."""
+    out: dict[ast.AST, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                out[child] = q
+                visit(child, q)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def _has_ancestor_call(node: ast.AST, names: frozenset,
+                       stop: ast.AST) -> bool:
+    """Is ``node`` (transitively) an argument of a call to one of
+    ``names`` within the subtree rooted at ``stop``?"""
+    cur = _parent(node)
+    while cur is not None and cur is not stop:
+        if isinstance(cur, ast.Call) and isinstance(cur.func, ast.Name) \
+                and cur.func.id in names:
+            return True
+        cur = _parent(cur)
+    return False
+
+
+class _FileLinter:
+    def __init__(self, source: str, path: str,
+                 rules: Optional[Sequence[str]] = None):
+        self.source = source
+        self.path = path
+        self.module = _module_key(path)
+        self.rules = tuple(rules) if rules else ALL_RULES
+        self.sup = _suppressions(source)
+        self.violations: list[Violation] = []
+        self._spec_fields = spec_fields()
+        self._cfg_fields = config_fields()
+
+    # -- plumbing ---------------------------------------------------------
+    def _emit(self, rule: str, line: int, msg: str,
+              def_line: int = 0) -> None:
+        if rule in self.sup.get(line, ()) \
+                or (def_line and rule in self.sup.get(def_line, ())):
+            return
+        self.violations.append(Violation(
+            code=f"lint/{rule}", message=msg, severity=SEV_ERROR,
+            path=self.path, line=line, rule=rule))
+
+    def run(self) -> list[Violation]:
+        try:
+            tree = ast.parse(self.source, filename=self.path)
+        except SyntaxError as e:
+            self.violations.append(Violation(
+                code="lint/parse", message=f"syntax error: {e.msg}",
+                severity=SEV_ERROR, path=self.path,
+                line=e.lineno or 0, rule="parse"))
+            return self.violations
+        _attach_parents(tree)
+        quals = _qualnames(tree)
+        funcs = [(n, q) for n, q in quals.items()
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+        if RULE_BITWISE in self.rules and self._is_pinned():
+            self._check_bitwise(tree)
+        if RULE_TIER_PURITY in self.rules \
+                and self.module in TIER_SPLIT_MODULES:
+            self._check_tier_purity(funcs)
+
+        for node, qual in funcs:
+            is_key = bool(_KEY_BUILDER_RE.search(node.name)) \
+                or (self.module, qual) in EXTRA_KEY_BUILDERS
+            if is_key and RULE_CACHE_KEY in self.rules:
+                self._check_cache_key(node)
+            if RULE_DETERMINISM in self.rules \
+                    and (is_key or self._uses_hashlib(node)):
+                self._check_determinism(node)
+        return self.violations
+
+    def _is_pinned(self) -> bool:
+        return any(self.module == m or self.module.endswith("/" + m)
+                   for m in PINNED_MODULES)
+
+    @staticmethod
+    def _uses_hashlib(func: ast.AST) -> bool:
+        return any(isinstance(n, ast.Name) and n.id == "hashlib"
+                   for n in ast.walk(func))
+
+    # -- rule: bitwise-safety --------------------------------------------
+    def _check_bitwise(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            bad = ""
+            if isinstance(f, ast.Name) and f.id == "sum":
+                bad = "builtin sum()"
+            elif isinstance(f, ast.Attribute):
+                dotted = _dotted(f)
+                if f.attr == "sum":
+                    bad = f"{dotted or '<expr>.sum'}()"
+                elif f.attr == "fsum":
+                    bad = f"{dotted}()"
+                elif f.attr == "reduce" and dotted.endswith("add.reduce"):
+                    bad = f"{dotted}()"
+            if bad:
+                self._emit(
+                    RULE_BITWISE, node.lineno,
+                    f"{bad} reassociates floating-point addition in a "
+                    f"module pinned bitwise to the scalar reference's "
+                    f"repeated-addition chain; accumulate with an "
+                    f"explicit loop instead")
+
+    # -- rule: tier-purity -----------------------------------------------
+    def _check_tier_purity(self, funcs: list) -> None:
+        jitted_builders = [n for n, _q in funcs
+                           if n.name.endswith("_jax_fn")]
+        for node, _qual in funcs:
+            if node.name in SHARED_HOST_HELPERS:
+                for sub in ast.walk(node):
+                    ref = ""
+                    if isinstance(sub, ast.Name) \
+                            and sub.id in ("jax", "jnp"):
+                        ref = sub.id
+                    elif isinstance(sub, (ast.Import, ast.ImportFrom)):
+                        names = [a.name for a in sub.names]
+                        mod = getattr(sub, "module", "") or ""
+                        if mod.startswith("jax") \
+                                or any(n.startswith("jax")
+                                       for n in names):
+                            ref = "import jax"
+                    if ref:
+                        self._emit(
+                            RULE_TIER_PURITY, sub.lineno,
+                            f"shared Tier-B host helper {node.name} "
+                            f"touches {ref}: its numpy arithmetic is "
+                            f"the bitwise pin shared verbatim with the "
+                            f"jitted tier's host epilogue",
+                            node.lineno)
+        for builder in jitted_builders:
+            for inner in ast.walk(builder):
+                if inner is builder or not isinstance(
+                        inner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                for sub in ast.walk(inner):
+                    if isinstance(sub, ast.Call) \
+                            and isinstance(sub.func, ast.Name) \
+                            and sub.func.id in SHARED_HOST_HELPERS:
+                        self._emit(
+                            RULE_TIER_PURITY, sub.lineno,
+                            f"jitted body {builder.name}.{inner.name} "
+                            f"calls host helper {sub.func.id}: tracing "
+                            f"restages its pinned numpy arithmetic "
+                            f"through XLA and voids the bitwise "
+                            f"guarantee", inner.lineno)
+
+    # -- rule: cache-key-completeness ------------------------------------
+    def _check_cache_key(self, func: ast.AST) -> None:
+        spec_aliases, cfg_aliases = self._identity_aliases(func)
+
+        def is_spec_expr(n: ast.AST) -> bool:
+            return (isinstance(n, ast.Attribute) and n.attr == "spec") \
+                or (isinstance(n, ast.Name) and n.id in spec_aliases)
+
+        def is_cfg_expr(n: ast.AST) -> bool:
+            return isinstance(n, ast.Name) and n.id in cfg_aliases \
+                or (isinstance(n, ast.Attribute) and n.attr == "cfg")
+
+        whole = {"spec": False, "cfg": False}
+        partial: dict[str, list] = {"spec": [], "cfg": []}
+        for node in ast.walk(func):
+            if isinstance(node, ast.Call) \
+                    and self._is_whole_fold_call(node):
+                for arg in node.args:
+                    if is_spec_expr(arg):
+                        whole["spec"] = True
+                    if is_cfg_expr(arg):
+                        whole["cfg"] = True
+            for kind, pred, fields in (
+                    ("spec", is_spec_expr, self._spec_fields),
+                    ("cfg", is_cfg_expr, self._cfg_fields)):
+                if not pred(node):
+                    continue
+                parent = _parent(node)
+                if isinstance(parent, ast.Attribute) \
+                        and parent.value is node:
+                    if parent.attr in fields:
+                        partial[kind].append((parent.lineno, parent.attr))
+                elif isinstance(parent, ast.Call) \
+                        and parent.func is node:
+                    pass  # method call on the object: not a fold either way
+                elif not (isinstance(parent, ast.Assign)
+                          and node in parent.targets):
+                    # bare use (tuple/list/dict element, return value,
+                    # plain call argument): the whole object is folded
+                    whole[kind] = True
+        for kind, name in (("spec", "WaferSpec"), ("cfg", "ModelConfig")):
+            if partial[kind] and not whole[kind]:
+                line = min(ln for ln, _a in partial[kind])
+                flds = sorted({a for _ln, a in partial[kind]})
+                self._emit(
+                    RULE_CACHE_KEY, line,
+                    f"cache-identity builder {func.name} folds only "
+                    f"{name} fields {flds} — fold the whole dataclass "
+                    f"(dataclasses.asdict/astuple or the object itself) "
+                    f"so fields added later cannot silently drop out of "
+                    f"the key", func.lineno)
+
+    @staticmethod
+    def _identity_aliases(func: ast.AST) -> tuple[set, set]:
+        """Local names bound to a WaferSpec / ModelConfig inside
+        ``func``: parameters named spec/cfg and simple aliases assigned
+        from ``<expr>.spec`` / ``<expr>.cfg`` / an existing alias."""
+        spec = {"spec"} if _has_param(func, "spec") else set()
+        cfg = {"cfg"} if _has_param(func, "cfg") else set()
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            tgt = node.targets[0].id
+            val = node.value
+            if isinstance(val, ast.Attribute) and val.attr == "spec" \
+                    or (isinstance(val, ast.Name) and val.id in spec):
+                spec.add(tgt)
+            if isinstance(val, ast.Attribute) and val.attr == "cfg" \
+                    or (isinstance(val, ast.Name) and val.id in cfg):
+                cfg.add(tgt)
+        return spec, cfg
+
+    @staticmethod
+    def _is_whole_fold_call(node: ast.Call) -> bool:
+        f = node.func
+        name = f.id if isinstance(f, ast.Name) else (
+            f.attr if isinstance(f, ast.Attribute) else "")
+        return name in ("asdict", "astuple", "replace", "fields")
+
+    # -- rule: determinism ------------------------------------------------
+    def _check_determinism(self, func: ast.AST) -> None:
+        dl = func.lineno
+        for node in ast.walk(func):
+            if isinstance(node, ast.Attribute):
+                dotted = _dotted(node)
+                root = dotted.split(".", 1)[0]
+                if root == "time" and "." in dotted:
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               f"{dotted} inside a key/hash builder: "
+                               f"wall-clock reads make identity "
+                               f"run-dependent", dl)
+                elif node.attr in ("now", "utcnow", "today") \
+                        and "datetime" in dotted:
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               f"{dotted}() inside a key/hash builder",
+                               dl)
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            dotted = _dotted(f) if isinstance(f, ast.Attribute) else ""
+            if isinstance(f, ast.Name) and f.id == "id" and node.args:
+                self._emit(RULE_DETERMINISM, node.lineno,
+                           "id() inside a key/hash builder: object "
+                           "identity is not stable across runs", dl)
+            elif dotted.startswith(("np.random.", "numpy.random.")):
+                attr = dotted.rsplit(".", 1)[1]
+                if attr in _NP_GLOBAL_SAMPLERS:
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               f"{dotted}() draws from numpy's global "
+                               f"(unseeded) RNG inside a key/hash "
+                               f"builder", dl)
+                elif attr in _SEEDABLE_CTORS and not node.args:
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               f"{dotted}() without a seed inside a "
+                               f"key/hash builder", dl)
+            elif dotted.startswith("random.") and "." in dotted:
+                attr = dotted.rsplit(".", 1)[1]
+                if attr in _PY_RANDOM_SAMPLERS:
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               f"{dotted}() draws from the global "
+                               f"(unseeded) RNG inside a key/hash "
+                               f"builder", dl)
+                elif attr in _SEEDABLE_CTORS and not node.args:
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               f"{dotted}() without a seed inside a "
+                               f"key/hash builder", dl)
+            elif dotted.endswith("json.dumps") or (
+                    isinstance(f, ast.Attribute) and f.attr == "dumps"
+                    and _dotted(f.value) == "json"):
+                kw = {k.arg: k.value for k in node.keywords}
+                sk = kw.get("sort_keys")
+                if not (isinstance(sk, ast.Constant) and sk.value is True):
+                    self._emit(RULE_DETERMINISM, node.lineno,
+                               "json.dumps without sort_keys=True "
+                               "inside a key/hash builder: dict "
+                               "insertion order leaks into the digest",
+                               dl)
+        self._check_set_iteration(func)
+
+    def _check_set_iteration(self, func: ast.AST) -> None:
+        dl = func.lineno
+
+        def set_expr(n: ast.AST) -> str:
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) \
+                    and n.func.id in ("set", "frozenset"):
+                return f"{n.func.id}(...)"
+            if isinstance(n, (ast.Set, ast.SetComp)):
+                return "a set literal"
+            if isinstance(n, ast.Attribute) \
+                    and n.attr in _SET_VALUED_ATTRS:
+                return f".{n.attr}"
+            return ""
+
+        iters: list[tuple[ast.AST, int]] = []
+        for node in ast.walk(func):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append((node.iter, node.lineno))
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.GeneratorExp, ast.DictComp)):
+                for gen in node.generators:
+                    iters.append((gen.iter, node.lineno))
+        for expr, line in iters:
+            what = set_expr(expr)
+            if not what:
+                continue
+            if _has_ancestor_call(expr, frozenset({"sorted"}), func):
+                continue
+            self._emit(RULE_DETERMINISM, line,
+                       f"iterating {what} inside a key/hash builder: "
+                       f"set order is salted per process — wrap it in "
+                       f"sorted(...)", dl)
+
+
+def _has_param(func: ast.AST, name: str) -> bool:
+    a = func.args
+    params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    return any(p.arg == name for p in params)
+
+
+def lint_source(source: str, path: str,
+                rules: Optional[Sequence[str]] = None) -> list[Violation]:
+    """Lint one Python source buffer."""
+    return _FileLinter(source, path, rules).run()
+
+
+def iter_py_files(paths: Iterable[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                out += [os.path.join(root, f) for f in sorted(files)
+                        if f.endswith(".py")]
+    return sorted(set(out))
+
+
+def lint_paths(paths: Iterable[str],
+               rules: Optional[Sequence[str]] = None) -> list[Violation]:
+    """Lint every ``.py`` file under ``paths`` (files or directories)."""
+    out: list[Violation] = []
+    for path in iter_py_files(paths):
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+        except OSError as e:
+            out.append(Violation(code="lint/parse",
+                                 message=f"cannot read: {e!r}",
+                                 severity=SEV_ERROR, path=path,
+                                 rule="parse"))
+            continue
+        out += lint_source(source, path, rules)
+    return out
+
+
+__all__ = [
+    "lint_source", "lint_paths", "iter_py_files", "ALL_RULES",
+    "RULE_CACHE_KEY", "RULE_DETERMINISM", "RULE_TIER_PURITY",
+    "RULE_BITWISE", "SHARED_HOST_HELPERS", "PINNED_MODULES",
+    "WAFER_SPEC_FIELDS_FALLBACK", "MODEL_CONFIG_FIELDS_FALLBACK",
+    "spec_fields", "config_fields",
+]

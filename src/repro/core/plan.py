@@ -31,7 +31,13 @@ import json
 import math
 import os
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import TYPE_CHECKING, Any, Callable, Optional, Sequence
+
+if TYPE_CHECKING:  # annotation-only: runtime imports stay lazy/cycle-free
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.core.schedule import PipelineSchedule
+    from repro.wafer.simulator import ParallelDegrees
+    from repro.wafer.topology import Wafer
 
 # v2: GA legality fix (subset totals) changes solver output — the bump
 # changes every cache key so pre-fix on-disk plans miss and re-solve
@@ -42,7 +48,8 @@ PLAN_VERSION = 3
 
 # observable pipeline counters (reset via reset_plan_stats; the launch
 # drivers print them so "second run hit the cache" is checkable from logs)
-PLAN_STATS = {"solver_calls": 0, "cache_hits": 0, "cache_misses": 0}
+PLAN_STATS = {"solver_calls": 0, "cache_hits": 0, "cache_misses": 0,
+              "quarantined": 0}
 
 
 def reset_plan_stats() -> None:
@@ -149,19 +156,19 @@ class WaferPlan:
     # ------------------------------------------------------------------
     # executable views
     # ------------------------------------------------------------------
-    def wafer(self):
+    def wafer(self) -> "Wafer":
         """Rebuild the Wafer this plan was solved for."""
         from repro.wafer.topology import Wafer, WaferSpec
         return Wafer(WaferSpec(rows=self.wafer_rows, cols=self.wafer_cols),
                      frozenset(self.failed_dies),
                      frozenset(tuple(l) for l in self.failed_links))
 
-    def parallel_degrees(self):
+    def parallel_degrees(self) -> "ParallelDegrees":
         from repro.wafer.simulator import ParallelDegrees
         return ParallelDegrees(self.dp, self.tp, self.sp, self.tatp,
                                seq_par=self.seq_par)
 
-    def parallel_config(self):
+    def parallel_config(self) -> "ParallelConfig":
         """The runnable-side ParallelConfig this plan prescribes."""
         from repro.configs.base import ParallelConfig
         if self.space == "fsdp":
@@ -222,7 +229,7 @@ class WaferPlan:
 # ---------------------------------------------------------------------------
 
 
-def plan_cache_key(arch: str, batch: int, seq: int, wafer,
+def plan_cache_key(arch: str, batch: int, seq: int, wafer: "Wafer",
                    dies: Optional[Sequence[int]] = None, *,
                    engine: str = "tcme", space: str = "temp",
                    knobs: tuple = ()) -> str:
@@ -262,7 +269,54 @@ def default_cache_dir() -> str:
                           os.path.join("results", "plans"))
 
 
-def compile_plan(wafer, cfg, batch: int, seq: int, *,
+def _quarantine(path: str, reason: str) -> None:
+    """Retire a bad cache entry (rename to ``*.bad``) so the next lookup
+    misses and re-solves; keep the bytes around for a post-mortem."""
+    import sys
+    try:
+        os.replace(path, path + ".bad")
+    except OSError:
+        return
+    PLAN_STATS["quarantined"] += 1
+    sys.stderr.write(f"[plan-cache] quarantined {path} -> "
+                     f"{os.path.basename(path)}.bad ({reason})\n")
+
+
+def _read_cached(loader: Callable[[str], Any], path: str,
+                 wafer: Any = None, cfg: Any = None) -> Any:
+    """Load **and statically verify** one cached plan entry.
+
+    Any failure — truncated/corrupt JSON (``json.JSONDecodeError`` /
+    ``TypeError`` out of ``from_dict`` on a half-written dict), a
+    newer-version entry, or an error-severity finding from
+    :func:`repro.analysis.verify.verify_plan` — quarantines the file and
+    returns ``None`` so the caller falls through to a fresh solve.  A
+    cached plan is input to a launch: it gets the same verify-before-use
+    discipline as a freshly solved one.
+    """
+    try:
+        plan = loader(path)
+    except Exception as e:  # corrupt entries raise all over: quarantine all
+        _quarantine(path, repr(e))
+        return None
+    from repro.analysis.verify import verify_plan
+    from repro.analysis.violations import errors
+    bad = errors(verify_plan(plan, wafer, cfg))
+    if bad:
+        _quarantine(path, "; ".join(v.code for v in bad))
+        return None
+    return plan
+
+
+def _verify_fresh(plan: Any, wafer: Any = None, cfg: Any = None) -> None:
+    """Verify a freshly solved plan before it is published to the cache
+    (raises :class:`repro.analysis.violations.PlanVerificationError`)."""
+    from repro.analysis.verify import assert_plan_valid
+    assert_plan_valid(plan, wafer, cfg)
+
+
+def compile_plan(wafer: "Wafer", cfg: "ModelConfig", batch: int,
+                 seq: int, *,
                  arch: Optional[str] = None, engine: str = "tcme",
                  space: str = "temp", dies: Optional[Sequence[int]] = None,
                  stream: str = "auto", bidirectional: bool = True,
@@ -291,10 +345,7 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
                          knobs=(stream, bidirectional, stream_dtype, remat))
     path = os.path.join(cache_dir, f"plan_{key}.json")
     if use_cache and os.path.exists(path):
-        try:
-            plan = WaferPlan.load(path)
-        except (ValueError, json.JSONDecodeError, OSError):
-            plan = None  # corrupt/foreign cache entry: fall through to solve
+        plan = _read_cached(WaferPlan.load, path, wafer, cfg)
         if plan is not None:
             PLAN_STATS["cache_hits"] += 1
             return plan
@@ -308,13 +359,17 @@ def compile_plan(wafer, cfg, batch: int, seq: int, *,
         wafer, sol, arch=arch, batch=batch, seq=seq, engine=engine,
         space=space, dies=dies, stream=stream, bidirectional=bidirectional,
         stream_dtype=stream_dtype, remat=remat)
-    # written back even when use_cache=False (a forced fresh solve must
-    # replace any stale entry so the next launch hits the new plan)
+    # verify, then publish: a plan that violates its own invariants must
+    # never reach the cache or a launch.  Written back even when
+    # use_cache=False (a forced fresh solve must replace any stale entry
+    # so the next launch hits the new plan).
+    _verify_fresh(plan, wafer, cfg)
     plan.dump(path)
     return plan
 
 
-def plan_from_solution(wafer, sol, *, arch: str, batch: int, seq: int,
+def plan_from_solution(wafer: "Wafer", sol: Any, *, arch: str,
+                       batch: int, seq: int,
                        engine: str, space: str,
                        dies: Optional[Sequence[int]] = None,
                        stream: str = "auto", bidirectional: bool = True,
@@ -365,8 +420,9 @@ def plan_from_solution(wafer, sol, *, arch: str, batch: int, seq: int,
     )
 
 
-def load_or_compile(plan_path: Optional[str], wafer, cfg, batch: int,
-                    seq: int, **kw) -> WaferPlan:
+def load_or_compile(plan_path: Optional[str], wafer: "Wafer",
+                    cfg: "ModelConfig", batch: int,
+                    seq: int, **kw: Any) -> WaferPlan:
     """Launchers' entry: explicit ``--plan`` file wins; otherwise compile
     (or hit the cache) for the wafer at hand."""
     if plan_path:
@@ -472,7 +528,7 @@ class ServePlan:
     def arch(self) -> str:
         return self.plan.arch
 
-    def parallel_config(self):
+    def parallel_config(self) -> "ParallelConfig":
         """Decode-time ParallelConfig: the inner plan's, with remat off
         (there is no backward pass to rematerialize for)."""
         return dataclasses.replace(self.plan.parallel_config(), remat=False)
@@ -503,7 +559,8 @@ class ServePlan:
         return "\n".join(parts)
 
 
-def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
+def compile_serve_plan(wafer: "Wafer", cfg: "ModelConfig",
+                       max_batch: int, max_seq: int, *,
                        arch: Optional[str] = None, engine: str = "tcme",
                        space: str = "temp",
                        dies: Optional[Sequence[int]] = None,
@@ -528,10 +585,7 @@ def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
                          knobs=("decode", stream_dtype, prefill_chunk))
     path = os.path.join(cache_dir, f"splan_{key}.json")
     if use_cache and os.path.exists(path):
-        try:
-            plan = ServePlan.load(path)
-        except (ValueError, KeyError, json.JSONDecodeError, OSError):
-            plan = None  # corrupt/foreign cache entry: fall through
+        plan = _read_cached(ServePlan.load, path, wafer, cfg)
         if plan is not None:
             PLAN_STATS["cache_hits"] += 1
             return plan
@@ -595,11 +649,13 @@ def compile_serve_plan(wafer, cfg, max_batch: int, max_seq: int, *,
             "evaluated": sol.evaluated,
         },
     )
+    _verify_fresh(plan, wafer, cfg)
     plan.dump(path)
     return plan
 
 
-def replan_serve(plan: ServePlan, cfg, wafer=None, *,
+def replan_serve(plan: ServePlan, cfg: "ModelConfig",
+                 wafer: Optional["Wafer"] = None, *,
                  failed_dies: Sequence[int] = (),
                  failed_links: Sequence[tuple[int, int]] = (),
                  min_batch: int = 1, seed: int = 0,
@@ -735,7 +791,7 @@ class MultiWaferPlan:
     def stages_of_wafer(self, wafer_idx: int) -> list[int]:
         return [s for s, w in enumerate(self.stage_wafer) if w == wafer_idx]
 
-    def pipeline_schedule(self):
+    def pipeline_schedule(self) -> "PipelineSchedule":
         from repro.core.schedule import pipeline_schedule
         return pipeline_schedule(self.family, self.pp, self.n_micro)
 
@@ -762,8 +818,11 @@ class MultiWaferPlan:
         return "\n".join(parts)
 
 
-def multiwafer_cache_key(arch: str, batch: int, seq: int, wafers,
-                         dies_per_wafer=None, *, engine: str = "tcme",
+def multiwafer_cache_key(arch: str, batch: int, seq: int,
+                         wafers: Sequence["Wafer"],
+                         dies_per_wafer: Optional[Sequence[
+                             Optional[Sequence[int]]]] = None,
+                         *, engine: str = "tcme",
                          space: str = "temp", knobs: tuple = (),
                          upper: tuple = ()) -> str:
     """Cache identity keyed on the tuple of per-wafer fault states: any
@@ -796,14 +855,18 @@ def multiwafer_cache_key(arch: str, batch: int, seq: int, wafers,
 
 
 def compile_multiwafer_plan(
-        wafers, cfg, batch: int, seq: int, *,
+        wafers: Sequence["Wafer"], cfg: "ModelConfig",
+        batch: int, seq: int, *,
         arch: Optional[str] = None, engine: str = "tcme",
-        space: str = "temp", dies_per_wafer=None,
+        space: str = "temp",
+        dies_per_wafer: Optional[Sequence[
+            Optional[Sequence[int]]]] = None,
         stream: str = "auto", bidirectional: bool = True,
         stream_dtype: str = "native", remat: bool = True, seed: int = 0,
         inter_wafer_bw: Optional[float] = None,
-        pp_multipliers=(1,), n_micro_candidates=(4, 8, 16, 32),
-        families=("gpipe", "1f1b"),
+        pp_multipliers: Sequence[int] = (1,),
+        n_micro_candidates: Sequence[int] = (4, 8, 16, 32),
+        families: Sequence[str] = ("gpipe", "1f1b"),
         tierb: Optional[str] = None,
         cache_dir: Optional[str] = None,
         use_cache: bool = True) -> MultiWaferPlan:
@@ -822,10 +885,7 @@ def compile_multiwafer_plan(
                tuple(families)))
     path = os.path.join(cache_dir, f"mwplan_{key}.json")
     if use_cache and os.path.exists(path):
-        try:
-            plan = MultiWaferPlan.load(path)
-        except (ValueError, KeyError, json.JSONDecodeError, OSError):
-            plan = None  # corrupt/foreign cache entry: fall through
+        plan = _read_cached(MultiWaferPlan.load, path, wafers, cfg)
         if plan is not None:
             PLAN_STATS["cache_hits"] += 1
             return plan
@@ -845,14 +905,16 @@ def compile_multiwafer_plan(
         remat=remat, inter_wafer_bw=bw,
         upper=(tuple(pp_multipliers), tuple(n_micro_candidates),
                tuple(families)))
+    _verify_fresh(plan, wafers, cfg)
     plan.dump(path)
     return plan
 
 
-def _plan_from_multiwafer_solution(wafers, sol, *, cfg, arch, batch, seq,
-                                   engine, space, stream, bidirectional,
-                                   stream_dtype, remat, inter_wafer_bw,
-                                   upper=()) -> MultiWaferPlan:
+def _plan_from_multiwafer_solution(
+        wafers: Sequence["Wafer"], sol: Any, *, cfg: "ModelConfig",
+        arch: str, batch: int, seq: int, engine: str, space: str,
+        stream: str, bidirectional: bool, stream_dtype: str, remat: bool,
+        inter_wafer_bw: float, upper: tuple = ()) -> MultiWaferPlan:
     from repro.wafer.simulator import StepCostContext, memory_components
     from repro.wafer.simulator import STRATEGY_SPACES
     from repro.wafer.solver import stage_config
@@ -904,7 +966,8 @@ def _plan_from_multiwafer_solution(wafers, sol, *, cfg, arch, batch, seq,
     )
 
 
-def replan_stage(plan: MultiWaferPlan, cfg, stage_idx: int, wafer, *,
+def replan_stage(plan: MultiWaferPlan, cfg: "ModelConfig",
+                 stage_idx: int, wafer: "Wafer", *,
                  seed: int = 0, max_rebalance: int = 8,
                  cache_dir: Optional[str] = None) -> MultiWaferPlan:
     """Re-solve ONE stage of a multi-wafer plan on a degraded wafer,
@@ -942,7 +1005,7 @@ def replan_stage(plan: MultiWaferPlan, cfg, stage_idx: int, wafer, *,
     layers = list(plan.stage_layers)
     old_layers = list(plan.stage_layers)
 
-    def solve_here(n_layers: int):
+    def solve_here(n_layers: int) -> tuple[Any, float, float, float]:
         scfg = stage_config(cfg, n_layers)
         sol = dlws_solve(wafer, scfg, plan.batch, plan.seq, engine=engine,
                          space=space, seed=seed, dies=alive)
@@ -1047,6 +1110,12 @@ def replan_stage(plan: MultiWaferPlan, cfg, stage_idx: int, wafer, *,
     new_plan = dataclasses.replace(plan, stages=stages,
                                    stage_layers=tuple(layers),
                                    predicted=new_pred, solver=new_solver)
+    # static verification of the stitched plan before it is returned or
+    # republished.  Wafers other than the degraded one are only known by
+    # grid shape here, so spec-dependent memory checks run as warnings;
+    # the structural invariants (degrees, device orders, schedule
+    # legality, disjoint stage dies) stay hard errors.
+    _verify_fresh(new_plan, None, cfg)
     if cache_dir is not None:
         # publish under the new fault tuple (same key a fresh compile on
         # the degraded wafers would compute) so a relaunch hits it.  A

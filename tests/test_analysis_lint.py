@@ -1,0 +1,231 @@
+"""Invariant linter: seeded regression corpus (the four historical bug
+classes), clean-tree silence, suppressions, and the CLI."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.lint import (MODEL_CONFIG_FIELDS_FALLBACK,
+                                 RULE_BITWISE, RULE_CACHE_KEY,
+                                 RULE_DETERMINISM, RULE_TIER_PURITY,
+                                 WAFER_SPEC_FIELDS_FALLBACK, config_fields,
+                                 lint_paths, lint_source, spec_fields)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+PLAN_PY = os.path.join(SRC, "core", "plan.py")
+SIM_PY = os.path.join(SRC, "wafer", "simulator.py")
+
+
+def read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def rules_of(violations):
+    return {v.rule for v in violations}
+
+
+def mutate(source: str, old: str, new: str) -> str:
+    assert source.count(old) == 1, f"anchor not unique: {old!r}"
+    return source.replace(old, new)
+
+
+# ---------------------------------------------------------------------------
+# the clean tree lints silent (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_clean_tree_is_silent():
+    assert lint_paths([SRC]) == []
+
+
+# ---------------------------------------------------------------------------
+# seeded regression corpus: each historical bug class, caught by its rule
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_spec_field_dropped_from_cache_key():
+    """PR-6 bug class: plan_cache_key folding individual WaferSpec fields
+    instead of the whole dataclass."""
+    src = mutate(read(PLAN_PY),
+                 '"spec": dataclasses.asdict(wafer.spec),',
+                 '"spec": [wafer.spec.rows, wafer.spec.cols],')
+    vs = lint_source(src, PLAN_PY)
+    assert rules_of(vs) == {RULE_CACHE_KEY}
+    (v,) = vs
+    assert "rows" in v.message and "cols" in v.message
+    assert v.code == "lint/cache-key-completeness"
+
+
+def test_corpus_unseeded_rng_in_key_builder():
+    src = mutate(read(PLAN_PY),
+                 '        "knobs": list(knobs),\n    }',
+                 '        "knobs": list(knobs),\n    }\n'
+                 '    ident["salt"] = np.random.rand()')
+    vs = lint_source(src, PLAN_PY)
+    assert rules_of(vs) == {RULE_DETERMINISM}
+    assert "np.random.rand" in vs[0].message
+
+
+def test_corpus_jnp_leak_into_shared_host_helper():
+    src = mutate(read(SIM_PY),
+                 "        return np.minimum(w_stream, a_stream)",
+                 "        return jnp.minimum(w_stream, a_stream)")
+    vs = lint_source(src, SIM_PY)
+    assert rules_of(vs) == {RULE_TIER_PURITY}
+    assert "_stream_select" in vs[0].message
+
+
+def test_corpus_np_sum_over_pinned_link_chain():
+    src = mutate(read(SIM_PY),
+                 "        for k in range(dm.shape[1]):\n"
+                 "            d2d += xm[:, k]",
+                 "        d2d += xm.sum(axis=1)")
+    vs = lint_source(src, SIM_PY)
+    assert rules_of(vs) == {RULE_BITWISE}
+    assert "reassociates" in vs[0].message
+
+
+def test_corpus_host_helper_called_from_jitted_body():
+    """The inverse tier-purity leak: a jitted body tracing through a
+    pinned numpy helper."""
+    src = mutate(read(SIM_PY),
+                 "        tok = ob(B / dp)",
+                 '        tok = ob(B / dp)\n'
+                 '        sel = _stream_select("auto", tok, tok)')
+    vs = lint_source(src, SIM_PY)
+    assert rules_of(vs) == {RULE_TIER_PURITY}
+    assert "_decode_jax_fn" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# more determinism shapes
+# ---------------------------------------------------------------------------
+
+
+def test_determinism_wall_clock_and_set_iteration():
+    src = (
+        "import hashlib, json, time\n"
+        "def trace_fingerprint(events):\n"
+        "    stamp = time.time()\n"
+        "    order = [e for e in set(events)]\n"
+        "    blob = json.dumps({'t': stamp, 'o': order})\n"
+        "    return hashlib.sha256(blob.encode()).hexdigest()\n")
+    vs = lint_source(src, "src/repro/serve/engine.py")
+    assert rules_of(vs) == {RULE_DETERMINISM}
+    msgs = " ".join(v.message for v in vs)
+    assert "time.time" in msgs
+    assert "sort_keys" in msgs
+    assert "set" in msgs
+
+
+def test_determinism_sorted_set_iteration_is_fine():
+    src = (
+        "import hashlib\n"
+        "def key_fingerprint(wafer):\n"
+        "    dies = sorted(d for d in wafer.failed_dies)\n"
+        "    return hashlib.sha256(str(dies).encode()).hexdigest()\n")
+    assert lint_source(src, "x.py") == []
+
+
+def test_out_of_scope_functions_are_not_linted():
+    """The determinism rules apply to key/hash builders only."""
+    src = (
+        "import time\n"
+        "def sample_arrivals(n):\n"
+        "    return [time.time() for _ in range(n)]\n")
+    assert lint_source(src, "x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_inline_suppression_on_violation_line():
+    src = ("def _d2d_volume(st, W, n_l):\n"
+           "    return W.sum(axis=1)  # repro: allow(bitwise-safety)\n")
+    assert lint_source(src, SIM_PY) == []
+
+
+def test_suppression_on_def_line_covers_the_function():
+    src = ("def _d2d_volume(st, W, n_l):  # repro: allow(tier-purity)\n"
+           "    import jax.numpy as jnp\n"
+           "    return jnp.zeros(3)\n")
+    assert lint_source(src, SIM_PY) == []
+
+
+def test_suppression_is_rule_specific():
+    src = ("def _d2d_volume(st, W, n_l):\n"
+           "    return W.sum(axis=1)  # repro: allow(determinism)\n")
+    vs = lint_source(src, SIM_PY)
+    assert rules_of(vs) == {RULE_BITWISE}
+
+
+# ---------------------------------------------------------------------------
+# fallback field registries track the live dataclasses
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_fields_match_live_dataclasses():
+    """The CI lint lane runs without numpy installed and falls back to
+    the hardcoded lists; this asserts they never drift from the live
+    dataclasses."""
+    assert spec_fields() == WAFER_SPEC_FIELDS_FALLBACK
+    assert config_fields() == MODEL_CONFIG_FIELDS_FALLBACK
+
+
+def test_live_field_resolution_uses_dataclasses():
+    from repro.wafer.topology import WaferSpec
+    assert spec_fields() == frozenset(
+        f.name for f in dataclasses.fields(WaferSpec))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_lint_clean_tree_exits_zero(tmp_path):
+    report = tmp_path / "lint.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint", SRC,
+         "--json", str(report)],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert report.exists()
+    import json
+    rep = json.loads(report.read_text())
+    assert rep["n_errors"] == 0
+
+
+def test_cli_lint_flags_bad_file(tmp_path):
+    bad = tmp_path / "repro" / "wafer" / "simulator.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def _d2d_volume(st):\n    return sum(st)\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint", str(bad)],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 1
+    assert "bitwise-safety" in proc.stdout
+
+
+@pytest.mark.parametrize("rule", ["cache-key-completeness",
+                                  "bitwise-safety"])
+def test_cli_rule_filter(tmp_path, rule):
+    bad = tmp_path / "repro" / "wafer" / "simulator.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def _d2d_volume(st):\n    return sum(st)\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint", str(bad),
+         "--rule", rule],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    expect = 1 if rule == "bitwise-safety" else 0
+    assert proc.returncode == expect, proc.stdout + proc.stderr

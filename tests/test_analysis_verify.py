@@ -1,0 +1,276 @@
+"""Static plan verifier: bad-plan coverage, file-level checks, and the
+cache quarantine + re-solve path."""
+
+import dataclasses
+import glob
+import json
+import os
+
+import pytest
+
+from repro.analysis import (SEV_ERROR, PlanVerificationError, errors,
+                            verify_plan, verify_plan_file)
+from repro.analysis.verify import verify_cache_dir
+from repro.configs import get_config
+from repro.core.plan import (PLAN_STATS, PLAN_VERSION, WaferPlan,
+                             compile_plan, compile_serve_plan,
+                             reset_plan_stats)
+from repro.wafer import mapping as wmap
+from repro.wafer.topology import Wafer, WaferSpec
+
+CFG = get_config("deepseek-7b")
+
+
+@pytest.fixture(scope="module")
+def wafer():
+    return Wafer(WaferSpec())
+
+
+@pytest.fixture(scope="module")
+def train_plan(wafer, tmp_path_factory):
+    cache = str(tmp_path_factory.mktemp("plans"))
+    return compile_plan(wafer, CFG, 512, 2048, cache_dir=cache), cache
+
+
+@pytest.fixture(scope="module")
+def serve_plan(wafer, tmp_path_factory):
+    cache = str(tmp_path_factory.mktemp("splans"))
+    return compile_serve_plan(wafer, CFG, 64, 4096, cache_dir=cache), cache
+
+
+def codes(violations):
+    return {v.code for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# bad plans, each a distinct Violation code
+# ---------------------------------------------------------------------------
+
+
+def degraded_47_die_plan() -> tuple[WaferPlan, Wafer]:
+    """A hand-built plan on a 6x8 wafer with one dead die (47 alive)."""
+    w = Wafer(WaferSpec(rows=6, cols=8), frozenset({0}))
+    alive = sorted(w.alive_dies())
+    live = set(alive)
+    order = tuple(d for d in wmap.snake_order(6, 8) if d in live)
+    plan = WaferPlan(
+        arch="deepseek-7b", batch=512, seq=2048, wafer_rows=6,
+        wafer_cols=8, failed_dies=(0,), failed_links=(),
+        alive_dies=tuple(alive), dp=4, tp=4, sp=1, tatp=2,
+        seq_par=False, engine="tcme", space="temp", device_order=order)
+    return plan, w
+
+
+def test_clean_plan_verifies_empty(train_plan, wafer):
+    plan, _ = train_plan
+    assert verify_plan(plan, wafer, CFG) == []
+
+
+def test_degree_oversubscribed_on_degraded_wafer():
+    plan, w = degraded_47_die_plan()
+    assert verify_plan(plan, w) == []  # 4*4*1*2 = 32 <= 47: legal
+    bad = dataclasses.replace(plan, dp=8, tp=6)  # 8*6*1*2 = 96 > 47
+    vs = verify_plan(bad, w)
+    assert "plan/degree-oversubscribed" in codes(vs)
+    assert all(v.severity == SEV_ERROR for v in vs)
+
+
+def test_stale_plan_version(train_plan, wafer):
+    plan, _ = train_plan
+    bad = dataclasses.replace(plan, version=PLAN_VERSION - 1)
+    assert "plan/version-stale" in codes(verify_plan(bad, wafer, CFG))
+
+
+def test_non_bijective_device_order(train_plan, wafer):
+    plan, _ = train_plan
+    order = plan.device_order
+    dup = order[:-1] + (order[0],)  # drops one die, repeats another
+    bad = dataclasses.replace(plan, device_order=dup)
+    assert "plan/device-order-not-bijective" in codes(
+        verify_plan(bad, wafer, CFG))
+    # right multiset, wrong traversal: a *different* code
+    shuffled = dataclasses.replace(
+        plan, device_order=tuple(reversed(order)))
+    assert "plan/device-order-not-snake" in codes(
+        verify_plan(shuffled, wafer, CFG))
+
+
+def test_kv_budget_over_hbm_without_cap_flag(serve_plan, wafer):
+    plan, _ = serve_plan
+    assert verify_plan(plan, wafer, CFG) == []
+    # same contract checked against a wafer with a fraction of the HBM:
+    # the full-budget KV cache cannot fit beside the weights, yet the
+    # plan claims neither OOM nor a capped budget
+    small = Wafer(dataclasses.replace(wafer.spec, hbm_cap=2e9))
+    vs = verify_plan(plan, small, CFG)
+    assert "serve/kv-over-hbm" in codes(vs)
+    assert any(v.severity == SEV_ERROR for v in vs
+               if v.code == "serve/kv-over-hbm")
+
+
+def test_kv_cap_flag_consistency(serve_plan, wafer):
+    plan, _ = serve_plan
+    bad = dataclasses.replace(
+        plan, kv_budget_tokens=plan.max_batch * plan.max_seq // 2)
+    assert "serve/kv-cap-flag" in codes(verify_plan(bad, wafer, CFG))
+    over = dataclasses.replace(
+        plan, kv_budget_tokens=plan.max_batch * plan.max_seq * 2)
+    assert "serve/kv-budget-overflow" in codes(
+        verify_plan(over, wafer, CFG))
+
+
+def test_mem_flag_inconsistent(train_plan, wafer):
+    plan, _ = train_plan
+    pred = dict(plan.predicted)
+    pred["mem_per_die"] = wafer.spec.hbm_cap * 4
+    pred["oom"] = False
+    bad = dataclasses.replace(plan, predicted=pred)
+    assert "plan/mem-flag-inconsistent" in codes(
+        verify_plan(bad, wafer, CFG))
+    # declaring the overflow makes the same numbers consistent
+    pred2 = dict(pred)
+    pred2["oom"] = True
+    ok = dataclasses.replace(plan, predicted=pred2)
+    assert "plan/mem-flag-inconsistent" not in codes(
+        verify_plan(ok, wafer, CFG))
+
+
+def test_alive_dies_inconsistent(train_plan, wafer):
+    plan, _ = train_plan
+    bad = dataclasses.replace(plan, failed_dies=(plan.alive_dies[0],))
+    assert "plan/alive-dies-inconsistent" in codes(
+        verify_plan(bad, wafer, CFG))
+
+
+def test_assert_plan_valid_raises(train_plan, wafer):
+    plan, _ = train_plan
+    from repro.analysis import assert_plan_valid
+    assert_plan_valid(plan, wafer, CFG)
+    bad = dataclasses.replace(plan, version=1)
+    with pytest.raises(PlanVerificationError) as ei:
+        assert_plan_valid(bad, wafer, CFG)
+    assert "plan/version-stale" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# on-disk entries: schema / hash drift / unparseable / cache-dir sweep
+# ---------------------------------------------------------------------------
+
+
+def test_verify_plan_file_clean(train_plan):
+    _, cache = train_plan
+    path = glob.glob(os.path.join(cache, "plan_*.json"))[0]
+    plan, vs = verify_plan_file(path)
+    assert plan is not None
+    assert errors(vs) == []
+
+
+def test_hash_drift_on_hand_edited_entry(train_plan, tmp_path):
+    plan, cache = train_plan
+    src = glob.glob(os.path.join(cache, "plan_*.json"))[0]
+    raw = json.load(open(src))
+    raw["stream_dtype"] = "fp8"  # executable surface edited in place
+    dst = tmp_path / os.path.basename(src)
+    json.dump(raw, open(dst, "w"))
+    _p, vs = verify_plan_file(str(dst))
+    # the loaded plan recomputes its own hash consistently; drift is
+    # caught through the *filename* key check instead of the raw bytes
+    # (the plan hash recipe re-derives from the same dict) — assert the
+    # schema accepted it and the key mismatch was flagged as a warning
+    assert "file/cache-key-mismatch" in codes(vs)
+
+
+def test_schema_rejects_unknown_keys(train_plan, tmp_path):
+    _, cache = train_plan
+    src = glob.glob(os.path.join(cache, "plan_*.json"))[0]
+    raw = json.load(open(src))
+    raw["totally_new_field"] = 1
+    dst = tmp_path / os.path.basename(src)
+    json.dump(raw, open(dst, "w"))
+    _p, vs = verify_plan_file(str(dst))
+    assert "file/schema" in codes(vs)
+
+
+def test_unparseable_entry(tmp_path):
+    p = tmp_path / "plan_deadbeef.json"
+    p.write_text('{"arch": "x", "batch":')
+    plan, vs = verify_plan_file(str(p))
+    assert plan is None
+    assert codes(vs) == {"file/unparseable"}
+
+
+def test_verify_cache_dir_quarantine(train_plan, tmp_path):
+    _, cache = train_plan
+    src = glob.glob(os.path.join(cache, "plan_*.json"))[0]
+    good = tmp_path / os.path.basename(src)
+    good.write_text(open(src).read())
+    bad = tmp_path / "plan_0000000000000000000000ff.json"
+    raw = json.load(open(src))
+    raw["version"] = 1
+    json.dump(raw, open(bad, "w"))
+    n, vs = verify_cache_dir(str(tmp_path), quarantine=True)
+    assert n == 2
+    assert os.path.exists(str(bad) + ".bad")
+    assert not os.path.exists(str(bad))
+    assert os.path.exists(good)  # clean entry untouched
+    assert "file/quarantined" in codes(vs)
+    assert errors([v for v in vs if v.path == str(bad)]) == []
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: corrupt cached entries quarantine + re-solve
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_cache_entry_resolves(train_plan, wafer):
+    plan, cache = train_plan
+    path = glob.glob(os.path.join(cache, "plan_*.json"))[0]
+    blob = open(path).read()
+    try:
+        open(path, "w").write(blob[: len(blob) // 2])
+        reset_plan_stats()
+        again = compile_plan(wafer, CFG, 512, 2048, cache_dir=cache)
+        assert again.plan_hash == plan.plan_hash  # re-solve, same answer
+        assert PLAN_STATS["quarantined"] == 1
+        assert PLAN_STATS["solver_calls"] == 1
+        assert PLAN_STATS["cache_hits"] == 0
+        assert os.path.exists(path + ".bad")
+        assert os.path.exists(path)  # re-solve republished the entry
+        reset_plan_stats()
+        hit = compile_plan(wafer, CFG, 512, 2048, cache_dir=cache)
+        assert hit.plan_hash == plan.plan_hash
+        assert PLAN_STATS["cache_hits"] == 1
+    finally:
+        os.path.exists(path + ".bad") and os.remove(path + ".bad")
+
+
+def test_stale_serve_entry_resolves(serve_plan, wafer):
+    plan, cache = serve_plan
+    path = glob.glob(os.path.join(cache, "splan_*.json"))[0]
+    raw = json.load(open(path))
+    raw["version"] = 1
+    json.dump(raw, open(path, "w"))
+    reset_plan_stats()
+    again = compile_serve_plan(wafer, CFG, 64, 4096, cache_dir=cache)
+    assert again.plan_hash == plan.plan_hash
+    assert PLAN_STATS["quarantined"] == 1
+    assert PLAN_STATS["solver_calls"] == 1
+    os.remove(path + ".bad")
+
+
+def test_fresh_solve_verifies_before_publish(wafer, tmp_path,
+                                             monkeypatch):
+    """PlanVerificationError out of a poisoned solve leaves no cache
+    entry behind."""
+    import repro.core.plan as planmod
+
+    real = planmod.plan_from_solution
+
+    def poisoned(*a, **kw):
+        p = real(*a, **kw)
+        return dataclasses.replace(p, version=PLAN_VERSION - 1)
+
+    monkeypatch.setattr(planmod, "plan_from_solution", poisoned)
+    with pytest.raises(PlanVerificationError):
+        compile_plan(wafer, CFG, 512, 2048, cache_dir=str(tmp_path))
+    assert glob.glob(os.path.join(tmp_path, "plan_*.json")) == []
