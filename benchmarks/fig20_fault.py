@@ -1,7 +1,12 @@
 """Paper Fig. 20: fault tolerance — normalized throughput vs link/core
 fault rate.  Paper: resilient to core faults (≈80% at 25%), link-fault
 cliff near 35%.  A ``mixed`` sweep (dies and links failing together, the
-worst case §VIII-F classifies) rides along as the lower envelope."""
+worst case §VIII-F classifies) rides along as the lower envelope, and an
+exact-count twin of each sweep (``sampler="exact"``:
+``sample_die_faults`` / ``sample_link_faults`` kill exactly
+``ceil(rate·population)``) pins the severity axis in *count*, not just
+in Bernoulli draw — the bernoulli/exact gap at a rate is sampling noise,
+not model behaviour."""
 
 from __future__ import annotations
 
@@ -24,6 +29,13 @@ def run() -> dict:
         "mixed": throughput_vs_fault_rate(wafer, cfg, 32, shape.seq_len,
                                           kind="mixed",
                                           ctx_cache=ctx_cache),
+        # exact-count twins: identical sweep, deterministic severity
+        "core_exact": throughput_vs_fault_rate(
+            wafer, cfg, 32, shape.seq_len, kind="core", sampler="exact",
+            ctx_cache=ctx_cache),
+        "link_exact": throughput_vs_fault_rate(
+            wafer, cfg, 32, shape.seq_len, kind="link", sampler="exact",
+            ctx_cache=ctx_cache),
     }
     save_rows("fig20_fault", out)
     return out
@@ -31,7 +43,7 @@ def run() -> dict:
 
 def main():
     out = run()
-    for kind in ("core", "link", "mixed"):
+    for kind in ("core", "link", "mixed", "core_exact", "link_exact"):
         for r in out[kind]:
             print(csv_row(f"fig20/{kind}@{r['rate']:.2f}",
                           r["normalized"] * 1e6,

@@ -11,7 +11,10 @@ pipeline), the ``serve/decode_baseline`` gate (decode solve +
 continuous-batching scheduler + serving cost model, pinned by
 plan/trace hashes), the ``serve/fault_recovery`` gate (mid-run die
 fault → live replan → KV migration, pinned by trace/plan hashes and
-recovery metrics), and finally ``analysis/verify-cache`` (static
+recovery metrics), the ``serve/chaos`` gate (seeded flapping-link
+timeline through the replan governor: bounded replans, settle parity
+with a fresh solve, pinned decision sequence), and finally
+``analysis/verify-cache`` (static
 verification of every plan the run just cached), so plan-pipeline
 regressions, cost-engine drift, multi-wafer drift, serving drift and
 invariant violations are caught together.  A per-gate pass/fail summary
@@ -36,6 +39,7 @@ BENCHES = [
     "search_time",
     "serve_decode",
     "serve_fault",
+    "serve_chaos",
     "kernel_bench",
 ]
 
@@ -175,6 +179,19 @@ def check() -> None:
     except Exception as e:
         traceback.print_exc()
         gates.append(("serve/fault_recovery", False, repr(e)))
+
+    print("== serve/chaos (fault timeline + replan governor) ==",
+          flush=True)
+    try:
+        from benchmarks.serve_chaos import (check_gate as chaos_gate,
+                                            run as chaos_run)
+        scenarios, _, baseline = chaos_run(fast=True)
+        ok, detail = chaos_gate(scenarios, baseline)
+        print(f"serve_chaos {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("serve/chaos", ok, detail))
+    except Exception as e:
+        traceback.print_exc()
+        gates.append(("serve/chaos", False, repr(e)))
 
     # verify-cache runs LAST so it sweeps every plan the benches above
     # just compiled/cached, not just whatever was on disk beforehand

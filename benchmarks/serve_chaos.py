@@ -1,0 +1,412 @@
+"""Chaos-grade elastic serving soak: fault *streams* through the replan
+governor, on a virtual clock.
+
+``serve_fault.py`` proves the engine survives one permanent die fault.
+This benchmark drives the fault/repair *timelines* ROADMAP item 5 lists
+(a flapping D2D link, a die cascade) through
+:class:`repro.serve.governor.ReplanGovernor` and pins the control-plane
+behaviour itself:
+
+* **flap** — one seeded link (chosen by :func:`_worst_link`: the argmax
+  of predicted capacity loss, so the fault genuinely clears the
+  governor's hysteresis) fails and repairs ``N_FLAPS`` times, settling
+  failed.  The same trace runs twice: *ungoverned* (PR-6 behaviour, one
+  full replan+migration per edge — 2·N_FLAPS−1 of them) and *governed*
+  (debounce coalesces edges, backoff defers the thrash, the plan cache
+  makes the mid-flap revert solver-free), plus a *fresh control*
+  (``compile_serve_plan`` from scratch on the final degraded topology).
+  The gate asserts the governed engine replans ≤ ``GOV_MAX_REPLANS``
+  while the ungoverned one replans ≥ ``UNGOV_MIN_REPLANS``, that both
+  finish every request, and that the governed engine's post-settle
+  decode rate lands within 5% of the fresh control — settling into the
+  conservative plan may not cost steady-state throughput.
+* **cascade** (full runs only) — correlated die failures seconds apart
+  on a reduced-HBM wafer (the ``serve_fault`` pressure trick, so the
+  KV budget genuinely shrinks).  Each event kills dies the current plan
+  decodes on, so the governor's correctness override fires replans past
+  its own backoff — the budget governs *elective* replans, never
+  plan-breaking faults.
+
+The wafer runs a congested-fabric :class:`WaferSpec` for the flap
+(``link_bw/200``): at Table-I bandwidth a single mesh link carries so
+little decode traffic that losing it is invisible (<0.1% capacity), so
+there would be nothing for hysteresis to decide.  On the congested
+fabric the worst link costs ~2.6%, above the bench governor's 1%
+threshold — the interesting regime where replanning is justified but
+thrashing is not.
+
+Every governor decision and every executed recovery lands in
+``results/bench/serve_chaos_events.csv`` (CI artifact).  Recorded
+numbers live in ``results/bench/serve_chaos.json`` (baseline preserved
+across reruns; refresh with ``--rebaseline``); ``run(fast=True)``
+re-runs the flap scenario for the ``serve/chaos`` gate in
+``run.py --check``.
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import math
+import os
+import platform
+import tempfile
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.plan import PLAN_STATS, compile_serve_plan, reset_plan_stats
+from repro.serve.engine import (CostModelExecutor, ServeEngine, VirtualClock,
+                                poisson_arrivals, rolling_peak_throughput)
+from repro.serve.governor import GovernorConfig, predict_plan_throughput
+from repro.wafer.fault import FaultTrace, working_mesh_links
+from repro.wafer.topology import Wafer, WaferSpec
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "bench", "serve_chaos.json")
+EVENTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench", "serve_chaos_events.csv")
+MODEL = "deepseek-7b"
+LINK_BW_DIV = 200   # congested fabric: mesh links actually carry decode
+HBM_CAP_CASCADE = 5.0e9  # cascade scenario: die loss must cost KV budget
+MAX_BATCH = 32
+MAX_SEQ = 2048
+PROMPT, MAX_NEW = 1024, 192
+N_REQUESTS = 400
+SEED = 13
+N_FLAPS = 5              # fail edges; 2*N_FLAPS-1 events, settles failed
+GOV_MAX_REPLANS = 3      # gate ceiling for the governed flap run
+UNGOV_MIN_REPLANS = 2 * N_FLAPS - 2  # ungoverned replans once per edge
+SETTLE_TOL = 0.05        # post-settle vs fresh-solve decode parity
+
+# timeline shape, as fractions of the decode-only makespan estimate: the
+# flap starts after steady state, each period spans hundreds of decode
+# iterations, and the last edge lands with ~half the run still to serve
+# (the post-settle parity window)
+FLAP_START_FRAC = 0.15
+FLAP_PERIOD_FRAC = 0.04
+COALESCE_FRAC = 0.05     # of one flap period
+BACKOFF_BASE_PERIODS = 2.2  # first backoff spans >1 period; doubled once,
+#                             the deferral swallows the rest of the flap
+
+_EVENT_COLS = ("scenario", "record", "time", "action", "reason",
+               "n_coalesced", "capacity_delta", "thr_ref", "thr_est",
+               "cached", "replans_in_window", "backoff_s",
+               "failed_dies", "failed_links", "repaired_dies",
+               "repaired_links", "pause_s", "dip_depth",
+               "time_to_recover", "recovered", "n_evicted",
+               "old_plan_hash", "new_plan_hash")
+
+
+def _worst_link(plan, cfg, wafer):
+    """The working mesh link whose failure costs the most predicted
+    decode capacity (argmax, ties to the lexicographically first link):
+    flapping *this* link makes the hysteresis decision non-trivial."""
+    ref = float(plan.predicted["tokens_per_s"])
+    best, best_delta = None, -math.inf
+    for link in working_mesh_links(wafer):
+        thr = predict_plan_throughput(plan, cfg,
+                                      wafer.with_faults((), (link,)))
+        delta = 1.0 - thr / ref if ref > 0 else 0.0
+        if delta > best_delta + 1e-12:
+            best, best_delta = link, delta
+    return best, best_delta
+
+
+def _workload(cfg):
+    return poisson_arrivals(N_REQUESTS, 1e6, seed=SEED, prompt_len=PROMPT,
+                            max_new_tokens=MAX_NEW)
+
+
+def _engine_rows(scenario: str, rep) -> list[dict]:
+    rows = [{"scenario": scenario, "record": "governor", **ge}
+            for ge in rep.governor]
+    rows += [{"scenario": scenario, "record": "recovery",
+              "action": "replan", **ev} for ev in rep.recovery]
+    return sorted(rows, key=lambda r: (r["time"], r["record"]))
+
+
+def _run_flap(cfg, cache_dir: str) -> dict:
+    spec = WaferSpec(link_bw=WaferSpec().link_bw / LINK_BW_DIV)
+    wafer = Wafer(spec)
+    base = compile_serve_plan(wafer, cfg, MAX_BATCH, MAX_SEQ,
+                              cache_dir=cache_dir, use_cache=False)
+    assert not base.predicted["oom"], "pristine plan must fit"
+    link, link_delta = _worst_link(base, cfg, wafer)
+    makespan_est = N_REQUESTS * MAX_NEW / base.predicted["tokens_per_s"]
+    period = FLAP_PERIOD_FRAC * makespan_est
+    trace = FaultTrace.flapping(wafer, seed=SEED, link=link,
+                                start=FLAP_START_FRAC * makespan_est,
+                                period_s=period, n_flaps=N_FLAPS,
+                                settle="failed")
+    gov_cfg = GovernorConfig(
+        coalesce_s=COALESCE_FRAC * period,
+        hysteresis=0.01,
+        backoff_base_s=BACKOFF_BASE_PERIODS * period,
+        backoff_max_s=100.0 * makespan_est,
+        replan_budget=GOV_MAX_REPLANS,
+        window_s=100.0 * makespan_est)
+
+    def serve(governor):
+        eng = ServeEngine(base, CostModelExecutor(base, cfg, wafer),
+                          clock=VirtualClock(), cfg=cfg, wafer=wafer,
+                          faults=trace.events, governor=governor,
+                          plan_cache_dir=cache_dir)
+        rep = eng.run(_workload(cfg))
+        return eng, rep
+
+    reset_plan_stats()
+    eng_g, rep_g = serve(gov_cfg)
+    gov_solver_calls = PLAN_STATS["solver_calls"]
+    eng_u, rep_u = serve(None)
+
+    # fresh control on the final (settled-failed) topology: the governed
+    # engine's last adopted plan must be byte-identical to this solve
+    # (shared fault-keyed cache) and its post-settle decode rate must
+    # match it within SETTLE_TOL
+    final_wafer = trace.final_wafer(wafer)
+    fresh = compile_serve_plan(final_wafer, cfg, MAX_BATCH, MAX_SEQ,
+                               cache_dir=cache_dir)
+    eng_f = ServeEngine(fresh, CostModelExecutor(fresh, cfg, final_wafer),
+                        clock=VirtualClock())
+    eng_f.run(_workload(cfg))
+    fresh_thr = rolling_peak_throughput(eng_f.samples, kind="decode")
+    t_settle = eng_g.events[-1].time + eng_g.events[-1].pause_s \
+        if eng_g.events else 0.0
+    post_thr = rolling_peak_throughput(
+        [s for s in eng_g.samples if s[0] > t_settle], kind="decode",
+        require_full=True)
+
+    return {
+        "scenario": "flap",
+        "flap_link": list(link),
+        "link_delta": link_delta,
+        "n_events": len(trace.events),
+        "governed": rep_g.to_dict(),
+        "ungoverned": rep_u.to_dict(),
+        "gov_replans": rep_g.n_replans,
+        "ungov_replans": rep_u.n_replans,
+        "gov_solver_calls": gov_solver_calls,
+        "gov_actions": [(ge["action"], ge["reason"])
+                        for ge in rep_g.governor],
+        "base_plan_hash": base.plan_hash,
+        "final_plan_hash": eng_g.plan.plan_hash,
+        "fresh_plan_hash": fresh.plan_hash,
+        "fresh_hash_match": eng_g.plan.plan_hash == fresh.plan_hash,
+        "post_thr": post_thr,
+        "fresh_thr": fresh_thr,
+        "settle_ratio": post_thr / fresh_thr if fresh_thr else 0.0,
+        "csv_rows": (_engine_rows("flap_governed", rep_g)
+                     + _engine_rows("flap_ungoverned", rep_u)),
+    }
+
+
+def _run_cascade(cfg, cache_dir: str) -> dict:
+    wafer = Wafer(WaferSpec(hbm_cap=HBM_CAP_CASCADE))
+    base = compile_serve_plan(wafer, cfg, MAX_BATCH, MAX_SEQ,
+                              cache_dir=cache_dir, use_cache=False)
+    assert not base.predicted["oom"], "pristine plan must fit"
+    makespan_est = N_REQUESTS * MAX_NEW / base.predicted["tokens_per_s"]
+    trace = FaultTrace.cascade(wafer, seed=SEED,
+                               start=FLAP_START_FRAC * makespan_est,
+                               interval_s=FLAP_PERIOD_FRAC * makespan_est,
+                               n_events=3, frac_per_event=0.05)
+    gov_cfg = GovernorConfig(
+        coalesce_s=COALESCE_FRAC * FLAP_PERIOD_FRAC * makespan_est,
+        hysteresis=0.01,
+        backoff_base_s=BACKOFF_BASE_PERIODS * FLAP_PERIOD_FRAC
+        * makespan_est,
+        backoff_max_s=100.0 * makespan_est,
+        replan_budget=GOV_MAX_REPLANS,
+        window_s=100.0 * makespan_est)
+    eng = ServeEngine(base, CostModelExecutor(base, cfg, wafer),
+                      clock=VirtualClock(), cfg=cfg, wafer=wafer,
+                      faults=trace.events, governor=gov_cfg,
+                      plan_cache_dir=cache_dir)
+    rep = eng.run(_workload(cfg))
+    return {
+        "scenario": "cascade",
+        "n_events": len(trace.events),
+        "governed": rep.to_dict(),
+        "gov_replans": rep.n_replans,
+        "gov_actions": [(ge["action"], ge["reason"])
+                        for ge in rep.governor],
+        # every cascade event kills dies the live plan decodes on: the
+        # correctness override must fire one replan per event, past the
+        # governor's own backoff
+        "forced_replans": sum(ev["reason"] == "plan-die-dead"
+                              for ev in rep.recovery),
+        "base_plan_hash": base.plan_hash,
+        "final_plan_hash": eng.plan.plan_hash,
+        "csv_rows": _engine_rows("cascade_governed", rep),
+    }
+
+
+def _dump_events(scenarios) -> None:
+    os.makedirs(os.path.dirname(EVENTS_PATH), exist_ok=True)
+    with open(EVENTS_PATH, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=_EVENT_COLS, extrasaction="ignore")
+        w.writeheader()
+        for sc in scenarios:
+            for r in sc["csv_rows"]:
+                w.writerow(r)
+
+
+def run(fast: bool = False, rebaseline: bool = False):
+    prev = None
+    try:
+        with open(BENCH_PATH) as f:
+            prev = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    prev_baseline = (prev or {}).get("baseline")
+
+    cfg = get_config(MODEL)
+    # throwaway plan cache per run: every replan and the fresh control
+    # run against the same fault-keyed cache (that identity is the
+    # settle-parity check), but nothing leaks across bench runs
+    cache_dir = tempfile.mkdtemp(prefix="serve_chaos_plans_")
+    scenarios = [_run_flap(cfg, cache_dir)]
+    if not fast:
+        scenarios.append(_run_cascade(cfg, cache_dir))
+
+    flap = scenarios[0]
+    summary = {
+        "flap_link": flap["flap_link"],
+        "flap_link_delta": flap["link_delta"],
+        "gov_replans": flap["gov_replans"],
+        "ungov_replans": flap["ungov_replans"],
+        "gov_solver_calls": flap["gov_solver_calls"],
+        "gov_actions": flap["gov_actions"],
+        "gov_trace": flap["governed"]["trace_hash"],
+        "ungov_trace": flap["ungoverned"]["trace_hash"],
+        "final_plan_hash": flap["final_plan_hash"],
+        "settle_ratio": flap["settle_ratio"],
+        "all_finished": all(
+            sc[k]["n_finished"] == N_REQUESTS
+            for sc in scenarios for k in ("governed", "ungoverned")
+            if k in sc),
+    }
+    if len(scenarios) > 1:
+        casc = scenarios[1]
+        summary["cascade_replans"] = casc["gov_replans"]
+        summary["cascade_forced"] = casc["forced_replans"]
+        summary["cascade_trace"] = casc["governed"]["trace_hash"]
+    baseline = summary if rebaseline or prev_baseline is None \
+        else prev_baseline
+
+    _dump_events(scenarios)  # CI artifact: refreshed by fast and full runs
+    if not fast:  # a fast gate run must not overwrite the full record
+        from benchmarks.common import save_rows
+        rows_out = [{k: v for k, v in sc.items() if k != "csv_rows"}
+                    for sc in scenarios]
+        save_rows("serve_chaos_rows", rows_out)
+        out = {"machine": platform.machine(),
+               "python": platform.python_version(),
+               "workload": {"model": MODEL, "link_bw_div": LINK_BW_DIV,
+                            "hbm_cap_cascade": HBM_CAP_CASCADE,
+                            "max_batch": MAX_BATCH, "max_seq": MAX_SEQ,
+                            "prompt": PROMPT, "max_new": MAX_NEW,
+                            "n_requests": N_REQUESTS, "seed": SEED,
+                            "n_flaps": N_FLAPS},
+               "scenarios": rows_out, "summary": summary,
+               "baseline": baseline}
+        if rebaseline and prev_baseline is not None:
+            out["baseline_prev"] = (prev or {}).get("baseline_prev") \
+                or prev_baseline
+        elif prev and prev.get("baseline_prev"):
+            out["baseline_prev"] = prev["baseline_prev"]
+        os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+        with open(BENCH_PATH, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    return scenarios, summary, prev_baseline if fast else baseline
+
+
+def check_gate(scenarios, baseline) -> tuple[bool, str]:
+    """The serve/chaos verdict for one (fast) run.
+
+    Structural criteria hold unconditionally: on the seeded flapping
+    link the governed engine replans ≤ GOV_MAX_REPLANS while the
+    ungoverned engine replans ≥ UNGOV_MIN_REPLANS, every request
+    finishes in both, evictions equal readmissions, the settled plan is
+    byte-identical to a fresh solve on the final topology, and the
+    post-settle decode rate matches that fresh solve within
+    SETTLE_TOL.  Against the baseline it pins both admission traces,
+    the final plan hash, and the governor's decision sequence."""
+    probs = []
+    flap = scenarios[0]
+    g, u = flap["governed"], flap["ungoverned"]
+    if flap["gov_replans"] > GOV_MAX_REPLANS:
+        probs.append(f"governed replans {flap['gov_replans']} > "
+                     f"{GOV_MAX_REPLANS}")
+    if flap["ungov_replans"] < UNGOV_MIN_REPLANS:
+        probs.append(f"ungoverned replans {flap['ungov_replans']} < "
+                     f"{UNGOV_MIN_REPLANS}")
+    if flap["link_delta"] <= 0.01:
+        probs.append(f"flap link below hysteresis "
+                     f"({flap['link_delta']:.4f}): nothing to govern")
+    for name, rep in (("governed", g), ("ungoverned", u)):
+        if rep["n_finished"] != N_REQUESTS:
+            probs.append(f"{name} finished "
+                         f"{rep['n_finished']}/{N_REQUESTS}")
+        if rep["n_readmitted"] != rep["n_evicted"]:
+            probs.append(f"{name} readmitted {rep['n_readmitted']} != "
+                         f"evicted {rep['n_evicted']}")
+    if not flap["fresh_hash_match"]:
+        probs.append("settled plan != fresh solve on final topology")
+    lo, hi = 1.0 - SETTLE_TOL, 1.0 + SETTLE_TOL
+    if not (lo <= flap["settle_ratio"] <= hi):
+        probs.append(f"post-settle/fresh {flap['settle_ratio']:.3f}")
+    if baseline is None:
+        return not probs, "; ".join(probs) or \
+            "no baseline recorded yet (first run)"
+    for key in ("gov_trace", "ungov_trace", "final_plan_hash"):
+        have = {"gov_trace": g["trace_hash"],
+                "ungov_trace": u["trace_hash"],
+                "final_plan_hash": flap["final_plan_hash"]}[key]
+        want = baseline.get(key)
+        if want and have != want:
+            probs.append(f"{key} {have}!={want}")
+    for key in ("gov_replans", "ungov_replans"):
+        want = baseline.get(key)
+        if want is not None and flap[key] != want:
+            probs.append(f"{key} {flap[key]}!={want}")
+    want_actions = baseline.get("gov_actions")
+    have_actions = [list(a) for a in flap["gov_actions"]]
+    if want_actions is not None and \
+            [list(a) for a in want_actions] != have_actions:
+        probs.append(f"governor decisions {have_actions}!={want_actions}")
+    b = baseline.get("settle_ratio")
+    if b is not None and not math.isclose(flap["settle_ratio"], b,
+                                          rel_tol=0.05, abs_tol=1e-9):
+        probs.append(f"settle_ratio {flap['settle_ratio']:.4g}!={b:.4g}")
+    return not probs, "; ".join(probs) or \
+        "governed<=cap, ungoverned thrash, parity+trace+decisions match"
+
+
+def main():
+    import sys
+    scenarios, summary, baseline = run(
+        rebaseline="--rebaseline" in sys.argv[1:])
+    flap = scenarios[0]
+    print(csv_row(
+        "serve_chaos/flap", flap["gov_replans"],
+        f"events={flap['n_events']} governed={flap['gov_replans']} "
+        f"ungoverned={flap['ungov_replans']} "
+        f"solver_calls={flap['gov_solver_calls']} "
+        f"link={tuple(flap['flap_link'])} delta={flap['link_delta']:.3f} "
+        f"settle={flap['settle_ratio']:.3f}"))
+    for sc in scenarios[1:]:
+        print(csv_row(
+            f"serve_chaos/{sc['scenario']}", sc["gov_replans"],
+            f"events={sc['n_events']} replans={sc['gov_replans']} "
+            f"forced={sc['forced_replans']} "
+            f"evicted={sc['governed']['n_evicted']}"))
+    ok, detail = check_gate(scenarios, baseline)
+    print(csv_row("serve/chaos", 0.0 if ok else 1.0,
+                  f"{'OK' if ok else 'DRIFT'}: {detail}"))
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,11 @@ historical bugs):
     so non-default-spec deployments aliased default-spec entries).
 
 ``determinism``
-    Inside key/hash/trace builders (the key-builder set above plus any
-    function that touches ``hashlib``): no wall-clock (``time.*``,
+    Inside key/hash/trace builders (the key-builder set above, any
+    function that touches ``hashlib``, and *every* function in the
+    trace-generator modules ``TRACE_GENERATOR_MODULES`` — seeded
+    fault/repair timelines must replay bit-for-bit, so the whole module
+    is held to identity discipline): no wall-clock (``time.*``,
     ``datetime.now``), no RNG (module-global samplers, or constructing
     ``default_rng()``/``Random()`` without a seed), no ``id()``, no
     ``json.dumps`` without ``sort_keys=True``, and no iterating a set
@@ -67,6 +70,12 @@ _KEY_BUILDER_RE = re.compile(r"(cache_key|fingerprint|plan_hash)")
 EXTRA_KEY_BUILDERS = {
     ("wafer/simulator.py", "StepCostContext.resident"),
 }
+
+# modules whose every function must replay deterministically: seeded
+# fault/repair trace generators feed the chaos gate, which pins their
+# output — an unseeded draw or salted set iteration anywhere in the
+# module silently un-pins the trace
+TRACE_GENERATOR_MODULES = ("wafer/fault.py",)
 
 # host-side helpers shared verbatim by the numpy tier and the jitted
 # tier's host epilogue — the bitwise pin rests on their numpy arithmetic
@@ -248,13 +257,15 @@ class _FileLinter:
                 and self.module in TIER_SPLIT_MODULES:
             self._check_tier_purity(funcs)
 
+        is_trace_mod = self.module in TRACE_GENERATOR_MODULES
         for node, qual in funcs:
             is_key = bool(_KEY_BUILDER_RE.search(node.name)) \
                 or (self.module, qual) in EXTRA_KEY_BUILDERS
             if is_key and RULE_CACHE_KEY in self.rules:
                 self._check_cache_key(node)
             if RULE_DETERMINISM in self.rules \
-                    and (is_key or self._uses_hashlib(node)):
+                    and (is_key or is_trace_mod
+                         or self._uses_hashlib(node)):
                 self._check_determinism(node)
         return self.violations
 
@@ -557,6 +568,7 @@ __all__ = [
     "lint_source", "lint_paths", "iter_py_files", "ALL_RULES",
     "RULE_CACHE_KEY", "RULE_DETERMINISM", "RULE_TIER_PURITY",
     "RULE_BITWISE", "SHARED_HOST_HELPERS", "PINNED_MODULES",
+    "TRACE_GENERATOR_MODULES",
     "WAFER_SPEC_FIELDS_FALLBACK", "MODEL_CONFIG_FIELDS_FALLBACK",
     "spec_fields", "config_fields",
 ]

@@ -95,6 +95,36 @@ MULTI_WAFER_PLAN_SCHEMA: dict = {
     "additionalProperties": False,
 }
 
+# fault/repair timeline files (``launch/serve.py --fault-trace FILE.json``,
+# :class:`repro.wafer.fault.FaultTrace`).  Strict like the plan IRs: an
+# event key the engine does not know (a typo'd ``repared_dies``) would
+# silently drop a repair from the timeline, which is exactly the failure
+# mode a chaos trace exists to exercise.
+FAULT_TRACE_SCHEMA: dict = {
+    "type": "object",
+    "required": ["events"],
+    "properties": {
+        "kind": _STR,
+        "seed": _INT,
+        "events": {
+            "type": "array",
+            "items": {
+                "type": "object",
+                "required": ["time"],
+                "properties": {
+                    "time": _NUM,
+                    "failed_dies": _INT_ARRAY,
+                    "failed_links": _LINK_ARRAY,
+                    "repaired_dies": _INT_ARRAY,
+                    "repaired_links": _LINK_ARRAY,
+                },
+                "additionalProperties": False,
+            },
+        },
+    },
+    "additionalProperties": False,
+}
+
 SCHEMAS = {
     "plan": WAFER_PLAN_SCHEMA,
     "splan": SERVE_PLAN_SCHEMA,
@@ -185,3 +215,22 @@ def validate_plan_json(raw: Any, kind: str,
         probs = _validate_minimal(raw, schema)
     return [Violation(code="file/schema", message=p, severity=SEV_ERROR,
                       path=path) for p in sorted(probs)]
+
+
+def validate_fault_trace(raw: Any) -> None:
+    """Validate a raw fault-trace document; raise ``ValueError`` listing
+    every problem.  Called by :meth:`repro.wafer.fault.FaultTrace.from_dict`
+    before any event reaches the serve timeline — a malformed trace must
+    fail loudly at load, not drop events silently mid-soak."""
+    try:
+        import jsonschema
+        probs = sorted(
+            f"{'/'.join(str(p) for p in e.absolute_path) or '$'}: "
+            f"{e.message}"
+            for e in jsonschema.Draft7Validator(
+                FAULT_TRACE_SCHEMA).iter_errors(raw)
+        )
+    except ImportError:
+        probs = sorted(_validate_minimal(raw, FAULT_TRACE_SCHEMA))
+    if probs:
+        raise ValueError("invalid fault trace: " + "; ".join(probs))

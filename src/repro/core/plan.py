@@ -709,6 +709,32 @@ def replan_serve(plan: ServePlan, cfg: "ModelConfig",
         max_batch = max(min_batch, max_batch // 2)
 
 
+def cached_serve_plan(plan: ServePlan, cfg: "ModelConfig", wafer: "Wafer",
+                      *, cache_dir: Optional[str] = None
+                      ) -> Optional[ServePlan]:
+    """Peek the serve-plan cache for ``wafer`` at ``plan``'s contract
+    knobs — **no solver call, ever**.  Returns the cached (verified)
+    plan or ``None`` on a miss.
+
+    This is the replan governor's revert probe: a repair that restores
+    a previously-seen topology hits the fault-keyed cache entry that
+    topology was solved under, which makes reverting to it free — the
+    governor can bypass its hysteresis/budget accounting for such
+    replans.  The probe uses the *current* contract (``max_batch`` may
+    have halved during an OOM replan; a differently-sized entry is a
+    miss, and the capacity-upside path re-solves instead)."""
+    cache_dir = cache_dir if cache_dir is not None else default_cache_dir()
+    key = plan_cache_key(plan.arch, plan.max_batch, plan.max_seq, wafer,
+                         None, engine=plan.plan.engine,
+                         space=plan.plan.space,
+                         knobs=("decode", plan.stream_dtype,
+                                plan.prefill_chunk))
+    path = os.path.join(cache_dir, f"splan_{key}.json")
+    if not os.path.exists(path):
+        return None
+    return _read_cached(ServePlan.load, path, wafer, cfg)
+
+
 # ---------------------------------------------------------------------------
 # multi-wafer pipeline plans (§VIII-E): solve → plan → execute across wafers
 # ---------------------------------------------------------------------------
@@ -1080,14 +1106,28 @@ def replan_stage(plan: MultiWaferPlan, cfg: "ModelConfig",
     wafer_list = [wafer_objs[w] for w in range(plan.n_wafers)]
     stage_dies = [tuple(alive) if j == s else plan.stages[j].alive_dies
                   for j in range(plan.pp)]
+    # fault-path pricing is *pessimistic* about co-located boundaries:
+    # shared_cut charges every on-wafer boundary its 1/k share of the
+    # wafer's D2D fabric (k boundaries streaming concurrently in steady
+    # 1F1B).  The healthy upper solve keeps the optimistic un-shared
+    # price — the replan governor deciding whether a degraded co-located
+    # layout is worth keeping must not see a boundary rate the fabric
+    # cannot actually sustain under contention.
+    boundary_bytes = plan.batch * plan.seq * cfg.d_model * BYTES_ACT
     p2p = stage_boundary_p2p(
-        wafer_list, plan.stage_wafer, stage_dies,
-        plan.batch * plan.seq * cfg.d_model * BYTES_ACT,
+        wafer_list, plan.stage_wafer, stage_dies, boundary_bytes,
+        plan.n_micro, plan.inter_wafer_bw, shared_cut=True)
+    p2p_unshared = stage_boundary_p2p(
+        wafer_list, plan.stage_wafer, stage_dies, boundary_bytes,
         plan.n_micro, plan.inter_wafer_bw)
     t_step = pipeline_step_time(sched, half, half, p2p)
     new_pred = dict(pred)
     new_pred.update({
         "step_time": t_step,
+        # per-boundary contention multipliers (1.0 = uncontended): >1 on
+        # wafers hosting several co-located boundaries
+        "boundary_contention": [b / u if u > 0 else 1.0
+                                for b, u in zip(p2p, p2p_unshared)],
         "throughput": plan.batch * plan.seq / t_step if t_step > 0 else 0.0,
         "oom": any(m > c for m, c in zip(mems, caps_all))
         or not sol.best.ok,

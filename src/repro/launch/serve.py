@@ -15,6 +15,15 @@ Two modes share the solve → plan → execute pipeline:
   ``--sim`` swaps the jax executor for the cost-model executor (no
   weights, simulation speed — same scheduler, deterministic clock).
 
+  Chaos-grade serving rides the same mode: ``--fault-trace
+  flap:SEED | cascade:SEED | FILE.json`` streams a fault/repair
+  timeline at the engine (including the real ``JaxServeExecutor`` —
+  ``migrate`` rebuilds the mesh per adopted plan), ``--governor`` (with
+  ``--coalesce-s/--hysteresis/--backoff-base/--backoff-max/``
+  ``--replan-budget/--governor-window``) routes it through the replan
+  governor, and ``--prefill-chunk-tokens N`` arms intra-step prefill
+  preemption.
+
 * **One-shot mode** (default, the original driver): prefill a batch of
   prompts, then decode a fixed number of tokens::
 
@@ -222,12 +231,27 @@ def serve_engine(args) -> dict:
                             cols=plan.plan.wafer_cols),
                   frozenset(plan.plan.failed_dies))
     faults = ()
-    if args.fault_at is not None:
+    if args.fault_trace is not None:
+        from repro.wafer.fault import parse_fault_trace
+        trace = parse_fault_trace(args.fault_trace, wafer)
+        faults = trace.events
+        print(f"fault trace '{args.fault_trace}': {len(faults)} event(s), "
+              f"kind={trace.kind}")
+    elif args.fault_at is not None:
         from repro.wafer.fault import sample_die_faults
         rep_f = sample_die_faults(wafer, args.fault_frac, seed=args.seed)
         faults = (rep_f.as_event(args.fault_at),)
         print(f"fault scheduled at t={args.fault_at}s: "
               f"dies {rep_f.failed_dies}")
+    governor = None
+    if args.governor:
+        from repro.serve.governor import GovernorConfig
+        governor = GovernorConfig(
+            coalesce_s=args.coalesce_s, hysteresis=args.hysteresis,
+            backoff_base_s=args.backoff_base,
+            backoff_max_s=args.backoff_max,
+            replan_budget=args.replan_budget,
+            window_s=args.governor_window)
     if args.sim:
         ex = CostModelExecutor(plan, cfg, wafer)
         clock = VirtualClock()
@@ -236,6 +260,8 @@ def serve_engine(args) -> dict:
         clock = WallClock()
     engine = ServeEngine(plan, ex, clock=clock, cfg=cfg, wafer=wafer,
                          faults=faults, readmission=args.readmission,
+                         governor=governor,
+                         prefill_chunk_tokens=args.prefill_chunk_tokens,
                          plan_cache_dir=args.plan_cache)
     rep = engine.run(reqs)
     out = rep.to_dict()
@@ -364,6 +390,35 @@ def main():
     ap.add_argument("--readmission", choices=("live", "drain"),
                     default="live",
                     help="evicted-sequence policy after a migration")
+    # fault/repair timelines + replan governor (chaos-grade serving)
+    ap.add_argument("--fault-trace", default=None,
+                    help="fault/repair timeline: 'flap:SEED' (seeded "
+                         "flapping link), 'cascade:SEED' (correlated die "
+                         "cascade), or a FaultTrace JSON file "
+                         "(schema-validated at load); takes precedence "
+                         "over --fault-at")
+    ap.add_argument("--governor", action="store_true",
+                    help="route fault events through the replan governor "
+                         "(debounce + hysteresis + backoff) instead of "
+                         "one replan per event")
+    ap.add_argument("--coalesce-s", type=float, default=0.25,
+                    help="governor debounce window (s)")
+    ap.add_argument("--hysteresis", type=float, default=0.05,
+                    help="min predicted capacity delta to justify an "
+                         "elective replan")
+    ap.add_argument("--backoff-base", type=float, default=1.0,
+                    help="first replan cool-down (s); doubles per "
+                         "consecutive replan")
+    ap.add_argument("--backoff-max", type=float, default=60.0,
+                    help="cool-down ceiling (s)")
+    ap.add_argument("--replan-budget", type=int, default=3,
+                    help="max elective replans per governor window")
+    ap.add_argument("--governor-window", type=float, default=60.0,
+                    help="replan-budget accounting window (s)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    help="chunked prefill with fault-clock checks at "
+                         "chunk boundaries (intra-step preemption); "
+                         "default: single-pass prefill")
     args = ap.parse_args()
     if args.serve:
         print(json.dumps(serve_engine(args)))

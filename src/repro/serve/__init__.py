@@ -1,6 +1,8 @@
 """Plan-driven serving subsystem: continuous-batching decode off a
 compiled :class:`repro.core.plan.ServePlan`, with elastic fault recovery
-(live replan + KV-cache migration, :mod:`repro.serve.migrate`)."""
+(live replan + KV-cache migration, :mod:`repro.serve.migrate`) governed
+under fault *streams* by :mod:`repro.serve.governor` (debounce,
+hysteresis, backoff, cached reverts)."""
 
 from repro.serve.engine import (ContinuousBatchingScheduler,
                                 CostModelExecutor, FaultEvent, RecoveryEvent,
@@ -8,14 +10,21 @@ from repro.serve.engine import (ContinuousBatchingScheduler,
                                 ServeReport, VirtualClock, WallClock,
                                 poisson_arrivals, rolling_peak_throughput,
                                 validate_request)
+from repro.serve.governor import (GovernorConfig, GovernorDecision,
+                                  GovernorEvent, ReplanGovernor,
+                                  predict_plan_throughput)
 from repro.serve.migrate import KVMigration, plan_kv_migration
 
 __all__ = [
     "ContinuousBatchingScheduler",
     "CostModelExecutor",
     "FaultEvent",
+    "GovernorConfig",
+    "GovernorDecision",
+    "GovernorEvent",
     "KVMigration",
     "RecoveryEvent",
+    "ReplanGovernor",
     "Request",
     "RequestState",
     "ServeEngine",
@@ -24,6 +33,7 @@ __all__ = [
     "WallClock",
     "plan_kv_migration",
     "poisson_arrivals",
+    "predict_plan_throughput",
     "rolling_peak_throughput",
     "validate_request",
 ]

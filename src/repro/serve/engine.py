@@ -96,6 +96,9 @@ class RequestState:
     first_token_at: float = math.nan
     finished_at: float = math.nan
     tokens_done: int = 0  # generated tokens (prefill yields the first)
+    prefilled_tokens: int = 0  # prompt tokens whose KV is resident
+    #                            (chunked-prefill checkpoint; == prompt_len
+    #                            once prefill completed)
     token_times: list[float] = field(default_factory=list)
     tokens: list[int] = field(default_factory=list)  # generated token ids
 
@@ -107,6 +110,15 @@ class RequestState:
     def context_len(self) -> int:
         """Tokens currently resident in this request's KV slot."""
         return self.req.prompt_len + self.tokens_done
+
+    @property
+    def resident_tokens(self) -> int:
+        """KV tokens *actually* resident right now.  Differs from
+        ``context_len`` only mid-prefill (``tokens_done == 0`` with a
+        partial chunked prefill): migration moves and prices what is
+        resident, not the full would-be context."""
+        return self.context_len if self.tokens_done > 0 \
+            else self.prefilled_tokens
 
     # -- SLO accounting ----------------------------------------------------
     @property
@@ -230,6 +242,7 @@ class ContinuousBatchingScheduler:
         first generated token (TTFT is measured here)."""
         for st in states:
             assert st.tokens_done == 0
+            st.prefilled_tokens = st.req.prompt_len
             st.first_token_at = now
             st.tokens_done = 1
             self._retire_if_done(st, now)
@@ -367,12 +380,20 @@ RECOVERY_FRACTION = 0.85
 
 @dataclass(frozen=True)
 class FaultEvent:
-    """A fault injection scheduled on the engine clock (seconds relative
-    to the engine start, like ``Request.arrival``).  Faults compose: each
-    event's dies/links fail *in addition to* whatever already failed."""
+    """One edge of the fault/repair timeline, scheduled on the engine
+    clock (seconds relative to the engine start, like
+    ``Request.arrival``).  Events compose in time order: each event's
+    dies/links fail *in addition to* whatever already failed, and its
+    ``repaired_*`` entries come back online (a flapping link is a
+    fail/repair/fail/... sequence over the same link).  Within one event
+    faults apply before repairs.  Generators for seeded flapping /
+    cascade / MTTF-MTTR traces live in
+    :class:`repro.wafer.fault.FaultTrace`."""
     time: float
     failed_dies: tuple[int, ...] = ()
     failed_links: tuple[tuple[int, int], ...] = ()
+    repaired_dies: tuple[int, ...] = ()
+    repaired_links: tuple[tuple[int, int], ...] = ()
 
 
 @dataclass
@@ -403,6 +424,15 @@ class RecoveryEvent:
     dip_depth: float = 0.0   # 1 - mean rate during the dip / thr_before
     time_to_recover: float = 0.0
     recovered: bool = False
+    # fault/repair-timeline accounting (defaults keep single-fault runs
+    # and their pinned drift-gate baselines untouched)
+    repaired_dies: tuple[int, ...] = ()
+    repaired_links: tuple[tuple[int, int], ...] = ()
+    reason: str = "fault"    # what triggered the replan (governor reason)
+    cached: bool = False     # replan served from the plan cache (revert)
+    thr_before_window: int = 0  # samples behind thr_before (< RECOVERY_WINDOW
+    #                             means thr_before is a short-trace estimate
+    #                             and `recovered` is never claimed against it)
 
     def to_dict(self) -> dict:
         import dataclasses
@@ -418,17 +448,26 @@ def _window_throughput(samples: Sequence[tuple]) -> float:
 
 def rolling_peak_throughput(samples: Sequence[tuple],
                             w: int = RECOVERY_WINDOW,
-                            kind: Optional[str] = None) -> float:
+                            kind: Optional[str] = None, *,
+                            require_full: bool = False) -> float:
     """Peak ``w``-sample rolling throughput.  With ``kind="decode"`` only
     decode iterations count — the steady decode rate is what the
     fault-recovery gate compares against a fresh solve on the degraded
     wafer (all-sample windows depend on how prefills happened to
-    interleave, which a mid-run migration legitimately perturbs)."""
+    interleave, which a mid-run migration legitimately perturbs).
+
+    Short traces (fewer than ``w`` matching samples) fall back to the
+    largest window available — the whole trace — which is an *estimate*,
+    not a steady rate: callers comparing against it must not treat it as
+    a recovery target (:meth:`ServeEngine._finalize_events` refuses to
+    set ``recovered`` off a short pre-fault window for exactly this
+    reason).  Pass ``require_full=True`` to get 0.0 instead of the
+    padded estimate."""
     samples = [s for s in samples if kind is None or s[3] == kind]
     if not samples:
         return 0.0
-    if len(samples) <= w:
-        return _window_throughput(samples)
+    if len(samples) < w:
+        return 0.0 if require_full else _window_throughput(samples)
     return max(_window_throughput(samples[j:j + w])
                for j in range(len(samples) - w + 1))
 
@@ -514,6 +553,13 @@ class CostModelExecutor:
         self._calibrate(new_plan, wafer)
         return mig.est_pause_s
 
+    def recalibrate(self, plan, wafer) -> None:
+        """Refit the latency surface without a plan swap — the replan
+        governor's *skip* decisions absorb a topology change (degraded
+        routing slows the same plan down; a repair speeds it up) while
+        keeping the contract, so only the cost surface moves."""
+        self._calibrate(plan, wafer)
+
     def decode_latency(self, n_active: int, resident_tokens: int) -> float:
         return max(self.a + self.b * n_active
                    + self.c * resident_tokens, 1e-9)
@@ -521,6 +567,15 @@ class CostModelExecutor:
     # -- executor protocol -------------------------------------------------
     def prefill(self, states: Sequence[RequestState]) -> float:
         return sum(self.prefill_tok * st.req.prompt_len for st in states)
+
+    def prefill_chunk(self, states: Sequence[RequestState],
+                      n_tokens: Sequence[int]) -> float:
+        """One chunked-prefill pass: advance each state by its share of
+        prompt tokens.  Priced at the same per-token rate as a whole
+        prefill, so chunking splits the duration without changing the
+        total — what it buys is preemption points (the engine checks the
+        fault clock between chunks)."""
+        return sum(self.prefill_tok * n for n in n_tokens)
 
     def decode(self, states: Sequence[RequestState]) -> float:
         resident = sum(st.context_len for st in states)
@@ -556,7 +611,9 @@ class ServeReport:
     n_evicted: int = 0       # in-flight sequences displaced by migrations
     n_readmitted: int = 0    # continuations re-queued (== n_evicted)
     rejected: tuple = ()     # (rid, reason) per rejected request
-    recovery: tuple = ()     # RecoveryEvent.to_dict() per fault
+    recovery: tuple = ()     # RecoveryEvent.to_dict() per replan
+    n_replans: int = 0       # plan swaps actually executed (== len(recovery))
+    governor: tuple = ()     # GovernorEvent.to_dict() per governor decision
 
     def to_dict(self) -> dict:
         import dataclasses
@@ -589,11 +646,29 @@ class ServeEngine:
     until the survivors retire (``"drain"``).  ``wafer`` is the live
     wafer when the deployment runs a non-default :class:`WaferSpec` (the
     plan's grid-only record cannot reconstruct hardware constants).
+
+    Fault *streams* (flapping links, cascades, repairs) should go
+    through the replan governor: pass ``governor`` (a
+    :class:`repro.serve.governor.GovernorConfig`) and events are
+    coalesced/debounced/hysteresis-filtered instead of each triggering
+    an independent replan.  ``governor=None`` keeps the legacy
+    one-replan-per-event behaviour bit-for-bit (the ``serve/fault``
+    drift gate runs ungoverned).
+
+    ``prefill_chunk_tokens`` opts into intra-step prefill preemption:
+    prefill runs in chunks of that many prompt tokens per request and
+    the engine re-checks the fault clock at every chunk boundary, so a
+    fault landing mid-prefill preempts at the last completed chunk
+    (checkpointed in ``RequestState.prefilled_tokens``) instead of
+    being absorbed only at the iteration boundary.  ``None`` (default)
+    keeps the single-pass prefill and its sample timeline bit-for-bit.
     """
 
     def __init__(self, plan, executor, *, clock=None, cfg=None, wafer=None,
                  faults: Sequence[FaultEvent] = (),
                  readmission: str = "live",
+                 governor=None,
+                 prefill_chunk_tokens: Optional[int] = None,
                  plan_cache_dir: Optional[str] = None,
                  plan_use_cache: bool = True,
                  on_iteration: Optional[Callable] = None,
@@ -604,6 +679,8 @@ class ServeEngine:
         if faults and cfg is None:
             raise ValueError("fault recovery needs the model cfg the plan "
                              "was compiled for (pass cfg=...)")
+        if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
+            raise ValueError("prefill_chunk_tokens must be positive or None")
         self.plan = plan
         self.executor = executor
         self.clock = clock if clock is not None else VirtualClock()
@@ -616,6 +693,24 @@ class ServeEngine:
         self.plan_use_cache = plan_use_cache
         self.on_iteration = on_iteration
         self.on_recovery = on_recovery
+        self.gov = None
+        if governor is not None:
+            if cfg is None:
+                raise ValueError("the replan governor estimates capacity "
+                                 "deltas with the decode cost model (pass "
+                                 "cfg=...)")
+            from repro.serve.governor import GovernorConfig, ReplanGovernor
+            self.gov = governor if isinstance(governor, ReplanGovernor) \
+                else ReplanGovernor(governor if isinstance(governor,
+                                                           GovernorConfig)
+                                    else GovernorConfig())
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        # chunked prefill needs executor support; fall back to the whole
+        # pass when the executor can't slice (e.g. a jax prefill that
+        # only returns final-position logits)
+        self._chunked = prefill_chunk_tokens is not None \
+            and getattr(executor, "prefill_chunk", None) is not None
+        self._fault_q: deque = deque()
         self.events: list[RecoveryEvent] = []
         # iteration timeline: (t_end, tokens, duration, kind) with kind in
         # prefill | decode | pause — the raw material of recovery metrics
@@ -625,20 +720,39 @@ class ServeEngine:
                 kind: str) -> None:
         self.samples.append((t_end, tokens, dt, kind))
 
-    def _recover(self, ev: FaultEvent, now: float) -> float:
+    def _apply_event(self, ev: FaultEvent) -> None:
+        """Fold one timeline event into the live wafer state (faults
+        first, then repairs — a die both failed and repaired in one
+        event ends up repaired)."""
+        self.wafer = self.wafer \
+            .with_faults(ev.failed_dies, ev.failed_links) \
+            .with_repairs(ev.repaired_dies, ev.repaired_links)
+
+    def _absorb(self, ev: FaultEvent) -> None:
+        """Governor *skip*: adopt the topology change without a replan —
+        the plan (and every admitted request's contract) stands, only
+        the executor's cost surface refits to the changed wafer."""
+        self._apply_event(ev)
+        recal = getattr(self.executor, "recalibrate", None)
+        if recal is not None:
+            recal(self.plan, self.wafer)
+
+    def _recover(self, ev: FaultEvent, now: float, *,
+                 reason: str = "fault", cached: bool = False) -> float:
         """Fault hits: replan on survivors, migrate resident KV, swap the
         contract, re-queue the displaced.  Returns the post-pause time."""
         from repro.core.plan import replan_serve
         from repro.serve.migrate import plan_kv_migration
         old_plan = self.plan
-        self.wafer = self.wafer.with_faults(ev.failed_dies, ev.failed_links)
+        self._apply_event(ev)
         new_plan = replan_serve(old_plan, self.cfg, wafer=self.wafer,
                                 cache_dir=self.plan_cache_dir,
                                 use_cache=self.plan_use_cache)
         mig = plan_kv_migration(old_plan, new_plan,
                                 list(self.sched.active.values()),
                                 self.cfg, self.wafer)
-        thr_before = _window_throughput(self.samples[-RECOVERY_WINDOW:])
+        pre = self.samples[-RECOVERY_WINDOW:]
+        thr_before = _window_throughput(pre)
         mig_fn = getattr(self.executor, "migrate", None)
         dt = mig_fn(new_plan, mig, self.wafer) if mig_fn is not None \
             else mig.est_pause_s
@@ -668,6 +782,11 @@ class ServeEngine:
             tokens_lost=mig.tokens_lost,
             capacity_ratio=new_pred / old_pred if old_pred > 0 else 1.0,
             thr_before=thr_before,
+            repaired_dies=tuple(ev.repaired_dies),
+            repaired_links=tuple(tuple(l) for l in ev.repaired_links),
+            reason=reason,
+            cached=cached,
+            thr_before_window=len(pre),
         )
         self.events.append(rec)
         if self.on_recovery:
@@ -676,10 +795,25 @@ class ServeEngine:
 
     def _finalize_events(self, t_end: float) -> None:
         """Fill each RecoveryEvent's dip/recovery metrics from the full
-        iteration-sample timeline (needs samples *after* the event)."""
+        iteration-sample timeline (needs samples *after* the event).
+
+        Each event's attribution window is bounded by the *next* event's
+        time: with back-to-back faults inside one ``RECOVERY_WINDOW``,
+        event k's dip/time-to-recover only sees samples in
+        ``(t_k, t_{k+1}]`` — the second fault's pause and dip are never
+        double-counted into the first event's metrics, and an event the
+        engine did not recover from before the next one hit reports
+        ``recovered=False`` with ``time_to_recover`` censored at
+        ``t_{k+1}``.  An event whose pre-fault window was short
+        (``thr_before_window < RECOVERY_WINDOW``: the fault landed
+        before a full window of samples existed) also reports
+        ``recovered=False`` — its ``thr_before`` is a padded estimate,
+        not a steady rate to recover *to*."""
         w = RECOVERY_WINDOW
-        for ev in self.events:
-            after = [s for s in self.samples if s[0] > ev.time]
+        for k, ev in enumerate(self.events):
+            bound = self.events[k + 1].time if k + 1 < len(self.events) \
+                else t_end
+            after = [s for s in self.samples if ev.time < s[0] <= bound]
             target = RECOVERY_FRACTION * ev.thr_before \
                 * min(1.0, ev.capacity_ratio)
             rec_t = None
@@ -689,54 +823,126 @@ class ServeEngine:
                 if win and _window_throughput(win) >= target:
                     rec_t = win[-1][0]
                     break
+            short_pre = ev.thr_before_window < w
             if rec_t is not None:
-                ev.recovered = True
+                ev.recovered = not short_pre
                 ev.time_to_recover = rec_t - ev.time
                 tail = [s for s in after if s[0] > rec_t]
                 ev.thr_after = rolling_peak_throughput(tail or after, w,
                                                        kind="decode")
             else:
-                rec_t = t_end
-                ev.time_to_recover = t_end - ev.time
+                rec_t = bound
+                ev.time_to_recover = bound - ev.time
                 ev.thr_after = rolling_peak_throughput(after, w,
                                                        kind="decode")
             span = rec_t - ev.time
             if ev.thr_before > 0 and span > 0:
-                dip_rate = sum(s[1] for s in self.samples
-                               if ev.time < s[0] <= rec_t) / span
+                dip_rate = sum(s[1] for s in after if s[0] <= rec_t) / span
                 ev.dip_depth = min(max(1.0 - dip_rate / ev.thr_before,
                                        0.0), 1.0)
+
+    def _fault_due(self, now: float) -> bool:
+        """A timeline event (or a pending governor decision) wants the
+        loop's attention — chunked prefill preempts on this."""
+        if self._fault_q and self._fault_q[0].time <= now:
+            return True
+        return self.gov is not None and bool(self.gov.pending)
+
+    def _prefill(self, states: Sequence[RequestState], now: float) -> float:
+        """Prefill ``states``; chunked mode checks the fault clock at
+        every chunk boundary and preempts with progress checkpointed in
+        ``prefilled_tokens`` (the interrupted states stay in their slots
+        with ``tokens_done == 0`` and resume — or migrate — from the
+        last completed chunk)."""
+        sched, clock = self.sched, self.clock
+        if not self._chunked:
+            t_before = now
+            dt = self.executor.prefill(states)
+            now = clock.advance(dt)
+            sched.mark_prefilled(states, now)
+            self._sample(now, len(states), now - t_before, "prefill")
+            return now
+        chunk = self.prefill_chunk_tokens
+        # anything already at its full prompt (zero-length prompts,
+        # states whose last chunk completed right before a preemption)
+        # yields its first token without another pass
+        insta = [st for st in states
+                 if st.prefilled_tokens >= st.req.prompt_len]
+        if insta:
+            sched.mark_prefilled(insta, now)
+            self._sample(now, len(insta), 0.0, "prefill")
+        while True:
+            todo = [st for st in states
+                    if 0 < st.req.prompt_len - st.prefilled_tokens]
+            if not todo:
+                break
+            ns = [min(chunk, st.req.prompt_len - st.prefilled_tokens)
+                  for st in todo]
+            t_before = now
+            dt = self.executor.prefill_chunk(todo, ns)
+            now = clock.advance(dt)
+            done = []
+            for st, n in zip(todo, ns):
+                st.prefilled_tokens += n
+                if st.prefilled_tokens >= st.req.prompt_len:
+                    done.append(st)
+            if done:
+                sched.mark_prefilled(done, now)
+            self._sample(now, len(done), now - t_before, "prefill")
+            if self._fault_due(now):
+                break  # preemption point: fault lands between chunks
+        return now
 
     def run(self, requests: Sequence[Request],
             max_iterations: int = 1_000_000) -> ServeReport:
         import dataclasses
-        sched, clock = self.sched, self.clock
+        sched, clock, gov = self.sched, self.clock, self.gov
         t0 = clock.now()
         # arrivals are relative to the engine start (a WallClock's origin
         # is arbitrary; a VirtualClock starts at 0 so this is a no-op)
         pending = [dataclasses.replace(r, arrival=r.arrival + t0)
                    for r in sorted(requests,
                                    key=lambda r: (r.arrival, r.rid))]
-        fault_q = deque(dataclasses.replace(ev, time=ev.time + t0)
-                        for ev in self.faults)
+        self._fault_q = fault_q = deque(
+            dataclasses.replace(ev, time=ev.time + t0)
+            for ev in self.faults)
         i = 0
         for _ in range(max_iterations):
             now = clock.now()
             while fault_q and fault_q[0].time <= now:
-                now = self._recover(fault_q.popleft(), now)
+                ev = fault_q.popleft()
+                if gov is None:
+                    now = self._recover(ev, now)
+                else:
+                    gov.observe(ev)
+            if gov is not None:
+                dec = gov.decide(now, plan=self.plan, wafer=self.wafer,
+                                 cfg=self.cfg,
+                                 cache_dir=self.plan_cache_dir)
+                if dec is not None:
+                    if dec.action == "replan":
+                        now = self._recover(dec.event, now,
+                                            reason=dec.reason,
+                                            cached=dec.cached)
+                    elif dec.action == "apply":
+                        self._absorb(dec.event)
+                    # "noop": the coalesced events cancelled out
             while i < len(pending) and pending[i].arrival <= now:
                 sched.submit(pending[i])
                 i += 1
             sched.reject_never_fit(now)
-            if sched.drained and i == len(pending):
+            if sched.drained and i == len(pending) and \
+                    (gov is None or (not fault_q and not gov.pending)):
                 break
             newly = sched.admit(now)
-            if newly:
-                t_before = now
-                dt = self.executor.prefill(newly)
-                now = clock.advance(dt)
-                sched.mark_prefilled(newly, now)
-                self._sample(now, len(newly), now - t_before, "prefill")
+            if self._chunked:
+                # resumed partial prefills ride along with fresh admits
+                prefills = [sched.active[s] for s in sorted(sched.active)
+                            if sched.active[s].tokens_done == 0]
+            else:
+                prefills = newly
+            if prefills:
+                now = self._prefill(prefills, now)
             batch = sched.decode_batch()
             if batch:
                 t_before = now
@@ -744,14 +950,19 @@ class ServeEngine:
                 now = clock.advance(dt)
                 sched.mark_decoded(batch, now)
                 self._sample(now, len(batch), now - t_before, "decode")
-            elif not newly:
+            elif not prefills:
                 # nothing in flight and head-of-line blocked or queue
-                # empty: jump to the next arrival or scheduled fault
+                # empty: jump to the next arrival, scheduled fault, or
+                # pending governor deadline (coalesce/backoff expiry)
                 horizon = []
                 if i < len(pending):
                     horizon.append(pending[i].arrival)
                 if fault_q:
                     horizon.append(fault_q[0].time)
+                if gov is not None:
+                    d = gov.next_deadline()
+                    if d is not None:
+                        horizon.append(d)
                 if horizon:
                     clock.wait_until(min(horizon))
                 elif sched.waiting:
@@ -795,6 +1006,9 @@ class ServeEngine:
             rejected=tuple((req.rid, reason)
                            for req, reason in self.sched.rejected),
             recovery=tuple(ev.to_dict() for ev in self.events),
+            n_replans=len(self.events),
+            governor=tuple(ge.to_dict() for ge in self.gov.events)
+            if self.gov is not None else (),
         )
 
 

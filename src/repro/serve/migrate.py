@@ -45,6 +45,72 @@ REPLAN_OVERHEAD_S = 2e-3
 # prefill: this many tokens rebuild in the time one token decodes
 # (matches CostModelExecutor's default prefill_eff).
 PREFILL_RECOMPUTE_EFF = 16
+# tokens per re-prefill pass: each chunk is one forward launch on the
+# degraded mesh and can never beat a single decode step's latency (the
+# per-chunk floor in _reprefill_pricing).
+REPREFILL_CHUNK_TOKENS = 512
+
+
+def _reprefill_pricing(new_plan, cfg, wafer, lost_tokens: float, *,
+                       chunk_tokens: int = REPREFILL_CHUNK_TOKENS,
+                       prefill_eff: int = PREFILL_RECOMPUTE_EFF
+                       ) -> tuple[float, int, str]:
+    """Price rebuilding ``lost_tokens`` of KV by chunked re-prefill,
+    re-simulated on the *degraded* plan.
+
+    Runs the same two-anchor calibration as
+    :class:`repro.serve.engine.CostModelExecutor` —
+    ``simulate_decode_batch`` at full and half context on the new plan's
+    die set over the degraded wafer — so the per-token rate carries the
+    degraded fabric's real detours and contention instead of the old
+    flat ``predicted_tokens_per_s × PREFILL_RECOMPUTE_EFF`` guess
+    (which priced a 25%-dead mesh and a healthy one identically per
+    predicted token).  The rebuild runs in ``chunk_tokens`` passes,
+    each floored at one decode-step latency (a launch cannot be faster
+    than a step).  Returns ``(recompute_s, n_chunks, model)`` where
+    ``model`` is ``"resim"`` or — if the simulation is unusable —
+    ``"flat"`` (the legacy pricing, kept as a deterministic fallback).
+    """
+    import math
+    n_tok = int(math.ceil(lost_tokens))
+    if n_tok <= 0:
+        return 0.0, 0, "resim"
+    try:
+        from repro.wafer.simulator import (ParallelDegrees, StepCostContext,
+                                           simulate_decode_batch)
+        deg = ParallelDegrees(*new_plan.plan.degrees_tuple(),
+                              seq_par=new_plan.plan.seq_par)
+        B = max(new_plan.max_batch, 1)
+        S = max(new_plan.max_seq, 1)
+        dies = list(new_plan.plan.alive_dies)
+
+        def lat(s):
+            ctx = StepCostContext(wafer, cfg, B, max(s, 1),
+                                  new_plan.plan.engine, dies=dies,
+                                  objective="decode")
+            return simulate_decode_batch(ctx, [deg])[0].step_time
+
+        l_full = lat(S)
+        if not (math.isfinite(l_full) and l_full > 0):
+            raise ValueError("degraded plan simulates non-finite")
+        l_half = lat(S // 2)
+        if not math.isfinite(l_half):
+            l_half = l_full
+        # KV-scan slope per resident token (the executor's `c`): longer
+        # rebuilt prefixes scan more resident cache per pass
+        c = (l_full - l_half) / max(B * S - B * (S // 2), 1)
+        per_tok = l_full / B / prefill_eff + max(c, 0.0)
+        n_chunks = (n_tok + chunk_tokens - 1) // chunk_tokens
+        total, rem = 0.0, n_tok
+        for _ in range(n_chunks):
+            t = min(chunk_tokens, rem)
+            total += max(t * per_tok, l_full)
+            rem -= t
+        return total, n_chunks, "resim"
+    except Exception:
+        tok_rate = max(new_plan.predicted.get("tokens_per_s", 0.0), 1e-9) \
+            * prefill_eff
+        return n_tok / tok_rate, 0, "flat"
 
 
 @dataclass(frozen=True)
@@ -68,6 +134,8 @@ class KVMigration:
     kv_tokens_kept: int      # budget tokens the survivors keep reserved
     recompute_tokens: int    # evicted prefix tokens to re-prefill later
     tokens_lost: int         # generated tokens whose KV was evicted
+    recompute_chunks: int = 0    # re-prefill passes the pricing simulated
+    recompute_model: str = "flat"  # "resim" (degraded-plan sim) | "flat"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -121,7 +189,10 @@ def plan_kv_migration(old_plan, new_plan, states, cfg, wafer) -> KVMigration:
         if fits:
             survivors.append((st.req.rid, st.slot, len(survivors)))
             kv_sum += st.kv_reserved
-            moved_bytes += cfg.cache_bytes_per_seq(st.context_len)
+            # resident_tokens == context_len except mid-chunked-prefill:
+            # a preempted prefill only moves the chunks it completed
+            moved_bytes += cfg.cache_bytes_per_seq(
+                getattr(st, "resident_tokens", st.context_len))
         else:
             evicted.append((st.req.rid, st.slot))
             recompute_tokens += st.context_len
@@ -143,16 +214,21 @@ def plan_kv_migration(old_plan, new_plan, states, cfg, wafer) -> KVMigration:
         + avg_hops * spec.hop_latency if surviving_bytes > 0 else 0.0
 
     # lost shards: rebuilt from host-resident token ids by chunked
-    # re-prefill.  Charged proportionally on the lost token fraction at
-    # the prefill rate — optimistic vs a full re-forward of every
-    # surviving sequence, pessimistic vs doing nothing; the constant is
-    # shared with CostModelExecutor so the sim and the pricing agree.
-    tok_rate = max(new_plan.predicted.get("tokens_per_s", 0.0), 1e-9) \
-        * PREFILL_RECOMPUTE_EFF
+    # re-prefill, priced by re-simulating the *degraded* plan (two
+    # decode-cost anchors on the new die set over the degraded wafer,
+    # chunked passes floored at one step each) — the rebuild rate falls
+    # with the fabric, it is not the healthy plan's predicted rate
+    # scaled by a constant.  PREFILL_RECOMPUTE_EFF survives as the
+    # compute-bound tokens-per-step ratio inside the pricing, shared
+    # with CostModelExecutor so the sim and the pricing agree.
     lost_tokens = lost_frac * sum(
         st.context_len for st in ordered
         if any(st.req.rid == rid for rid, _, _ in survivors))
-    recompute_s = lost_tokens / tok_rate if lost_bytes > 0 else 0.0
+    if lost_bytes > 0:
+        recompute_s, recompute_chunks, recompute_model = \
+            _reprefill_pricing(new_plan, cfg, wafer, lost_tokens)
+    else:
+        recompute_s, recompute_chunks, recompute_model = 0.0, 0, "resim"
 
     return KVMigration(
         survivors=tuple(survivors),
@@ -166,4 +242,6 @@ def plan_kv_migration(old_plan, new_plan, states, cfg, wafer) -> KVMigration:
         kv_tokens_kept=kv_sum,
         recompute_tokens=recompute_tokens,
         tokens_lost=tokens_lost,
+        recompute_chunks=recompute_chunks,
+        recompute_model=recompute_model,
     )

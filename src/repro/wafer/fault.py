@@ -48,8 +48,8 @@ class FaultReport:
         from repro.serve.engine import FaultEvent
         return FaultEvent(time=time,
                           failed_dies=tuple(self.failed_dies),
-                          failed_links=tuple(tuple(l)
-                                             for l in self.failed_links))
+                          failed_links=tuple(tuple(l) for l in
+                                             sorted(self.failed_links)))
 
 
 def inject_faults(wafer: Wafer, *, die_rate: float = 0.0,
@@ -84,6 +84,219 @@ def sample_die_faults(wafer: Wafer, frac: float, *,
     k = min(len(alive), max(1, math.ceil(frac * len(alive))))
     rng = random.Random(seed)
     return FaultReport(failed_dies=sorted(rng.sample(alive, k)))
+
+
+def working_mesh_links(wafer: Wafer) -> list[tuple[int, int]]:
+    """Undirected working mesh links ``(a, b)`` with ``a < b``, sorted —
+    the deterministic sampling universe for link-fault injection (each
+    geometric link appears once; failed links and links touching dead
+    dies are excluded)."""
+    out = []
+    for d in range(wafer.spec.n_dies):
+        if not wafer.alive(d):
+            continue
+        r, c = wafer.rc(d)
+        for dr, dc in ((0, 1), (1, 0)):
+            nr, nc = r + dr, c + dc
+            if nr < wafer.spec.rows and nc < wafer.spec.cols:
+                n = wafer.die(nr, nc)
+                if wafer.link_ok(d, n):
+                    out.append((d, n))
+    return sorted(out)
+
+
+def sample_link_faults(wafer: Wafer, frac: float, *,
+                       seed: int = 0) -> FaultReport:
+    """Kill *exactly* ``ceil(frac * working)`` undirected mesh links,
+    seeded — the link twin of :func:`sample_die_faults`, so fig20's
+    link-severity axis (and the chaos trace generators) can be exact
+    instead of Bernoulli-wobbly."""
+    import math
+    links = working_mesh_links(wafer)
+    if frac <= 0 or not links:
+        return FaultReport()
+    k = min(len(links), max(1, math.ceil(frac * len(links))))
+    rng = random.Random(seed)
+    return FaultReport(failed_links=sorted(rng.sample(links, k)))
+
+
+# ---------------------------------------------------------------------------
+# fault/repair timelines (chaos traces for the elastic serving engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultTrace:
+    """A seeded, serializable fault/repair timeline — the input grammar
+    of chaos-grade elastic serving.
+
+    ``events`` is a time-sorted tuple of
+    :class:`repro.serve.engine.FaultEvent`; the constructors below
+    generate the three canonical shapes ROADMAP item 5 calls out
+    (flapping link, cascade, MTTF/MTTR), all driven by
+    ``random.Random(seed)`` so a trace is a pure function of
+    ``(wafer, seed, knobs)`` and benchmark runs replay bit-for-bit.
+    ``to_json``/``from_json`` round-trip the trace for
+    ``launch/serve.py --fault-trace FILE.json``.
+    """
+
+    events: tuple = ()   # tuple[FaultEvent, ...], time-sorted
+    kind: str = "custom"
+    seed: int = 0
+
+    # -- generators --------------------------------------------------------
+    @classmethod
+    def flapping(cls, wafer: Wafer, *, seed: int = 0,
+                 link: Optional[tuple[int, int]] = None,
+                 start: float = 1.0, period_s: float = 0.5,
+                 n_flaps: int = 4,
+                 settle: str = "failed") -> "FaultTrace":
+        """One link failing and repairing every ``period_s`` seconds:
+        ``n_flaps`` failures, each (except possibly the last) followed by
+        a repair.  ``settle="failed"`` ends the trace with the link down
+        (2·n_flaps − 1 events); ``settle="repaired"`` brings it back up
+        (2·n_flaps events).  ``link=None`` picks a working link with the
+        seeded RNG."""
+        from repro.serve.engine import FaultEvent
+        if settle not in ("failed", "repaired"):
+            raise ValueError(f"settle must be 'failed' or 'repaired', "
+                             f"got {settle!r}")
+        if n_flaps < 1:
+            raise ValueError("n_flaps must be >= 1")
+        if link is None:
+            links = working_mesh_links(wafer)
+            if not links:
+                raise ValueError("no working links to flap")
+            link = random.Random(seed).choice(links)
+        link = tuple(link)
+        n_events = 2 * n_flaps - (1 if settle == "failed" else 0)
+        events = []
+        for j in range(n_events):
+            t = start + j * period_s
+            if j % 2 == 0:
+                events.append(FaultEvent(time=t, failed_links=(link,)))
+            else:
+                events.append(FaultEvent(time=t, repaired_links=(link,)))
+        return cls(events=tuple(events), kind="flapping", seed=seed)
+
+    @classmethod
+    def cascade(cls, wafer: Wafer, *, seed: int = 0, start: float = 1.0,
+                interval_s: float = 0.3, n_events: int = 3,
+                frac_per_event: float = 0.05) -> "FaultTrace":
+        """Correlated die failures landing seconds apart: each event
+        kills exactly ``ceil(frac_per_event · remaining)`` of the dies
+        still alive after the previous event (disjoint, seeded)."""
+        from repro.serve.engine import FaultEvent
+        import math as _math
+        rng = random.Random(seed)
+        alive = list(wafer.alive_dies())
+        events = []
+        for j in range(n_events):
+            if not alive:
+                break
+            k = min(len(alive),
+                    max(1, _math.ceil(frac_per_event * len(alive))))
+            dead = sorted(rng.sample(alive, k))
+            alive = [d for d in alive if d not in set(dead)]
+            events.append(FaultEvent(time=start + j * interval_s,
+                                     failed_dies=tuple(dead)))
+        return cls(events=tuple(events), kind="cascade", seed=seed)
+
+    @classmethod
+    def mttf_mttr(cls, wafer: Wafer, *, seed: int = 0,
+                  horizon_s: float = 30.0, mttf_s: float = 60.0,
+                  mttr_s: float = 5.0,
+                  max_dies: int = 8) -> "FaultTrace":
+        """Exponential fail/repair per die (classic MTTF/MTTR renewal
+        process): up-times ~ Exp(mean ``mttf_s``), down-times ~
+        Exp(mean ``mttr_s``), truncated at ``horizon_s``.  Only the
+        ``max_dies`` lowest-numbered alive dies participate (a full
+        wafer at a short MTTF would bury the engine in events)."""
+        from repro.serve.engine import FaultEvent
+        rng = random.Random(seed)
+        transitions = []  # (time, die, up->down?)
+        for d in sorted(wafer.alive_dies())[:max_dies]:
+            t, up = 0.0, True
+            while True:
+                t += rng.expovariate(1.0 / (mttf_s if up else mttr_s))
+                if t >= horizon_s:
+                    break
+                transitions.append((t, d, up))
+                up = not up
+        transitions.sort()
+        events = [FaultEvent(time=t,
+                             failed_dies=(d,) if going_down else (),
+                             repaired_dies=() if going_down else (d,))
+                  for t, d, going_down in transitions]
+        return cls(events=tuple(events), kind="mttf_mttr", seed=seed)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "seed": self.seed,
+            "events": [{
+                "time": ev.time,
+                "failed_dies": list(ev.failed_dies),
+                "failed_links": [list(l) for l in sorted(ev.failed_links)],
+                "repaired_dies": list(ev.repaired_dies),
+                "repaired_links": [list(l)
+                                   for l in sorted(ev.repaired_links)],
+            } for ev in self.events],
+        }
+
+    @classmethod
+    def from_dict(cls, raw: dict) -> "FaultTrace":
+        from repro.analysis.schema import validate_fault_trace
+        from repro.serve.engine import FaultEvent
+        validate_fault_trace(raw)
+        events = tuple(sorted(
+            (FaultEvent(
+                time=float(e["time"]),
+                failed_dies=tuple(e.get("failed_dies", ())),
+                failed_links=tuple(tuple(l)
+                                   for l in e.get("failed_links", ())),
+                repaired_dies=tuple(e.get("repaired_dies", ())),
+                repaired_links=tuple(tuple(l)
+                                     for l in e.get("repaired_links", ())))
+             for e in raw["events"]), key=lambda ev: ev.time))
+        return cls(events=events, kind=raw.get("kind", "custom"),
+                   seed=int(raw.get("seed", 0)))
+
+    def to_json(self, path: str) -> None:
+        import json
+        import os
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, path: str) -> "FaultTrace":
+        import json
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    # -- helpers -----------------------------------------------------------
+    def final_wafer(self, wafer: Wafer) -> Wafer:
+        """The topology after the whole trace has played out (what a
+        post-settle fresh solve should be compared against)."""
+        for ev in self.events:
+            wafer = wafer.with_faults(ev.failed_dies, ev.failed_links) \
+                         .with_repairs(ev.repaired_dies, ev.repaired_links)
+        return wafer
+
+
+def parse_fault_trace(spec: str, wafer: Wafer) -> FaultTrace:
+    """CLI grammar for ``launch/serve.py --fault-trace``:
+    ``flap:SEED`` / ``cascade:SEED`` (seeded generators on ``wafer``)
+    or a path to a ``FaultTrace`` JSON file."""
+    if spec.startswith("flap:"):
+        return FaultTrace.flapping(wafer, seed=int(spec[5:]))
+    if spec.startswith("cascade:"):
+        return FaultTrace.cascade(wafer, seed=int(spec[8:]))
+    return FaultTrace.from_json(spec)
 
 
 def random_degraded_wafer(seed: int, *, spec=None,
@@ -192,29 +405,47 @@ def throughput_vs_fault_rate(wafer: Wafer, cfg: ModelConfig, batch: int,
                              rates=(0.0, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3,
                                     0.35, 0.4),
                              seed: int = 0,
+                             sampler: str = "bernoulli",
                              ctx_cache: Optional[dict] = None) -> list[dict]:
     """Paper Fig. 20b/20c sweep.  ``kind`` picks what the rate kills:
     ``"core"`` (dies), ``"link"``, or ``"mixed"`` (both at once, the
     worst case §VIII-F classifies).  ``engine`` selects the cost engine
     the re-solve runs on (threaded to :func:`recover`, which keys its
-    context cache on it).  One ``ctx_cache`` spans the whole loop
-    (callers may pass their own to share across kinds/seeds): adjacent
-    rates that kill the same die subset — common at low rates, where the
-    same seed draws the same failures — reuse one context instead of
-    rebuilding invariants per rate."""
+    context cache on it).  ``sampler="bernoulli"`` draws per-element
+    failures at the rate (:func:`inject_faults`, the paper's setup);
+    ``"exact"`` kills exactly ``ceil(rate · population)`` via
+    :func:`sample_die_faults` / :func:`sample_link_faults`, making the
+    severity axis deterministic in *count*, not just in draw.  One
+    ``ctx_cache`` spans the whole loop (callers may pass their own to
+    share across kinds/seeds): adjacent rates that kill the same die
+    subset — common at low rates, where the same seed draws the same
+    failures — reuse one context instead of rebuilding invariants per
+    rate."""
     if kind not in ("core", "link", "mixed"):
         raise ValueError(f"kind must be 'core', 'link' or 'mixed', "
                          f"got {kind!r}")
+    if sampler not in ("bernoulli", "exact"):
+        raise ValueError(f"sampler must be 'bernoulli' or 'exact', "
+                         f"got {sampler!r}")
     out = []
     base = None
     if ctx_cache is None:
         ctx_cache = {}
     for rate in rates:
-        rep = inject_faults(
-            wafer,
-            die_rate=rate if kind in ("core", "mixed") else 0.0,
-            link_rate=rate if kind in ("link", "mixed") else 0.0,
-            seed=seed)
+        if sampler == "exact":
+            rep = FaultReport()
+            if kind in ("core", "mixed"):
+                rep.failed_dies = sample_die_faults(
+                    wafer, rate, seed=seed).failed_dies
+            if kind in ("link", "mixed"):
+                rep.failed_links = sample_link_faults(
+                    wafer, rate, seed=seed).failed_links
+        else:
+            rep = inject_faults(
+                wafer,
+                die_rate=rate if kind in ("core", "mixed") else 0.0,
+                link_rate=rate if kind in ("link", "mixed") else 0.0,
+                seed=seed)
         res = recover(wafer, rep, cfg, batch, seq, engine=engine,
                       ctx_cache=ctx_cache)
         if base is None:

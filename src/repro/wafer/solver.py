@@ -475,7 +475,8 @@ def _wafer_fingerprint(w: Wafer) -> tuple:
 
 def stage_boundary_p2p(wafers: Sequence[Wafer], stage_wafer, stage_dies,
                        boundary_bytes: float, n_micro: int,
-                       inter_wafer_bw: float) -> list[float]:
+                       inter_wafer_bw: float, *,
+                       shared_cut: bool = False) -> list[float]:
     """Per-boundary activation-transfer time for one pipeline layout.
 
     Boundary ``b`` sits between stages ``b`` and ``b+1``.  Boundaries
@@ -483,13 +484,31 @@ def stage_boundary_p2p(wafers: Sequence[Wafer], stage_wafer, stage_dies,
     a wafer (co-located stages, ``pp > n_wafers``) pay the physical D2D
     cut between the two die subsets — ``cut_links · link_bw``, which on a
     4×8 wafer split in half is 8 TB/s, *slower* than the 9 TB/s
-    inter-wafer fabric the old model charged them at."""
+    inter-wafer fabric the old model charged them at.
+
+    ``shared_cut=True`` additionally charges co-located boundaries the
+    contention of *sharing* their wafer's D2D fabric: in a steady 1F1B
+    pipeline every on-wafer boundary streams activations concurrently,
+    so each gets ``1/k`` of its cut when ``k`` on-wafer boundaries live
+    on the same wafer.  The fault-recovery path prices stage replans
+    with this on (``replan_stage``/``recover_multiwafer`` — the replan
+    governor must not see an optimistic boundary when deciding whether
+    a degraded co-located layout is worth keeping); the healthy solve
+    keeps the optimistic un-shared price so existing solve baselines
+    are untouched."""
+    on_wafer = [0] * len(wafers)
+    if shared_cut:
+        for b in range(len(stage_wafer) - 1):
+            if stage_wafer[b] == stage_wafer[b + 1]:
+                on_wafer[stage_wafer[b]] += 1
     out = []
     for b in range(len(stage_wafer) - 1):
         if stage_wafer[b] == stage_wafer[b + 1]:
             w = wafers[stage_wafer[b]]
             cut = max(w.cut_links(stage_dies[b], stage_dies[b + 1]), 1)
             bw = cut * w.spec.link_bw
+            if shared_cut:
+                bw /= max(on_wafer[stage_wafer[b]], 1)
         else:
             bw = inter_wafer_bw
         out.append(boundary_bytes / n_micro / bw)

@@ -281,3 +281,18 @@ class Wafer:
             fl.add((b, a))
         return Wafer(self.spec, frozenset(set(self.failed_dies) | set(dies)),
                      frozenset(fl))
+
+    def with_repairs(self, dies: Iterable[int] = (),
+                     links: Iterable[Link] = ()) -> "Wafer":
+        """Inverse of :meth:`with_faults`: bring dies/links back online
+        (a repaired link clears both directions; repairing healthy
+        hardware is a no-op).  Fault/repair timelines — flapping links,
+        dies returning after retraining — are composed from these two
+        primitives."""
+        fl = set(self.failed_links)
+        for a, b in links:
+            fl.discard((a, b))
+            fl.discard((b, a))
+        return Wafer(self.spec,
+                     frozenset(set(self.failed_dies) - set(dies)),
+                     frozenset(fl))

@@ -1,0 +1,394 @@
+"""Chaos-grade elastic serving: fault/repair trace generators (flapping
+link, cascade, MTTF/MTTR) and their JSON round-trip + schema gate, link
+repair as the inverse of link fault, exact link-fault sampling, the
+replan governor's decision table (debounce cancel, hysteresis, forced
+plan-die-dead, backoff deferral, budget exhaustion, solver-free cached
+revert), a governed-vs-ungoverned flap through the live engine, and
+intra-step (chunked) prefill preemption."""
+
+import math
+
+import pytest
+
+from repro.configs.paper_models import TABLE_II
+from repro.core.plan import PLAN_STATS, compile_serve_plan, reset_plan_stats
+from repro.serve.engine import (FaultEvent, CostModelExecutor, Request,
+                                ServeEngine, VirtualClock)
+from repro.serve.governor import (GovernorConfig, ReplanGovernor,
+                                  predict_plan_throughput)
+from repro.wafer.fault import (FaultTrace, parse_fault_trace,
+                               sample_link_faults, working_mesh_links)
+from repro.wafer.topology import Wafer, WaferSpec
+
+CFG, _ = TABLE_II["gpt3-6.7b"]
+MAX_BATCH, MAX_SEQ = 8, 256
+
+
+@pytest.fixture(autouse=True)
+def _fresh_stats():
+    reset_plan_stats()
+    yield
+    reset_plan_stats()
+
+
+@pytest.fixture(scope="module")
+def base(tmp_path_factory):
+    """One healthy plan + shared fault-keyed cache for the whole module
+    (every governor/engine test replans into the same cache)."""
+    cache = str(tmp_path_factory.mktemp("chaos_plans"))
+    w = Wafer(WaferSpec())
+    plan = compile_serve_plan(w, CFG, MAX_BATCH, MAX_SEQ, cache_dir=cache)
+    return w, plan, cache
+
+
+LINK = working_mesh_links(Wafer(WaferSpec()))[0]
+
+
+# ---------------------------------------------------------------------------
+# trace generators
+# ---------------------------------------------------------------------------
+
+
+def test_flapping_trace_shape_and_determinism():
+    w = Wafer(WaferSpec())
+    t = FaultTrace.flapping(w, seed=3, link=LINK, start=1.0, period_s=0.5,
+                            n_flaps=5, settle="failed")
+    assert t.kind == "flapping" and len(t.events) == 9
+    times = [ev.time for ev in t.events]
+    assert times == sorted(times) and times[0] == 1.0
+    for i, ev in enumerate(t.events):
+        if i % 2 == 0:  # fail edge
+            assert ev.failed_links == (LINK,) and not ev.repaired_links
+        else:           # repair edge
+            assert ev.repaired_links == (LINK,) and not ev.failed_links
+        assert not ev.failed_dies and not ev.repaired_dies
+    assert t.to_dict() == FaultTrace.flapping(
+        w, seed=3, link=LINK, start=1.0, period_s=0.5, n_flaps=5,
+        settle="failed").to_dict()
+    # settles failed: the link is down in the final topology
+    assert LINK in t.final_wafer(w).failed_links
+    # no explicit link: the seed picks one from the working mesh
+    seeded = FaultTrace.flapping(w, seed=7)
+    (link,) = seeded.events[0].failed_links
+    assert link in working_mesh_links(w)
+
+
+def test_flapping_settle_repaired():
+    w = Wafer(WaferSpec())
+    t = FaultTrace.flapping(w, seed=3, link=LINK, n_flaps=3,
+                            settle="repaired")
+    assert len(t.events) == 6  # every failure gets its repair
+    assert t.final_wafer(w).failed_links == w.failed_links
+
+
+def test_cascade_trace_disjoint_and_seeded():
+    w = Wafer(WaferSpec())
+    t = FaultTrace.cascade(w, seed=5, start=2.0, interval_s=0.3,
+                           n_events=3, frac_per_event=0.1)
+    assert t.kind == "cascade" and len(t.events) == 3
+    seen: set = set()
+    alive = len(w.alive_dies())
+    for ev in t.events:
+        assert ev.failed_dies and not ev.failed_links
+        assert seen.isdisjoint(ev.failed_dies)  # each wave kills fresh dies
+        assert len(ev.failed_dies) == math.ceil(0.1 * alive)
+        alive -= len(ev.failed_dies)
+        seen.update(ev.failed_dies)
+    assert t.to_dict() == FaultTrace.cascade(
+        w, seed=5, start=2.0, interval_s=0.3, n_events=3,
+        frac_per_event=0.1).to_dict()
+
+
+def test_mttf_mttr_alternates_and_bounded():
+    w = Wafer(WaferSpec())
+    t = FaultTrace.mttf_mttr(w, seed=1, horizon_s=30.0, mttf_s=10.0,
+                             mttr_s=2.0, max_dies=4)
+    assert t.kind == "mttf_mttr" and t.events
+    up: dict = {}
+    for ev in t.events:
+        assert ev.time <= 30.0
+        for d in ev.failed_dies:
+            assert up.get(d, True)   # a die must be up to fail
+            up[d] = False
+        for d in ev.repaired_dies:
+            assert not up.get(d, True)  # and down to be repaired
+            up[d] = True
+    assert t.to_dict() == FaultTrace.mttf_mttr(
+        w, seed=1, horizon_s=30.0, mttf_s=10.0, mttr_s=2.0,
+        max_dies=4).to_dict()
+
+
+def test_final_wafer_and_with_repairs_inverse():
+    w = Wafer(WaferSpec())
+    dies, links = (3, 7), (LINK,)
+    broken = w.with_faults(dies, links)
+    assert not broken.alive(3) and LINK in broken.failed_links
+    healed = broken.with_repairs(dies, links)
+    assert healed.alive_dies() == w.alive_dies()
+    assert healed.failed_links == w.failed_links
+    # repairing healthy hardware is a no-op, not an error
+    assert w.with_repairs(dies, links).alive_dies() == w.alive_dies()
+
+
+def test_sample_link_faults_exact_and_deterministic():
+    w = Wafer(WaferSpec())
+    universe = working_mesh_links(w)
+    for frac in (0.01, 0.1, 0.25):
+        rep = sample_link_faults(w, frac, seed=3)
+        assert len(rep.failed_links) == min(
+            len(universe), max(1, math.ceil(frac * len(universe))))
+        assert set(rep.failed_links) <= set(universe)
+        assert list(rep.failed_links) == sorted(rep.failed_links)
+        assert sample_link_faults(w, frac, seed=3).failed_links \
+            == rep.failed_links
+    assert sample_link_faults(w, 0.25, seed=4).failed_links \
+        != sample_link_faults(w, 0.25, seed=3).failed_links
+    assert not sample_link_faults(w, 0.0).failed_links
+    # the event view carries links, not dies
+    ev = sample_link_faults(w, 0.1, seed=0).as_event(1.5)
+    assert ev.time == 1.5 and ev.failed_links and not ev.failed_dies
+
+
+# ---------------------------------------------------------------------------
+# serialization: round-trip + schema gate + CLI grammar
+# ---------------------------------------------------------------------------
+
+
+def test_trace_json_roundtrip(tmp_path):
+    w = Wafer(WaferSpec())
+    t = FaultTrace.flapping(w, seed=9, link=LINK, n_flaps=3)
+    path = str(tmp_path / "trace.json")
+    t.to_json(path)
+    back = FaultTrace.from_json(path)
+    assert back.to_dict() == t.to_dict()
+    assert back.kind == "flapping" and back.seed == 9
+
+
+@pytest.mark.parametrize("raw, hint", [
+    ({"events": [{"time": 1.0, "repared_dies": [1]}]}, "repared_dies"),
+    ({"events": [{"failed_dies": [1]}]}, "time"),
+    ({"events": [{"time": "soon"}]}, "time"),
+    ({"kind": "flapping"}, "events"),
+    ({"events": [{"time": 1.0, "failed_links": [[1, 2, 3]]}]}, "links"),
+])
+def test_trace_schema_rejects_malformed(raw, hint):
+    """A malformed trace fails loudly at load — a typo'd repair key must
+    not silently drop the repair from the timeline."""
+    with pytest.raises(ValueError, match="invalid fault trace"):
+        FaultTrace.from_dict(raw)
+
+
+def test_parse_fault_trace_grammar(tmp_path):
+    w = Wafer(WaferSpec())
+    assert parse_fault_trace("flap:7", w).kind == "flapping"
+    assert parse_fault_trace("cascade:5", w).kind == "cascade"
+    path = str(tmp_path / "custom.json")
+    FaultTrace.flapping(w, seed=2, link=LINK).to_json(path)
+    assert parse_fault_trace(path, w).kind == "flapping"
+    with pytest.raises(OSError):
+        parse_fault_trace(str(tmp_path / "missing.json"), w)
+
+
+# ---------------------------------------------------------------------------
+# governor decision table (unit level: one governor, hand-fed events)
+# ---------------------------------------------------------------------------
+
+
+def _gov(**kw):
+    kw.setdefault("coalesce_s", 0.1)
+    return ReplanGovernor(GovernorConfig(**kw))
+
+
+def test_governor_coalesced_cancel_noop(base):
+    w, plan, cache = base
+    gov = _gov()
+    gov.observe(FaultEvent(time=1.0, failed_links=(LINK,)))
+    gov.observe(FaultEvent(time=1.05, repaired_links=(LINK,)))
+    # window still open: no decision yet
+    assert gov.decide(1.1, plan=plan, wafer=w, cfg=CFG,
+                      cache_dir=cache) is None
+    dec = gov.decide(1.2, plan=plan, wafer=w, cfg=CFG, cache_dir=cache)
+    assert dec.action == "noop" and dec.reason == "coalesced-cancel"
+    assert gov.pending == 0
+    (ev,) = gov.events
+    assert ev.n_coalesced == 2
+
+
+def test_governor_hysteresis_apply(base):
+    """A single mesh link at Table-I bandwidth carries so little decode
+    traffic that losing it is below any sane hysteresis — the governor
+    absorbs the fault without replanning."""
+    w, plan, cache = base
+    gov = _gov()  # default 5% hysteresis
+    gov.observe(FaultEvent(time=1.0, failed_links=(LINK,)))
+    dec = gov.decide(2.0, plan=plan, wafer=w, cfg=CFG, cache_dir=cache)
+    assert dec.action == "apply" and dec.reason == "hysteresis"
+    assert abs(gov.events[-1].capacity_delta) < 0.05
+    assert gov.events[-1].thr_ref > 0
+
+
+def test_governor_forced_replan_overrides_backoff(base):
+    w, plan, cache = base
+    gov = _gov(replan_budget=0)     # no elective budget at all
+    gov._next_allowed = 1e9         # and a fully armed backoff
+    dead = plan.plan.alive_dies[0]
+    gov.observe(FaultEvent(time=1.0, failed_dies=(dead,)))
+    dec = gov.decide(2.0, plan=plan, wafer=w, cfg=CFG, cache_dir=cache)
+    # correctness overrides both: the plan cannot run on a dead die
+    assert dec.action == "replan" and dec.reason == "plan-die-dead"
+    assert gov.events[-1].capacity_delta == 1.0
+
+
+def test_governor_backoff_defers_and_budget_exhausts(base):
+    w, plan, cache = base
+    # hysteresis 0: every net change is "worth" an elective replan, so
+    # the budget/backoff machinery is what's under test
+    gov = _gov(hysteresis=0.0, replan_budget=1, backoff_base_s=100.0,
+               window_s=1e9)  # huge window: no quiet-period budget refresh
+    gov.observe(FaultEvent(time=1.0, failed_links=(LINK,)))
+    dec = gov.decide(2.0, plan=plan, wafer=w, cfg=CFG, cache_dir=cache)
+    assert dec.action == "replan"   # burns the whole budget
+    w1 = w.with_faults((), (LINK,))
+    other = working_mesh_links(w1)[0]
+    gov.observe(FaultEvent(time=3.0, failed_links=(other,)))
+    # inside the armed backoff: deferred (logged once), not decided
+    assert gov.decide(4.0, plan=plan, wafer=w1, cfg=CFG,
+                      cache_dir=cache) is None
+    assert gov.events[-1].action == "defer"
+    assert gov.events[-1].reason == "backoff"
+    assert gov.pending == 1         # the window stays open
+    # past the backoff the budget is spent: absorb, don't replan
+    dec = gov.decide(200.0, plan=plan, wafer=w1, cfg=CFG, cache_dir=cache)
+    assert dec.action == "apply" and dec.reason == "budget-exhausted"
+
+
+def test_governor_cached_revert_is_free(base):
+    """A repair that reverts to an already-cached plan replans without a
+    solver call and without burning elective budget."""
+    w, plan, cache = base
+    broken = w.with_faults((), (LINK,))
+    degraded = compile_serve_plan(broken, CFG, MAX_BATCH, MAX_SEQ,
+                                  cache_dir=cache)
+    assert degraded.plan_hash != plan.plan_hash
+    # make the revert unambiguously an upgrade (predicted is advisory
+    # telemetry, outside the plan hash)
+    degraded.predicted["tokens_per_s"] = \
+        plan.predicted["tokens_per_s"] * 0.9
+    gov = _gov(replan_budget=1)
+    gov.observe(FaultEvent(time=1.0, repaired_links=(LINK,)))
+    solves = PLAN_STATS["solver_calls"]
+    dec = gov.decide(2.0, plan=degraded, wafer=broken, cfg=CFG,
+                     cache_dir=cache)
+    assert dec.action == "replan" and dec.reason == "revert-cached"
+    assert dec.cached
+    assert PLAN_STATS["solver_calls"] == solves  # probe never solves
+    assert gov.events[-1].replans_in_window == 0  # no budget burned
+    assert gov.events[-1].backoff_s > 0  # but backoff still arms
+
+
+def test_predict_plan_throughput_zero_on_dead_plan_die(base):
+    w, plan, _ = base
+    dead = plan.plan.alive_dies[0]
+    assert predict_plan_throughput(plan, CFG, w.with_faults((dead,), ())) \
+        == 0.0
+    assert predict_plan_throughput(plan, CFG, w) > 0
+
+
+# ---------------------------------------------------------------------------
+# engine integration: a governed flap vs the ungoverned legacy path
+# ---------------------------------------------------------------------------
+
+
+def _reqs(n, prompt=200, gen=56):
+    return [Request(rid=i, arrival=0.0, prompt_len=prompt,
+                    max_new_tokens=gen) for i in range(n)]
+
+
+def test_governed_flap_replans_less_than_ungoverned(base):
+    w, plan, cache = base
+    lat = plan.predicted["token_latency"]
+    trace = FaultTrace.flapping(w, seed=0, link=LINK, start=lat * 40,
+                                period_s=lat * 8, n_flaps=3,
+                                settle="failed")
+    assert len(trace.events) == 5
+
+    def serve(governor):
+        eng = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                          clock=VirtualClock(), cfg=CFG, wafer=w,
+                          faults=trace.events, governor=governor,
+                          plan_cache_dir=cache)
+        return eng, eng.run(_reqs(24))
+
+    gov_cfg = GovernorConfig(coalesce_s=lat, hysteresis=0.0,
+                             backoff_base_s=lat * 20, replan_budget=1,
+                             window_s=1e9)
+    eng_g, rep_g = serve(gov_cfg)
+    eng_u, rep_u = serve(None)
+    # ungoverned: one full replan+migration per timeline edge
+    assert rep_u.n_replans == 5 and not rep_u.governor
+    # governed: the budget+backoff clamp the thrash (1 elective replan,
+    # plus at most one solver-free cached revert)
+    assert 1 <= rep_g.n_replans <= 2 < rep_u.n_replans
+    actions = [ge["action"] for ge in rep_g.governor]
+    assert "replan" in actions
+    assert set(actions) <= {"replan", "apply", "noop", "defer"}
+    assert len(rep_g.governor) >= rep_g.n_replans
+    for rep in (rep_g, rep_u):  # chaos never drops work
+        assert rep.n_finished == 24
+        assert rep.n_readmitted == rep.n_evicted
+    # both runs end on the settled (link-failed) topology
+    assert LINK in trace.final_wafer(w).failed_links
+
+
+# ---------------------------------------------------------------------------
+# intra-step prefill preemption (chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_fault_free_equivalence(base):
+    """Chunking splits the prefill duration without changing totals: the
+    fault-free run produces the identical request trace."""
+    w, plan, cache = base
+
+    def serve(chunk):
+        eng = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                          clock=VirtualClock(),
+                          prefill_chunk_tokens=chunk)
+        return eng.run(_reqs(16, gen=24))
+
+    whole, chunked = serve(None), serve(16)
+    assert chunked.trace_hash == whole.trace_hash
+    assert chunked.generated_tokens == whole.generated_tokens
+    assert chunked.n_finished == whole.n_finished == 16
+    assert chunked.makespan == pytest.approx(whole.makespan, rel=1e-6)
+
+
+def test_chunked_prefill_preempts_mid_prefill(base):
+    """A fault landing mid-prefill preempts at a chunk boundary: at
+    recovery time some request is checkpointed with part of its prompt
+    resident (0 < prefilled_tokens < prompt_len), and every request
+    still finishes."""
+    w, plan, cache = base
+    lat = plan.predicted["token_latency"]
+    # the first admission wave prefills 8×200 prompt tokens ≈ 100·lat
+    # (prefill_eff=16): a fault at 2·lat lands inside it
+    fault = FaultEvent(time=lat * 2, failed_links=(LINK,))
+    partial: list[int] = []
+
+    def on_recovery(engine, rec):
+        partial.extend(
+            st.prefilled_tokens
+            for st in engine.sched.active.values()
+            if st.tokens_done == 0
+            and 0 < st.prefilled_tokens < st.req.prompt_len)
+
+    eng = ServeEngine(plan, CostModelExecutor(plan, CFG, w),
+                      clock=VirtualClock(), cfg=CFG, wafer=w,
+                      faults=[fault], prefill_chunk_tokens=16,
+                      plan_cache_dir=cache, on_recovery=on_recovery)
+    rep = eng.run(_reqs(16, gen=24))
+    assert rep.n_replans == 1
+    assert partial, "no request was preempted mid-prefill"
+    assert all(p % 16 == 0 for p in partial)  # chunk-boundary checkpoint
+    assert rep.n_finished == 16
+    assert rep.n_readmitted == rep.n_evicted
