@@ -95,7 +95,7 @@ def test_corpus_host_helper_called_from_jitted_body():
     pinned numpy helper."""
     src = mutate(read(SIM_PY),
                  "        tok = ob(B / dp)",
-                 '        tok = ob(B / dp)\n'
+                 "        tok = ob(B / dp)\n"
                  '        sel = _stream_select("auto", tok, tok)')
     vs = lint_source(src, SIM_PY)
     assert rules_of(vs) == {RULE_TIER_PURITY}
