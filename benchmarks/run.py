@@ -9,7 +9,10 @@ pytest, the ``search/engine_baseline`` drift check, the fig19
 multi-wafer smoke (GPT-3 175B ×2 through the solve→plan→schedule
 pipeline), the ``serve/decode_baseline`` gate (decode solve +
 continuous-batching scheduler + serving cost model, pinned by
-plan/trace hashes), the ``serve/fault_recovery`` gate (mid-run die
+plan/trace hashes), the ``serve/moe`` gate (expert-parallel decode:
+the solver must keep picking — and winning with — ep>1 on the MoE
+archs, with placement and router-drop accounting pinned), the
+``serve/fault_recovery`` gate (mid-run die
 fault → live replan → KV migration, pinned by trace/plan hashes and
 recovery metrics), the ``serve/chaos`` gate (seeded flapping-link
 timeline through the replan governor: bounded replans, settle parity
@@ -38,6 +41,7 @@ BENCHES = [
     "fig21_costmodel",
     "search_time",
     "serve_decode",
+    "serve_moe",
     "serve_fault",
     "serve_chaos",
     "kernel_bench",
@@ -167,6 +171,18 @@ def check() -> None:
     except Exception as e:
         traceback.print_exc()
         gates.append(("serve/decode_baseline", False, repr(e)))
+
+    print("== serve/moe (expert-parallel decode) drift ==", flush=True)
+    try:
+        from benchmarks.serve_moe import (check_gate as moe_gate,
+                                          run as moe_run)
+        rows, _, baseline = moe_run(fast=True)
+        ok, detail = moe_gate(rows, baseline)
+        print(f"serve_moe {detail} -> {'OK' if ok else 'DRIFT'}")
+        gates.append(("serve/moe", ok, detail))
+    except Exception as e:
+        traceback.print_exc()
+        gates.append(("serve/moe", False, repr(e)))
 
     print("== serve/fault_recovery drift ==", flush=True)
     try:

@@ -1,0 +1,223 @@
+"""Expert-parallel MoE serving benchmark: {model} × {ep on, ep off}.
+
+For every MoE architecture the decode solver compiles two ServePlans on
+the full wafer — one free to grow an expert-parallel degree
+(``allow_ep=True``) and one pinned to the pre-EP layout space — and the
+continuous-batching engine serves the same seeded Poisson workload under
+each.  Everything runs on the cost-model executor with a virtual clock,
+so plan hashes, admission traces, router-drop statistics and
+latency/throughput numbers are all deterministic.
+
+Recorded numbers live in ``results/bench/serve_moe.json`` (with a
+flat-row CSV twin ``serve_moe_sweep.csv``); ``baseline`` is the
+committed drift reference (refresh deliberately with ``--rebaseline``).
+``run(fast=True)`` feeds the ``serve/moe`` gate in ``benchmarks/run.py
+--check``, which pins
+
+* the solver's EP decision per model (plan hashes, chosen ep),
+* the structural claim that EP *wins*: on the strict-win models the
+  ep>1 plan's predicted TPOT must beat the best ep=1 plan's,
+* the scheduler's admission behaviour (trace hashes), and
+* the router accounting: overflow drops must be surfaced, not silent.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import platform
+
+from benchmarks.common import RESULTS_DIR, csv_row
+from repro.configs import get_config
+from repro.core.plan import compile_serve_plan
+from repro.serve.engine import (CostModelExecutor, ServeEngine,
+                                VirtualClock, poisson_arrivals)
+from repro.wafer.topology import Wafer, WaferSpec
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "bench", "serve_moe.json")
+CSV_PATH = os.path.join(RESULTS_DIR, "serve_moe_sweep.csv")
+MODELS = ("olmoe-1b-7b", "qwen3-moe-235b-a22b", "deepseek-v3-moe")
+# models where the EP plan must *strictly* beat the best ep=1 plan on
+# predicted TPOT (qwen3's decode is weight-read-bound at wafer scale and
+# legitimately ties, so it is swept but not strict-gated)
+STRICT_WIN = ("olmoe-1b-7b", "deepseek-v3-moe")
+MAX_BATCH = 64
+PROMPT, MAX_NEW = 128, 64
+MAX_SEQ = 256
+LOAD = 0.7  # arrival rate as a fraction of plan capacity
+N_REQUESTS = 80
+SEED = 11
+
+CSV_FIELDS = ("model", "allow_ep", "ep", "decode_mesh", "plan_hash",
+              "token_latency_pred", "tokens_per_s", "trace_hash",
+              "n_finished", "tpot_p99", "moe_routed_tokens",
+              "moe_dropped_tokens", "moe_drop_rate", "expert_load_cv",
+              "a2a_bytes_per_token", "n_placement_groups")
+
+
+def _row(name: str, allow_ep: bool, wafer) -> dict:
+    cfg = get_config(name)
+    # fresh solve every run: the gate must catch solver drift, not
+    # replay a cached plan
+    plan = compile_serve_plan(wafer, cfg, MAX_BATCH, MAX_SEQ,
+                              use_cache=False, allow_ep=allow_ep)
+    tok_lat = plan.predicted["token_latency"]
+    rate = LOAD * plan.predicted["tokens_per_s"] / MAX_NEW
+    reqs = poisson_arrivals(N_REQUESTS, rate, seed=SEED,
+                            prompt_len=PROMPT, max_new_tokens=MAX_NEW)
+    ex = CostModelExecutor(plan, cfg, wafer)
+    rep = ServeEngine(plan, ex, clock=VirtualClock(), cfg=cfg).run(reqs)
+    row = {"model": name, "allow_ep": allow_ep, "ep": plan.ep,
+           "decode_mesh": list(plan.plan.degrees_tuple()),
+           "plan_hash": plan.plan_hash,
+           "token_latency_pred": tok_lat,
+           "a2a_bytes_per_token": plan.a2a_bytes_per_token,
+           "n_placement_groups": len(plan.expert_placement)}
+    row.update(rep.to_dict())
+    return row
+
+
+def _write_csv(rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(CSV_PATH, "w") as f:
+        f.write(",".join(CSV_FIELDS) + "\n")
+        for r in rows:
+            f.write(",".join(
+                "/".join(str(x) for x in r[k])
+                if isinstance(r[k], (list, tuple)) else str(r[k])
+                for k in CSV_FIELDS) + "\n")
+
+
+def run(fast: bool = False, rebaseline: bool = False):
+    wafer = Wafer(WaferSpec())
+    prev = None
+    try:
+        with open(BENCH_PATH) as f:
+            prev = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    prev_baseline = (prev or {}).get("baseline")
+
+    models = STRICT_WIN if fast else MODELS
+    rows = []
+    for name in models:
+        for allow_ep in (True, False):
+            rows.append(_row(name, allow_ep, wafer))
+
+    def key(r):
+        return f"{r['model']}@ep={'on' if r['allow_ep'] else 'off'}"
+
+    lat = {(r["model"], r["allow_ep"]): r["token_latency_pred"]
+           for r in rows}
+    summary = {
+        "per_row_plan_hash": {key(r): r["plan_hash"] for r in rows},
+        "per_row_trace": {key(r): r["trace_hash"] for r in rows},
+        "per_row_tokens_per_s": {key(r): r["tokens_per_s"] for r in rows},
+        "per_row_drop_rate": {key(r): r["moe_drop_rate"] for r in rows},
+        "chosen_ep": {key(r): r["ep"] for r in rows},
+        "ep_strict_win": {m: lat[(m, True)] < lat[(m, False)]
+                          for m in models if (m, True) in lat},
+        "all_finished": all(r["n_finished"] == N_REQUESTS for r in rows),
+    }
+    if rebaseline or prev_baseline is None:
+        baseline = summary
+    else:
+        baseline = prev_baseline
+
+    if not fast:  # a fast gate run must not overwrite the full record
+        _write_csv(rows)
+        out = {"machine": platform.machine(),
+               "python": platform.python_version(),
+               "workload": {"max_batch": MAX_BATCH, "max_seq": MAX_SEQ,
+                            "prompt": PROMPT, "max_new": MAX_NEW,
+                            "load": LOAD, "n_requests": N_REQUESTS,
+                            "seed": SEED},
+               "rows": rows, "summary": summary, "baseline": baseline}
+        if rebaseline and prev_baseline is not None:
+            out["baseline_prev"] = (prev or {}).get("baseline_prev") \
+                or prev_baseline
+        elif prev and prev.get("baseline_prev"):
+            out["baseline_prev"] = prev["baseline_prev"]
+        os.makedirs(os.path.dirname(BENCH_PATH), exist_ok=True)
+        with open(BENCH_PATH, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    return rows, summary, prev_baseline if fast else baseline
+
+
+def check_gate(rows, baseline) -> tuple[bool, str]:
+    """The serve/moe drift verdict for one (fast) run.
+
+    Structural invariants hold with or without a baseline: the solver
+    must pick ep>1 (and strictly win on predicted TPOT) for the
+    STRICT_WIN models, EP plans must carry a placement, and router
+    overflow must be accounted.  With a baseline, plan/trace hashes and
+    throughput/drop-rate numbers are additionally pinned.
+    """
+    probs = []
+    lat = {(r["model"], r["allow_ep"]): r["token_latency_pred"]
+           for r in rows}
+    for r in rows:
+        key = f"{r['model']}@ep={'on' if r['allow_ep'] else 'off'}"
+        if r["allow_ep"] and r["model"] in STRICT_WIN:
+            if r["ep"] <= 1:
+                probs.append(f"{key} solver chose ep={r['ep']}")
+            if not lat[(r["model"], True)] < lat[(r["model"], False)]:
+                probs.append(
+                    f"{key} TPOT {lat[(r['model'], True)]:.3e} not < "
+                    f"ep=1 best {lat[(r['model'], False)]:.3e}")
+        if not r["allow_ep"] and r["ep"] != 1:
+            probs.append(f"{key} has ep={r['ep']} despite allow_ep=False")
+        if r["ep"] > 1 and r["n_placement_groups"] != r["ep"]:
+            probs.append(f"{key} placement has "
+                         f"{r['n_placement_groups']} groups != ep")
+        if r["moe_routed_tokens"] <= 0:
+            probs.append(f"{key} router accounting missing")
+        if r["n_finished"] != N_REQUESTS:
+            probs.append(f"{key} finished {r['n_finished']}/{N_REQUESTS}")
+        if baseline is None:
+            continue
+        bph = baseline.get("per_row_plan_hash", {}).get(key)
+        if bph and bph != r["plan_hash"]:
+            probs.append(f"{key} plan_hash {r['plan_hash']}!={bph}")
+        btr = baseline.get("per_row_trace", {}).get(key)
+        if btr and btr != r["trace_hash"]:
+            probs.append(f"{key} trace {r['trace_hash']}!={btr}")
+        btps = baseline.get("per_row_tokens_per_s", {}).get(key)
+        if btps:
+            ratio = r["tokens_per_s"] / max(btps, 1e-9)
+            if not (0.95 <= ratio <= 1.05):
+                probs.append(f"{key} tokens/s ratio {ratio:.3f}")
+        bdr = baseline.get("per_row_drop_rate", {}).get(key)
+        if bdr is not None and not math.isclose(
+                r["moe_drop_rate"], bdr, rel_tol=0.05, abs_tol=1e-9):
+            probs.append(f"{key} drop_rate {r['moe_drop_rate']:.4f}"
+                         f"!={bdr:.4f}")
+    tag = "no baseline yet; structural checks only" if baseline is None \
+        else "ep-win+plan+trace+drop match"
+    return not probs, "; ".join(probs) or tag
+
+
+def main():
+    import sys
+    rows, summary, baseline = run(rebaseline="--rebaseline"
+                                  in sys.argv[1:])
+    for r in rows:
+        print(csv_row(
+            f"serve_moe/{r['model']}@ep={'on' if r['allow_ep'] else 'off'}",
+            r["token_latency_pred"] * 1e6,
+            f"ep={r['ep']} mesh={tuple(r['decode_mesh'])} "
+            f"tok/s={r['tokens_per_s']:.0f} "
+            f"drop={r['moe_drop_rate']:.3f} "
+            f"load_cv={r['expert_load_cv']:.3f} "
+            f"a2a_B/tok={r['a2a_bytes_per_token']:.0f}"))
+    ok, detail = check_gate(rows, baseline)
+    print(csv_row("serve/moe", 0.0 if ok else 1.0,
+                  f"{'OK' if ok else 'DRIFT'}: {detail}"))
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -101,6 +101,7 @@ MODEL_CONFIG_FIELDS_FALLBACK = frozenset({
     "d_ff", "vocab_size", "d_head", "qkv_bias", "rope_theta",
     "attn_softcap", "logit_softcap", "sliding_window", "layer_pattern",
     "act", "n_experts", "top_k", "capacity_factor", "aux_coef",
+    "n_expert_groups", "top_k_groups",
     "ssm_state", "ssm_head_dim", "ssm_expand", "ssm_chunk",
     "n_enc_layers", "frontend", "frontend_tokens", "tie_embeddings",
     "scale_embed", "norm_eps", "dtype", "source",

@@ -61,6 +61,7 @@ SERVE_PLAN_SCHEMA: dict = {
     "required": [
         "plan", "max_batch", "max_seq", "kv_layout", "kv_bytes_per_die",
         "kv_budget_tokens", "stream_dtype", "prefill_chunk",
+        "ep", "expert_placement", "a2a_bytes_per_token",
         "predicted", "solver", "version",
     ],
     "properties": {
@@ -72,6 +73,10 @@ SERVE_PLAN_SCHEMA: dict = {
         },
         "kv_bytes_per_die": _NUM, "kv_budget_tokens": _INT,
         "stream_dtype": _STR, "prefill_chunk": _INT,
+        "ep": _INT,
+        # die ids per expert group: ep disjoint tuples (empty when ep == 1)
+        "expert_placement": {"type": "array", "items": _INT_ARRAY},
+        "a2a_bytes_per_token": _NUM,
         "predicted": _OBJ, "solver": _OBJ, "version": _INT,
     },
     "additionalProperties": False,

@@ -280,7 +280,79 @@ def _verify_serve_plan(plan: ServePlan, wafer=None,
                       f"kv_layout {lay} disagrees with the decode mesh "
                       f"degrees (dp,tp,sp,tatp)={inner.degrees_tuple()}"))
 
+    out += _check_expert_parallel(plan, cfg)
     out += _check_serve_memory(plan, wafer, cfg)
+    return out
+
+
+def _check_expert_parallel(plan: ServePlan, cfg) -> list[Violation]:
+    """EP legality: degree divisibility, placement partition shape, and
+    recorded all-to-all volume.  Placement must be exactly ``ep``
+    disjoint non-empty die groups drawn from the alive set (a corrupted
+    bijection would route dispatches to dies that host no experts)."""
+    out: list[Violation] = []
+    ep = plan.ep
+    inner = plan.plan
+    if ep < 1:
+        return [_v("serve/ep-invalid", f"ep={ep} must be >= 1")]
+    if ep == 1:
+        if plan.expert_placement:
+            out.append(_v("serve/ep-placement-invalid",
+                          f"ep=1 plan records a non-empty "
+                          f"expert_placement "
+                          f"({len(plan.expert_placement)} groups)"))
+        if plan.a2a_bytes_per_token:
+            out.append(_v("serve/ep-a2a-mismatch",
+                          f"ep=1 plan records a2a_bytes_per_token="
+                          f"{plan.a2a_bytes_per_token}", SEV_WARNING))
+        return out
+
+    if inner.dp % ep:
+        out.append(_v("serve/ep-invalid",
+                      f"ep={ep} does not divide dp={inner.dp}: expert "
+                      f"groups cannot partition the replica positions"))
+    if cfg is not None:
+        if not getattr(cfg, "is_moe", False):
+            out.append(_v("serve/ep-invalid",
+                          f"ep={ep} on a dense model ({inner.arch})"))
+        elif cfg.n_experts % ep:
+            out.append(_v("serve/ep-invalid",
+                          f"ep={ep} does not divide "
+                          f"n_experts={cfg.n_experts}"))
+
+    pl = plan.expert_placement
+    if len(pl) != ep:
+        out.append(_v("serve/ep-placement-invalid",
+                      f"expert_placement has {len(pl)} groups, "
+                      f"expected ep={ep}"))
+        return out
+    empty = [g for g, grp in enumerate(pl) if not grp]
+    alive = set(inner.alive_dies)
+    flat = [d for grp in pl for d in grp]
+    dups = len(flat) != len(set(flat))
+    stray = sorted(set(flat) - alive)
+    if empty or dups or stray:
+        parts = []
+        if empty:
+            parts.append(f"empty groups {empty}")
+        if dups:
+            parts.append("dies shared between groups")
+        if stray:
+            parts.append(f"dies outside the alive set {stray}")
+        out.append(_v("serve/ep-placement-invalid",
+                      f"expert_placement is not a disjoint partition of "
+                      f"alive dies: " + "; ".join(parts)))
+
+    if cfg is not None and getattr(cfg, "is_moe", False) \
+            and cfg.n_experts % ep == 0:
+        from repro.wafer.simulator import BYTES_ACT
+        want = 2 * cfg.top_k * cfg.d_model * BYTES_ACT * (ep - 1) / ep
+        if abs(plan.a2a_bytes_per_token - want) > want * 1e-6 + 1e-9:
+            out.append(_v("serve/ep-a2a-mismatch",
+                          f"recorded a2a_bytes_per_token "
+                          f"{plan.a2a_bytes_per_token:.1f} != "
+                          f"{want:.1f} derived from top_k/d_model/ep",
+                          SEV_WARNING))
     return out
 
 
@@ -306,8 +378,10 @@ def _check_serve_memory(plan: ServePlan, wafer, cfg) -> list[Violation]:
                               plan.plan.engine,
                               dies=list(plan.plan.alive_dies),
                               objective="decode")
+        # decode_degrees() folds the serve plan's ep into the weight
+        # split — per-die expert shards are checked at their EP size
         w, cache_full, ws = decode_memory_components(
-            ctx, plan.plan.parallel_degrees())
+            ctx, plan.decode_degrees())
     except Exception as e:
         return out + [_v("plan/mem-check-failed",
                          f"serve memory recompute failed: {e!r}",
@@ -474,7 +548,8 @@ def _expected_cache_key(plan: AnyPlan, kind: str) -> Optional[str]:
         knobs = (p.stream, p.bidirectional, p.stream_dtype, p.remat)
     elif kind == "splan":
         p = plan.plan
-        knobs = ("decode", plan.stream_dtype, plan.prefill_chunk)
+        knobs = ("decode", plan.stream_dtype, plan.prefill_chunk,
+                 (plan.solver or {}).get("allow_ep", True))
     else:
         return None  # mwplan keys need the full per-wafer fault union
     return plan_cache_key(p.arch, p.batch, p.seq, p.wafer(),

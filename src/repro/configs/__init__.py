@@ -23,6 +23,7 @@ ARCHITECTURES: dict[str, str] = {
     "seamless-m4t-large-v2": "seamless_m4t_large_v2",
     "olmoe-1b-7b": "olmoe_1b_7b",
     "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "deepseek-v3-moe": "deepseek_v3_moe",
     "internvl2-1b": "internvl2_1b",
     "mamba2-780m": "mamba2_780m",
 }
@@ -43,7 +44,7 @@ def get_reduced(arch: str) -> ModelConfig:
 
 
 def all_cells():
-    """Every (arch, shape) cell in the assignment — 40 total.
+    """Every (arch, shape) cell in the assignment.
 
     Yields (arch_id, ModelConfig, ShapeConfig, runnable: bool).
     """

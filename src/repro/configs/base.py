@@ -45,6 +45,12 @@ class ModelConfig:
     capacity_factor: float = 1.25
     aux_coef: float = 0.01  # load-balance loss weight (computed per shard)
     # (for MoE archs, d_ff is the PER-EXPERT hidden dim, as published)
+    # grouped routing (deepseek-v3 style): experts split into
+    # ``n_expert_groups`` contiguous groups, the router first keeps the
+    # ``top_k_groups`` best-scoring groups and only then picks top_k
+    # experts inside them.  0/0 = flat routing over all experts.
+    n_expert_groups: int = 0
+    top_k_groups: int = 0
     # SSM (mamba2 / zamba2) ---------------------------------------------------
     ssm_state: int = 0
     ssm_head_dim: int = 64
@@ -250,6 +256,22 @@ class ParallelConfig:
 def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
     """A tiny same-family config for CPU smoke tests."""
     pat = cfg.layer_pattern
+    # MoE shrink is derived from the full config, not hardcoded: top_k
+    # must stay <= n_experts, and n_experts must keep enough divisors
+    # that expert-parallel sweeps (ep | n_experts) remain satisfiable
+    top_k_red = min(4, cfg.top_k) if cfg.top_k else 0
+    n_experts_red = min(cfg.n_experts, max(8, 2 * top_k_red)) \
+        if cfg.n_experts else 0
+    groups_red = top_k_groups_red = 0
+    if cfg.n_expert_groups:
+        # largest group count dividing the shrunk expert pool that still
+        # lets the grouped router reach top_k experts within its groups
+        for g in range(min(cfg.n_expert_groups, n_experts_red), 0, -1):
+            tkg = min(cfg.top_k_groups, g)
+            if n_experts_red % g == 0 \
+                    and tkg * (n_experts_red // g) >= top_k_red:
+                groups_red, top_k_groups_red = g, tkg
+                break
     small = dict(
         n_layers=max(2, min(4, len(pat))),
         d_model=64,
@@ -259,8 +281,10 @@ def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
         d_ff=128,
         vocab_size=128,
         sliding_window=16 if cfg.sliding_window else None,
-        n_experts=4 if cfg.n_experts else 0,
-        top_k=min(2, cfg.top_k) if cfg.top_k else 0,
+        n_experts=n_experts_red,
+        top_k=top_k_red,
+        n_expert_groups=groups_red,
+        top_k_groups=top_k_groups_red,
         ssm_state=16 if cfg.ssm_state else 0,
         ssm_head_dim=16 if cfg.ssm_state else 64,
         ssm_chunk=8 if cfg.ssm_state else 256,
@@ -269,4 +293,9 @@ def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
         dtype="float32",
     )
     small.update(overrides)
-    return replace(cfg, name=cfg.name + "-smoke", **small)
+    out = replace(cfg, name=cfg.name + "-smoke", **small)
+    if out.n_experts and out.top_k > out.n_experts:
+        # an override shrank the expert pool below top_k — clamp rather
+        # than hand tests a config the router cannot route
+        out = replace(out, top_k=out.n_experts)
+    return out

@@ -1,0 +1,34 @@
+"""DeepSeek-V3-style MoE — 64 routed experts top-6 with grouped routing
+(8 device groups, top-3 groups per token), per-expert d_ff=1408.
+
+A scaled-down stand-in for the V3 routing *shape* (the full model's 256
+experts / MLA attention are out of scope): what matters to the serving
+stack is the grouped router — group-limited top-k concentrates each
+token's experts on fewer EP groups, which changes both the capacity-
+admission statistics and the all-to-all fan-out the placement pass
+optimizes.  [arXiv:2412.19437]"""
+
+from repro.configs.base import ModelConfig, reduced_config
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-moe",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,  # per-expert hidden dim
+    vocab_size=102400,
+    n_experts=64,
+    top_k=6,
+    n_expert_groups=8,
+    top_k_groups=3,
+    act="swiglu",
+    layer_pattern="G",
+    tie_embeddings=False,
+    source="arXiv:2412.19437 (routing shape; scaled-down expert pool)",
+)
+
+
+def reduced():
+    return reduced_config(CONFIG)

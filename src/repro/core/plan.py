@@ -44,7 +44,10 @@ if TYPE_CHECKING:  # annotation-only: runtime imports stay lazy/cycle-free
 # v3: plan_cache_key now folds the full WaferSpec into the identity (it
 # keyed only on the grid shape before, so non-default-spec deployments
 # could alias default-spec entries) — the bump retires every pre-spec key
-PLAN_VERSION = 3
+# v4: expert-parallel decode (ep axis + expert placement + a2a pricing +
+# the distinct-expert HBM read model) changes every MoE decode solve and
+# grows the ServePlan surface — pre-EP serve plans miss and re-solve
+PLAN_VERSION = 4
 
 # observable pipeline counters (reset via reset_plan_stats; the launch
 # drivers print them so "second run hit the cache" is checkable from logs)
@@ -470,6 +473,13 @@ class ServePlan:
     kv_budget_tokens: int
     stream_dtype: str = "native"
     prefill_chunk: int = 4
+    # expert parallelism (MoE decode): number of expert groups, the die
+    # subset hosting each group (ep disjoint tuples partitioning the
+    # mesh; empty when ep == 1), and the dispatch+combine activation
+    # bytes one routed token puts on the fabric
+    ep: int = 1
+    expert_placement: tuple[tuple[int, ...], ...] = ()
+    a2a_bytes_per_token: float = 0.0
     predicted: dict = field(default_factory=dict)
     solver: dict = field(default_factory=dict)
     version: int = PLAN_VERSION
@@ -489,6 +499,7 @@ class ServePlan:
         d = dataclasses.asdict(self)
         d["plan"] = self.plan.to_dict()
         d["kv_layout"] = [list(kv) for kv in self.kv_layout]
+        d["expert_placement"] = [list(g) for g in self.expert_placement]
         return d
 
     @classmethod
@@ -500,6 +511,9 @@ class ServePlan:
         d["plan"] = WaferPlan.from_dict(d["plan"])
         d["kv_layout"] = tuple((str(a), int(v))
                                for a, v in d.get("kv_layout", ()))
+        d["expert_placement"] = tuple(
+            tuple(int(x) for x in grp)
+            for grp in d.get("expert_placement", ()))
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
 
@@ -533,6 +547,12 @@ class ServePlan:
         (there is no backward pass to rematerialize for)."""
         return dataclasses.replace(self.plan.parallel_config(), remat=False)
 
+    def decode_degrees(self) -> "ParallelDegrees":
+        """The solved decode degree tuple *including* the EP axis (the
+        inner WaferPlan only carries the die-consuming dims)."""
+        import dataclasses as _dc
+        return _dc.replace(self.plan.parallel_degrees(), ep=self.ep)
+
     def cache_tokens_per_request(self, prompt_len: int,
                                  max_new_tokens: int) -> int:
         """Budget tokens one request consumes while in flight: its full
@@ -546,7 +566,8 @@ class ServePlan:
             f"ServePlan[{self.plan_hash}] {self.plan.arch} "
             f"max_batch={self.max_batch} max_seq={self.max_seq}",
             f"  decode mesh (dp,tp,sp,tatp)={self.plan.degrees_tuple()} "
-            f"engine={self.plan.engine} codec={self.stream_dtype} "
+            f"ep={self.ep} engine={self.plan.engine} "
+            f"codec={self.stream_dtype} "
             f"prefill_chunk={self.prefill_chunk}",
             f"  kv {self.kv_bytes_per_die / 1e9:.2f} GB/die "
             f"({self.kv_budget_tokens} budget tokens, layout "
@@ -567,22 +588,28 @@ def compile_serve_plan(wafer: "Wafer", cfg: "ModelConfig",
                        stream_dtype: str = "native",
                        prefill_chunk: int = 4, seed: int = 0,
                        tierb: Optional[str] = None,
+                       allow_ep: bool = True,
                        cache_dir: Optional[str] = None,
                        use_cache: bool = True) -> ServePlan:
     """solve(objective="decode") → map → ServePlan, with the same on-disk
     cache discipline as :func:`compile_plan` (any die/link death misses
     and re-solves; ``splan_*.json`` entries never alias train plans).
     ``tierb`` selects the Tier-B backend exactly as in
-    :func:`compile_plan` — backend-invariant, so never part of the key."""
-    from repro.wafer.simulator import StepCostContext, _decode_kv_divisors
-    from repro.wafer.simulator import decode_memory_components
+    :func:`compile_plan` — backend-invariant, so never part of the key.
+    ``allow_ep=False`` pins the decode solve to ``ep=1`` (A/B sweeps of
+    the EP win); it is a solve knob, so it *is* part of the key."""
+    from repro.wafer.simulator import (BYTES_ACT, StepCostContext,
+                                       _decode_expert_placement,
+                                       _decode_kv_divisors,
+                                       decode_memory_components)
     from repro.wafer.solver import dlws_solve
 
     arch = arch or cfg.name
     cache_dir = cache_dir if cache_dir is not None else default_cache_dir()
     key = plan_cache_key(arch, max_batch, max_seq, wafer, dies,
                          engine=engine, space=space,
-                         knobs=("decode", stream_dtype, prefill_chunk))
+                         knobs=("decode", stream_dtype, prefill_chunk,
+                                allow_ep))
     path = os.path.join(cache_dir, f"splan_{key}.json")
     if use_cache and os.path.exists(path):
         plan = _read_cached(ServePlan.load, path, wafer, cfg)
@@ -594,7 +621,7 @@ def compile_serve_plan(wafer: "Wafer", cfg: "ModelConfig",
     PLAN_STATS["solver_calls"] += 1
     sol = dlws_solve(wafer, cfg, max_batch, max_seq, engine=engine,
                      space=space, seed=seed, dies=dies, tierb=tierb,
-                     objective="decode")
+                     objective="decode", allow_ep=allow_ep)
     inner = plan_from_solution(
         wafer, sol, arch=arch, batch=max_batch, seq=max_seq, engine=engine,
         space=space, dies=dies, stream="auto", bidirectional=True,
@@ -608,6 +635,17 @@ def compile_serve_plan(wafer: "Wafer", cfg: "ModelConfig",
     kv_layout = (("dp", deg.dp), ("sp", deg.sp),
                  ("tp", int(min(deg.tp, max(cfg.n_kv_heads, 1)))),
                  ("tatp", deg.tatp))
+    # expert-parallel contract: the topology-aware placement the cost
+    # model priced (which die subset hosts each expert group) plus the
+    # per-token dispatch+combine fabric volume, recorded so the engine
+    # and verifier see exactly what the solve chose
+    expert_placement: tuple = ()
+    a2a_bytes_per_token = 0.0
+    if deg.ep > 1:
+        pl = _decode_expert_placement(ctx, deg)
+        expert_placement = pl.placement
+        a2a_bytes_per_token = (2 * cfg.top_k * cfg.d_model * BYTES_ACT
+                               * (deg.ep - 1) / deg.ep)
     best = sol.best
     # KV-budget cap: when the wafer cannot hold the *full* B×S cache
     # beside the weight shard (degraded meshes mostly — fewer dies means
@@ -635,6 +673,8 @@ def compile_serve_plan(wafer: "Wafer", cfg: "ModelConfig",
         kv_layout=kv_layout, kv_bytes_per_die=kv_bytes,
         kv_budget_tokens=kv_budget,
         stream_dtype=stream_dtype, prefill_chunk=prefill_chunk,
+        ep=deg.ep, expert_placement=expert_placement,
+        a2a_bytes_per_token=a2a_bytes_per_token,
         predicted={
             "token_latency": best.step_time,
             "tokens_per_s": best.throughput,
@@ -647,6 +687,7 @@ def compile_serve_plan(wafer: "Wafer", cfg: "ModelConfig",
             "method": sol.method,
             "search_time_s": sol.search_time_s,
             "evaluated": sol.evaluated,
+            "allow_ep": allow_ep,
         },
     )
     _verify_fresh(plan, wafer, cfg)
@@ -703,7 +744,9 @@ def replan_serve(plan: ServePlan, cfg: "ModelConfig",
             degraded, cfg, max_batch, plan.max_seq, arch=plan.arch,
             engine=plan.plan.engine, space=plan.plan.space,
             stream_dtype=plan.stream_dtype, prefill_chunk=plan.prefill_chunk,
-            seed=seed, tierb=tierb, cache_dir=cache_dir, use_cache=use_cache)
+            seed=seed, tierb=tierb,
+            allow_ep=plan.solver.get("allow_ep", True),
+            cache_dir=cache_dir, use_cache=use_cache)
         if not new.predicted.get("oom") or max_batch <= min_batch:
             return new
         max_batch = max(min_batch, max_batch // 2)
@@ -728,7 +771,8 @@ def cached_serve_plan(plan: ServePlan, cfg: "ModelConfig", wafer: "Wafer",
                          None, engine=plan.plan.engine,
                          space=plan.plan.space,
                          knobs=("decode", plan.stream_dtype,
-                                plan.prefill_chunk))
+                                plan.prefill_chunk,
+                                plan.solver.get("allow_ep", True)))
     path = os.path.join(cache_dir, f"splan_{key}.json")
     if not os.path.exists(path):
         return None

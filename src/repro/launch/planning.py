@@ -50,7 +50,8 @@ def resolve_plan(cfg, batch: int, seq: int, *,
 def resolve_serve_plan(cfg, max_batch: int, max_seq: int, *,
                        plan_path: Optional[str] = None,
                        cache_dir: Optional[str] = None,
-                       failed_dies: Optional[str] = None) \
+                       failed_dies: Optional[str] = None,
+                       allow_ep: bool = True) \
         -> planlib.ServePlan:
     """Serving analogue of :func:`resolve_plan`: explicit ServePlan file
     wins; otherwise ``compile_serve_plan`` runs the decode-objective solve
@@ -70,7 +71,8 @@ def resolve_serve_plan(cfg, max_batch: int, max_seq: int, *,
         wafer = wafer.with_faults(dies=dead)
     before = dict(planlib.PLAN_STATS)
     plan = planlib.compile_serve_plan(wafer, cfg, max_batch, max_seq,
-                                      arch=cfg.name, cache_dir=cache_dir)
+                                      arch=cfg.name, cache_dir=cache_dir,
+                                      allow_ep=allow_ep)
     hit = planlib.PLAN_STATS["cache_hits"] > before["cache_hits"]
     solves = planlib.PLAN_STATS["solver_calls"] - before["solver_calls"]
     src = "cache hit (solver skipped)" if hit \

@@ -220,7 +220,8 @@ def serve_engine(args) -> dict:
                               args.prompt_len + args.max_new,
                               plan_path=args.plan,
                               cache_dir=args.plan_cache,
-                              failed_dies=args.failed_dies)
+                              failed_dies=args.failed_dies,
+                              allow_ep=not args.no_ep)
     print(plan.summary())
     reqs = poisson_arrivals(
         args.requests, args.rate, seed=args.seed,
@@ -378,6 +379,9 @@ def main():
     ap.add_argument("--slo-ttft", type=float, default=None)
     ap.add_argument("--slo-tpot", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-ep", action="store_true",
+                    help="pin the decode solve to ep=1 (disable "
+                         "expert parallelism; A/B against the EP plan)")
     ap.add_argument("--sim", action="store_true",
                     help="cost-model executor (no jax; virtual clock)")
     # elastic serving: mid-run fault injection

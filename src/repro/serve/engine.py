@@ -473,6 +473,90 @@ def rolling_peak_throughput(samples: Sequence[tuple],
 
 
 # ---------------------------------------------------------------------------
+# per-expert router accounting (MoE serving)
+# ---------------------------------------------------------------------------
+
+
+class ExpertRouterSim:
+    """Seeded per-iteration router simulation for MoE decode accounting.
+
+    The cost-model executor has no token content to route, but the plan's
+    capacity contract still needs exercising: each decode iteration routes
+    its ``t`` in-flight tokens top-k over the expert pool (grouped
+    routing first keeps ``top_k_groups`` groups, deepseek-v3 style) and
+    admits at most ``cap = max(1, round(t·top_k/E·capacity_factor))``
+    assignments per expert — the exact slot formula of
+    :func:`repro.models.moe.moe_ffn`, so plan-time drop statistics and
+    the jax kernel's drop behaviour share one capacity law.  Assignments
+    over capacity are *dropped and counted*, never silent.
+
+    PURE accounting: seeded rng private to this object, no engine state
+    read or written — admission traces and the sample timeline of a run
+    with accounting are bit-for-bit those of a run without.
+    """
+
+    def __init__(self, cfg, ep: int = 1, *, seed: int = 0):
+        import random
+        self.cfg = cfg
+        self.ep = max(1, int(ep))
+        self.rng = random.Random(seed)
+        self.load = [0] * cfg.n_experts  # admitted assignments per expert
+        self.routed = 0   # token->expert assignments simulated
+        self.dropped = 0  # assignments over expert capacity
+
+    def _route_one(self) -> list[int]:
+        cfg = self.cfg
+        if cfg.n_expert_groups:
+            gsz = cfg.n_experts // cfg.n_expert_groups
+            groups = self.rng.sample(range(cfg.n_expert_groups),
+                                     min(cfg.top_k_groups,
+                                         cfg.n_expert_groups))
+            pool = [g * gsz + j for g in groups for j in range(gsz)]
+            return self.rng.sample(pool, min(cfg.top_k, len(pool)))
+        return self.rng.sample(range(cfg.n_experts), cfg.top_k)
+
+    def observe(self, t: int) -> None:
+        """Route one decode iteration of ``t`` tokens."""
+        if t <= 0:
+            return
+        cfg = self.cfg
+        cap = int(max(1, round(t * cfg.top_k / cfg.n_experts
+                               * cfg.capacity_factor)))
+        counts = [0] * cfg.n_experts
+        for _ in range(t):
+            for e in self._route_one():
+                counts[e] += 1
+                self.routed += 1
+                if counts[e] <= cap:
+                    self.load[e] += 1
+                else:
+                    self.dropped += 1
+
+    @property
+    def drop_rate(self) -> float:
+        return self.dropped / self.routed if self.routed else 0.0
+
+    @property
+    def load_cv(self) -> float:
+        """Coefficient of variation of per-expert admitted load (0 =
+        perfectly balanced)."""
+        mean = sum(self.load) / len(self.load)
+        if mean <= 0:
+            return 0.0
+        var = sum((x - mean) ** 2 for x in self.load) / len(self.load)
+        return math.sqrt(var) / mean
+
+    def ep_group_load(self) -> tuple[int, ...]:
+        """Admitted load per EP expert group (contiguous expert shards,
+        matching the solver's placement); empty when ep == 1."""
+        if self.ep <= 1 or self.cfg.n_experts % self.ep:
+            return ()
+        per = self.cfg.n_experts // self.ep
+        return tuple(sum(self.load[g * per:(g + 1) * per])
+                     for g in range(self.ep))
+
+
+# ---------------------------------------------------------------------------
 # executors
 # ---------------------------------------------------------------------------
 
@@ -507,11 +591,12 @@ class CostModelExecutor:
         """Fit the affine latency surface for ``plan`` on ``wafer`` (run
         at construction, and again by ``migrate`` when a fault swaps the
         plan for one solved on the degraded wafer)."""
-        from repro.wafer.simulator import (ParallelDegrees, StepCostContext,
+        from repro.wafer.simulator import (StepCostContext,
                                            simulate_decode_batch)
         self.plan = plan
-        deg = ParallelDegrees(*plan.plan.degrees_tuple(),
-                              seq_par=plan.plan.seq_par)
+        # decode_degrees() folds the serve plan's ep in, so an EP plan's
+        # latency surface prices the all-to-all + sharded expert reads
+        deg = plan.decode_degrees()
         B, S = plan.max_batch, plan.max_seq
         dies = list(plan.plan.alive_dies)
 
@@ -614,6 +699,14 @@ class ServeReport:
     recovery: tuple = ()     # RecoveryEvent.to_dict() per replan
     n_replans: int = 0       # plan swaps actually executed (== len(recovery))
     governor: tuple = ()     # GovernorEvent.to_dict() per governor decision
+    # MoE router accounting (zero/empty on dense models — defaults keep
+    # pinned dense drift-gate baselines untouched)
+    moe_routed_tokens: int = 0   # token->expert assignments simulated
+    moe_dropped_tokens: int = 0  # assignments over expert capacity
+    moe_drop_rate: float = 0.0
+    expert_load: tuple = ()      # admitted assignments per expert
+    expert_load_cv: float = 0.0  # std/mean of expert_load (imbalance)
+    ep_group_load: tuple = ()    # per-EP-group admitted load (ep > 1)
 
     def to_dict(self) -> dict:
         import dataclasses
@@ -710,6 +803,9 @@ class ServeEngine:
         # only returns final-position logits)
         self._chunked = prefill_chunk_tokens is not None \
             and getattr(executor, "prefill_chunk", None) is not None
+        self.router: Optional[ExpertRouterSim] = None
+        if cfg is not None and getattr(cfg, "is_moe", False):
+            self.router = ExpertRouterSim(cfg, getattr(plan, "ep", 1))
         self._fault_q: deque = deque()
         self.events: list[RecoveryEvent] = []
         # iteration timeline: (t_end, tokens, duration, kind) with kind in
@@ -761,6 +857,10 @@ class ServeEngine:
         self._sample(now, 0, now - t_before, "pause")  # part of the dip
         self.sched.apply_migration(new_plan, mig, now, self.readmission)
         self.plan = new_plan
+        if self.router is not None:
+            # cumulative per-expert loads survive the plan swap (experts
+            # are model-level); only the EP grouping follows the new plan
+            self.router.ep = max(1, getattr(new_plan, "ep", 1))
         old_pred = old_plan.predicted.get("tokens_per_s") or 0.0
         new_pred = new_plan.predicted.get("tokens_per_s") or 0.0
         rec = RecoveryEvent(
@@ -950,6 +1050,8 @@ class ServeEngine:
                 now = clock.advance(dt)
                 sched.mark_decoded(batch, now)
                 self._sample(now, len(batch), now - t_before, "decode")
+                if self.router is not None:
+                    self.router.observe(len(batch))
             elif not prefills:
                 # nothing in flight and head-of-line blocked or queue
                 # empty: jump to the next arrival, scheduled fault, or
@@ -1009,6 +1111,18 @@ class ServeEngine:
             n_replans=len(self.events),
             governor=tuple(ge.to_dict() for ge in self.gov.events)
             if self.gov is not None else (),
+            moe_routed_tokens=self.router.routed
+            if self.router is not None else 0,
+            moe_dropped_tokens=self.router.dropped
+            if self.router is not None else 0,
+            moe_drop_rate=self.router.drop_rate
+            if self.router is not None else 0.0,
+            expert_load=tuple(self.router.load)
+            if self.router is not None else (),
+            expert_load_cv=self.router.load_cv
+            if self.router is not None else 0.0,
+            ep_group_load=self.router.ep_group_load()
+            if self.router is not None else (),
         )
 
 

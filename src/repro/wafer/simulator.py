@@ -84,13 +84,18 @@ class ParallelDegrees:
     sp: int = 1  # sequence/context partition dim (TEMP space)
     tatp: int = 1
     seq_par: bool = False  # Megatron-3 SP flag: tied to the TP groups
+    # expert parallelism (decode objective, MoE only): the dp replicas
+    # split into ep expert groups, each hosting n_experts/ep experts plus
+    # a full copy of the dense (attention) weights.  ep subdivides dp —
+    # it consumes no extra dies, so it stays out of ``total``/``as_tuple``
+    ep: int = 1
 
     def __post_init__(self):
         # precomputed identity key: the solver's memoized evaluation layer
         # looks candidates up millions of times per sweep, so the tuple is
         # built once (frozen dataclass -> via object.__setattr__)
         object.__setattr__(self, "key", (self.dp, self.tp, self.sp,
-                                         self.tatp, self.seq_par))
+                                         self.tatp, self.seq_par, self.ep))
 
     @property
     def total(self) -> int:
@@ -222,6 +227,16 @@ class StepCostContext:
         self.p_layer = _layer_params(cfg)
         self.p_active = _layer_active_params(cfg)
         self.p_total = self.p_layer * self.n_l + cfg.vocab_size * cfg.d_model
+        # MoE dense/expert split (exact ints, zero for dense models): the
+        # EP axis shards only the expert tensors, so the decode path prices
+        # the two groups under different sharding denominators
+        p_expert_layer = (cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+                          if cfg.is_moe else 0)
+        self.p_expert_total = p_expert_layer * self.n_l
+        self.p_dense_total = self.p_total - self.p_expert_total
+        self.p_active_expert = (cfg.top_k * 3 * cfg.d_model * cfg.d_ff
+                                if cfg.is_moe else 0)
+        self.p_active_dense = self.p_active - self.p_active_expert
         self.attn_flops = 12 * self.tokens * seq * cfg.d_model
         self.layer_flops = 6 * self.p_active * self.tokens + self.attn_flops
         self.head_flops = 6 * self.tokens * cfg.d_model * cfg.vocab_size
@@ -358,7 +373,12 @@ class StepCostContext:
                 # same vectorized evaluator serves search and final
                 # scoring (``final`` only pins the recorded evaluation to
                 # the anchored numpy backend)
-                res = simulate_decode_batch(self, missing, final=final)
+                if self.evaluator == "reference":
+                    res = [_decode_reference_ctx(self, d)
+                           for d in missing]
+                else:
+                    res = simulate_decode_batch(self, missing,
+                                                final=final)
             elif self.evaluator == "reference":
                 res = [simulate_step_reference(
                     self.wafer, self.cfg, self.batch, self.seq, d,
@@ -758,7 +778,7 @@ def _pad_rows(a: np.ndarray, ncp: int, fill=0) -> np.ndarray:
 
 
 def _degree_columns(degrees: list) -> tuple:
-    """Columnized ``(dp, tp, sp, ta, seq_par)`` for a candidate list,
+    """Columnized ``(dp, tp, sp, ta, seq_par, ep)`` for a candidate list,
     memoized in ``_DEGREE_ARRAYS`` (identity: the tuple of degree keys)."""
     dkey = tuple(d.key for d in degrees)
     arrs = _DEGREE_ARRAYS.get(dkey)
@@ -767,7 +787,8 @@ def _degree_columns(degrees: list) -> tuple:
                 np.array([d.tp for d in degrees], np.int64),
                 np.array([d.sp for d in degrees], np.int64),
                 np.array([d.tatp for d in degrees], np.int64),
-                np.array([d.seq_par for d in degrees], bool))
+                np.array([d.seq_par for d in degrees], bool),
+                np.array([d.ep for d in degrees], np.int64))
         if len(_DEGREE_ARRAYS) >= _DEGREE_ARRAYS_CAP:
             _DEGREE_ARRAYS.clear()  # cheap full reset; entries are tiny
         _DEGREE_ARRAYS[dkey] = arrs
@@ -783,7 +804,7 @@ def _tierb_jax_struct(ctx: StepCostContext, degrees: list, st: dict,
     all-absent slots — they gather the bank's reserved zero row, add exact
     ``0.0`` everywhere, and are sliced off on return."""
     import jax.numpy as jnp
-    dp, tp, sp, ta, seq_par = _degree_columns(degrees)
+    dp, tp, sp, ta, seq_par, _ep = _degree_columns(degrees)
     deg = tuple(jnp.asarray(_pad_rows(a, ncp, 1)) for a in (dp, tp, sp, ta))
     deg = deg + (jnp.asarray(_pad_rows(seq_par, ncp, False)),)
     stj = {
@@ -881,7 +902,7 @@ def _tierb_jax(ctx: StepCostContext,
     # the candidate-sized stage-2 chains + step fold + power / ratio
     # tail run host-side through the same numpy helpers as the numpy
     # tier (see the kernel comment on XLA's rewrites)
-    dp, tp, sp, ta, seq_par = _degree_columns(degrees)
+    dp, tp, sp, ta, seq_par, _ep = _degree_columns(degrees)
     bidir = ctx.tatp_bidirectional
     spec = ctx.spec
     hopf, sp_hops = st["hopf"], st["sp_hops"]
@@ -949,7 +970,7 @@ def simulate_batch(ctx: StepCostContext, degrees: list[ParallelDegrees], *,
     fsdp = ctx.fsdp
     nC = len(degrees)
 
-    dp, tp, sp, ta, seq_par = _degree_columns(degrees)
+    dp, tp, sp, ta, seq_par, _ep = _degree_columns(degrees)
     feasible = dp * tp * sp * ta <= n_dies
 
     # fused jitted Tier B: search-time evaluations only — final
@@ -2289,7 +2310,15 @@ def decode_memory_components(ctx: StepCostContext, deg: ParallelDegrees) \
     runtime occupancy agree byte-for-byte.
     """
     cfg, n_dies = ctx.cfg, ctx.n_dies
-    w_bytes = BYTES_W * ctx.p_total / min(deg.tp * deg.tatp, n_dies)
+    if deg.ep > 1:
+        # EP shards only the expert tensors (scalar twin of the batched
+        # np.where(ep > 1, ...) select — same ops, same order)
+        w_bytes = (BYTES_W * ctx.p_dense_total
+                   / min(deg.tp * deg.tatp, n_dies)
+                   + BYTES_W * ctx.p_expert_total
+                   / min(deg.tp * deg.tatp * deg.ep, n_dies))
+    else:
+        w_bytes = BYTES_W * ctx.p_total / min(deg.tp * deg.tatp, n_dies)
     kv_div, state_div = _decode_kv_divisors(
         cfg, deg.dp, deg.tp, deg.sp, deg.tatp)
     kv_ctx = ctx.kv_seq_bytes - ctx.state_seq_bytes  # ctx-length-dependent
@@ -2312,6 +2341,25 @@ def _decode_ring_hops(ctx: StepCostContext, deg: ParallelDegrees) \
     return ta_h, sp_h
 
 
+def _decode_expert_placement(ctx: StepCostContext, deg: ParallelDegrees):
+    """Memoized topology-aware expert placement for one EP decode
+    candidate.  The choice is pure topology (degrees + engine + wafer),
+    so it is shared across contexts on the wafer like the group
+    structures; degraded wafers re-key naturally (fault edits clear the
+    wafer caches)."""
+    from repro.wafer.placement import choose_expert_placement
+    wkey = ("_eplace", deg.key, ctx.engine)
+    got = ctx.wafer._groups_cache.get(wkey) \
+        if ctx.wafer.cache_enabled else None
+    if got is None:
+        groups = ctx.groups_for(deg)
+        got = choose_expert_placement(ctx.wafer, groups["dp"],
+                                      deg.dp, deg.ep)
+        if ctx.wafer.cache_enabled:
+            ctx.wafer._groups_cache[wkey] = got
+    return got
+
+
 @lru_cache(maxsize=None)
 def _decode_jax_fn():
     """Build the jitted decode-objective kernel (the fused Tier-B twin of
@@ -2324,14 +2372,23 @@ def _decode_jax_fn():
     ob = jax.lax.optimization_barrier  # see _tierb_jax_fn's fence note
 
     def f(deg, hops, sc):
-        dp, tp, sp, ta = deg
-        ta_hops, sp_hops = hops
+        dp, tp, sp, ta, ep = deg
+        ta_hops, sp_hops, eff = hops
         B, n_dies, n_l = sc["B"], sc["n_dies"], sc["n_l"]
         d_model, kv_heads = sc["d_model"], sc["kv_heads"]
         p_total, p_active = sc["p_total"], sc["p_active"]
         kv_ctx = sc["kv_ctx"]
         tok = ob(B / dp)
-        w_bytes = BYTES_W * p_total / jnp.minimum(tp * ta, n_dies)
+        # EP splits the weight shard: dense tensors shard over tp·ta as
+        # before, expert tensors additionally over ep.  The ep==1 operand
+        # is the pre-EP expression unchanged, so dense candidates stay
+        # bitwise-pinned to the recorded baselines
+        w_bytes = jnp.where(
+            ep > 1,
+            BYTES_W * sc["p_dense_total"] / jnp.minimum(tp * ta, n_dies)
+            + BYTES_W * sc["p_expert_total"]
+            / jnp.minimum(tp * ta * ep, n_dies),
+            BYTES_W * p_total / jnp.minimum(tp * ta, n_dies))
         kv_div = dp * sp * ta * jnp.minimum(tp, kv_heads)
         state_div = dp * ta * tp
         cache_bytes = ob(B * (kv_ctx / kv_div
@@ -2343,7 +2400,15 @@ def _decode_jax_fn():
         attn_flops = 4 * sc["S"] * d_model * tok / (tp * sp * ta)
         t_flops = (lin_flops + attn_flops) / (sc["flops"]
                                               * DECODE_GEMV_EFF)
-        w_read = BYTES_W * p_active / (tp * ta)
+        # MoE weight read: dense tensors once per iteration (shared by the
+        # whole in-flight batch) + the *expected distinct* expert slice —
+        # ``eff`` is computed host-side (transcendental: XLA's pow may
+        # differ in ULP from libm) and shared with the numpy tier
+        w_read = jnp.where(
+            sc["is_moe"] != 0.0,
+            BYTES_W * sc["p_active_dense"] / (tp * ta)
+            + BYTES_W * sc["p_expert_total"] * eff / (tp * ta),
+            BYTES_W * p_active / (tp * ta))
         kv_read = tok * (kv_ctx / n_l) / ob(kv_div / dp)
         t_hbm = (w_read + kv_read) / sc["hbm_bw"]
         t_comp = jnp.maximum(t_flops, t_hbm)
@@ -2386,19 +2451,24 @@ def _decode_scalars(ctx: StepCostContext) -> dict:
                 d_model=cfg.d_model, S=ctx.seq,
                 kv_heads=max(cfg.n_kv_heads, 1))
     flts = dict(p_total=float(ctx.p_total), p_active=float(ctx.p_active),
+                p_dense_total=float(ctx.p_dense_total),
+                p_expert_total=float(ctx.p_expert_total),
+                p_active_dense=float(ctx.p_active_dense),
+                p_active_expert=float(ctx.p_active_expert),
                 kv_ctx=float(ctx.kv_seq_bytes - ctx.state_seq_bytes),
                 state_seq_bytes=float(ctx.state_seq_bytes),
                 hbm_cap=spec.hbm_cap, flops=spec.flops,
                 hbm_bw=spec.hbm_bw, link_bw=spec.link_bw,
                 hop_latency=spec.hop_latency,
                 head_bytes=float(BYTES_W * cfg.d_model * cfg.vocab_size),
-                dec_head_flops=float(ctx.dec_head_flops))
+                dec_head_flops=float(ctx.dec_head_flops),
+                is_moe=1.0 if cfg.is_moe else 0.0)
     return _commit_scalars(ints, flts)
 
 
 def _decode_jax(ctx: StepCostContext, dkey: tuple, arrs: tuple,
-                hkey: tuple, ta_hops: np.ndarray,
-                sp_hops: np.ndarray) -> Optional[np.ndarray]:
+                hkey: tuple, ta_hops: np.ndarray, sp_hops: np.ndarray,
+                eff: np.ndarray) -> Optional[np.ndarray]:
     """Run the jitted decode kernel over one candidate list; returns the
     (11, nC) component matrix or ``None`` when jax is unavailable."""
     global _TIERB_JAX_OK
@@ -2415,7 +2485,9 @@ def _decode_jax(ctx: StepCostContext, dkey: tuple, arrs: tuple,
     ncp = max(8, 1 << (nC - 1).bit_length())
     jdeg = _DEGREE_ARRAYS_JAX.get(dkey)
     if jdeg is None:
-        jdeg = tuple(jnp.asarray(_pad_rows(a, ncp, 1)) for a in arrs[:4])
+        # (dp, tp, sp, ta, ep) — seq_par (arrs[4]) plays no decode role
+        jdeg = tuple(jnp.asarray(_pad_rows(a, ncp, 1))
+                     for a in arrs[:4] + (arrs[5],))
         if len(_DEGREE_ARRAYS_JAX) >= _DEGREE_ARRAYS_CAP:
             _DEGREE_ARRAYS_JAX.clear()
         _DEGREE_ARRAYS_JAX[dkey] = jdeg
@@ -2423,14 +2495,57 @@ def _decode_jax(ctx: StepCostContext, dkey: tuple, arrs: tuple,
     jh = ctx.wafer._groups_cache.get(jkey) \
         if ctx.wafer.cache_enabled else None
     if jh is None:
+        # eff is keyed by hkey too (it folds B, dp, ep, top_k, n_experts)
         jh = (jnp.asarray(_pad_rows(ta_hops, ncp, 1.0)),
-              jnp.asarray(_pad_rows(sp_hops, ncp, 1.0)))
+              jnp.asarray(_pad_rows(sp_hops, ncp, 1.0)),
+              jnp.asarray(_pad_rows(eff, ncp, 1.0)))
         if ctx.wafer.cache_enabled:
             ctx.wafer._groups_cache[jkey] = jh
     sc = getattr(ctx, "_dec_sc", None)
     if sc is None:
         sc = ctx._dec_sc = _decode_scalars(ctx)
     return np.asarray(fn(jdeg, jh, sc))[:, :nC]
+
+
+# per-expert micro-batch dispatch overhead (s): every *distinct* expert a
+# replica activates in a layer is a separately launched sliced GEMV
+# (gather → tile GEMM → scatter bookkeeping on the dataflow fabric) — the
+# tiny-tile tax MoEntwine measures on wafer-scale meshes.  EP's whole
+# latency case is shrinking the resident pool this serializes over.
+T_EXPERT_DISPATCH = 0.5e-6
+
+
+def _decode_a2a_epilogue(ctx: StepCostContext, dp, ep, q_bytes, eff,
+                         a2a_load, a2a_hops):
+    """``(t_a2a, d2d_a2a, t_moe)``: per-layer dispatch+combine all-to-all
+    time, its per-step D2D byte·hop volume, and the per-layer expert
+    micro-batch dispatch overhead.
+
+    Host-side numpy for *both* Tier-B backends (the jitted twin exports
+    ``q_bytes``; candidate-sized epilogues stay on the pinned numpy path
+    — see ``_tierb_jax_fn`` on XLA's rewrites), so the two call sites are
+    bitwise-identical by construction.  Per ordered pair of an a2a set a
+    replica ships ``tok·top_k/ep`` token activations (balanced routing);
+    the bottleneck link carries ``a2a_load`` such pair flows.  Decode
+    messages are latency-bound like the ring-KV stream, so no
+    granularity ramp applies; the ×2 is dispatch + combine.  ``ep == 1``
+    rows contribute exact ``0.0`` a2a (adding it preserves the pre-EP
+    bits); ``t_moe`` serializes the ``eff·n_experts`` distinct experts a
+    replica activates per layer and is exact ``0.0`` for dense configs.
+    """
+    spec = ctx.spec
+    pair_bytes = q_bytes * ctx.cfg.top_k / ep
+    t_a2a = np.where(ep > 1,
+                     2 * (pair_bytes * a2a_load / spec.link_bw
+                          + a2a_hops * spec.hop_latency), 0.0)
+    d2d_a2a = np.where(ep > 1,
+                       ctx.n_l * (2 * pair_bytes * (ep - 1) * a2a_hops)
+                       * dp, 0.0)
+    if ctx.cfg.is_moe:
+        t_moe = eff * (ctx.cfg.n_experts * T_EXPERT_DISPATCH)
+    else:
+        t_moe = np.zeros_like(t_a2a)
+    return t_a2a, d2d_a2a, t_moe
 
 
 def simulate_decode_batch(ctx: StepCostContext,
@@ -2476,7 +2591,7 @@ def simulate_decode_batch(ctx: StepCostContext,
 
     dkey = tuple(d.key for d in degrees)
     arrs = _degree_columns(degrees)
-    dp, tp, sp, ta, _seq_par = arrs
+    dp, tp, sp, ta, _seq_par, ep = arrs
     B, S = ctx.batch, ctx.seq
     # decode feasibility: the die product must fit, tp cannot split more
     # query heads than the model has, and dp cannot exceed (or unevenly
@@ -2486,32 +2601,65 @@ def simulate_decode_batch(ctx: StepCostContext,
     feasible = (dp * tp * sp * ta <= n_dies) \
         & (tp <= max(cfg.n_heads, 1)) \
         & (dp <= B) & (B % dp == 0)
+    # expert parallelism is decode+MoE only: each of the ep expert groups
+    # hosts n_experts/ep experts and dp/ep whole replicas, so both
+    # divisibilities must hold (dense models admit only ep == 1)
+    if cfg.is_moe:
+        ep_ok = (ep == 1) | ((cfg.n_experts % ep == 0) & (dp % ep == 0))
+    else:
+        ep_ok = ep == 1
+    feasible = feasible & ep_ok
 
     # ---------------- ring hop factors (wafer-cached) ----------------------
     # keyed on everything the feasibility gate depends on (candidate
-    # identity, die budget, batch, head count): hops are only computed for
-    # feasible candidates, since groups_for can fail on infeasible ones
+    # identity, die budget, batch, head count, expert count): hops are
+    # only computed for feasible candidates, since groups_for can fail on
+    # infeasible ones
     hkey = ("_dechops", dkey, ctx.engine, ctx.tatp_bidirectional,
-            B, n_dies, cfg.n_heads)
+            B, n_dies, cfg.n_heads,
+            (cfg.n_experts, cfg.top_k) if cfg.is_moe else (0, 0))
     hops = ctx.wafer._groups_cache.get(hkey) \
         if ctx.wafer.cache_enabled else None
     if hops is None:
         ta_hops = np.ones(nC)
         sp_hops = np.ones(nC)
+        a2a_load = np.zeros(nC)
+        a2a_hops = np.zeros(nC)
         need = np.nonzero(feasible & ((ta > 1) | (sp > 1)))[0]
         for i in need:
             ta_hops[i], sp_hops[i] = _decode_ring_hops(ctx, degrees[i])
+        # dispatch/combine congestion of EP candidates: bottleneck link
+        # multiplicity + path lengths of the chosen expert placement
+        for i in np.nonzero(feasible & (ep > 1))[0]:
+            pl = _decode_expert_placement(ctx, degrees[i])
+            a2a_load[i] = pl.a2a_load
+            a2a_hops[i] = pl.a2a_hops
         if ctx.wafer.cache_enabled:
-            ctx.wafer._groups_cache[hkey] = (ta_hops, sp_hops)
+            ctx.wafer._groups_cache[hkey] = (ta_hops, sp_hops,
+                                             a2a_load, a2a_hops)
     else:
-        ta_hops, sp_hops = hops
+        ta_hops, sp_hops, a2a_load, a2a_hops = hops
+
+    # expected distinct-expert read fraction per replica: tok·top_k
+    # routing draws over the replica's n_experts/ep expert pool —
+    # ``eff·p_expert_total`` is the expert weight volume each iteration
+    # actually pulls from HBM.  Saturates at 1/ep for large batches (the
+    # whole resident shard), and at tok·top_k/n_experts for small ones;
+    # shrinking the per-replica pool is exactly why EP pays during
+    # decode.  Computed host-side for both Tier-B backends (pow is
+    # transcendental — XLA's expansion may differ from libm in ULP).
+    if cfg.is_moe:
+        eff = (1.0 - np.power(np.maximum(0.0, 1.0 - ep / cfg.n_experts),
+                              (B / dp) * cfg.top_k)) / ep
+    else:
+        eff = np.ones(nC)
 
     # fused jitted decode twin: search evaluations only — the final
     # (recorded) evaluation stays on the anchored numpy path, so ServePlan
     # numbers and plan hashes are backend-invariant by construction
     dec = None
     if ctx.tierb == "jax" and nC >= _JAX_MIN_BATCH and not final:
-        dec = _decode_jax(ctx, dkey, arrs, hkey, ta_hops, sp_hops)
+        dec = _decode_jax(ctx, dkey, arrs, hkey, ta_hops, sp_hops, eff)
     if dec is not None:
         (mem, oomf, t_comp, t_hbm, t_head,
          w_bytes, cache_bytes, kv_read, hbm_step, d2d_step,
@@ -2530,11 +2678,16 @@ def simulate_decode_batch(ctx: StepCostContext,
                                               + spec.hop_latency), 0.0)
         t_sched = np.where(ta > 1, (ta + 1) // 2 * T_DISPATCH, 0.0) \
             + np.where(sp > 1, T_DISPATCH, 0.0)
-        t_layer = t_coll + np.maximum(t_comp, t_ring) + t_sched
+        t_a2a, d2d_a2a, t_moe = _decode_a2a_epilogue(ctx, dp, ep, q_bytes,
+                                                     eff, a2a_load,
+                                                     a2a_hops)
+        t_layer = t_coll + np.maximum(t_comp, t_ring) + t_sched \
+            + t_moe + t_a2a
         lat = ctx.n_l * t_layer + t_head
         thr = B / lat
         flops_step = (ctx.dec_layer_flops * ctx.n_l
                       + ctx.dec_head_flops) * B
+        d2d_step = d2d_step + d2d_a2a
         energy = flops_step * spec.e_flop + hbm_step * spec.e_hbm \
             + d2d_step * spec.e_d2d + 450.0 * n_dies * lat
         power = energy / lat
@@ -2544,7 +2697,15 @@ def simulate_decode_batch(ctx: StepCostContext,
         tok = B / dp  # tokens computed per dp replica per iteration
 
         # ------------- memory (vectorized decode_memory_components) -------
-        w_bytes = BYTES_W * ctx.p_total / np.minimum(tp * ta, n_dies)
+        # EP splits the weight shard: dense tensors over tp·ta, expert
+        # tensors additionally over ep.  The ep == 1 operand is the
+        # pre-EP expression unchanged (bitwise-pinned baselines)
+        w_bytes = np.where(
+            ep > 1,
+            BYTES_W * ctx.p_dense_total / np.minimum(tp * ta, n_dies)
+            + BYTES_W * ctx.p_expert_total
+            / np.minimum(tp * ta * ep, n_dies),
+            BYTES_W * ctx.p_total / np.minimum(tp * ta, n_dies))
         kv_div, state_div = _decode_kv_divisors(cfg, dp, tp, sp, ta)
         kv_ctx = ctx.kv_seq_bytes - ctx.state_seq_bytes
         cache_bytes = B * (kv_ctx / kv_div
@@ -2557,7 +2718,14 @@ def simulate_decode_batch(ctx: StepCostContext,
         lin_flops = 2 * ctx.p_active * tok / (tp * ta)
         attn_flops = 4 * S * cfg.d_model * tok / (tp * sp * ta)
         t_flops = (lin_flops + attn_flops) / (spec.flops * DECODE_GEMV_EFF)
-        w_read = BYTES_W * ctx.p_active / (tp * ta)
+        # MoE weight read: dense tensors once per iteration (shared by
+        # the whole in-flight batch) + the expected distinct expert
+        # slice (``eff``) — mirrors the jitted kernel's select
+        if cfg.is_moe:
+            w_read = BYTES_W * ctx.p_active_dense / (tp * ta) \
+                + BYTES_W * ctx.p_expert_total * eff / (tp * ta)
+        else:
+            w_read = BYTES_W * ctx.p_active / (tp * ta)
         kv_read = tok * (kv_ctx / ctx.n_l) / (kv_div / dp)  # KV scan
         t_hbm = (w_read + kv_read) / spec.hbm_bw
         t_comp = np.maximum(t_flops, t_hbm)
@@ -2575,8 +2743,14 @@ def simulate_decode_batch(ctx: StepCostContext,
         t_sched = np.where(ta > 1, (ta + 1) // 2 * T_DISPATCH, 0.0) \
             + np.where(sp > 1, T_DISPATCH, 0.0)
 
+        # ------------- EP dispatch/combine all-to-all ----------------------
+        t_a2a, d2d_a2a, t_moe = _decode_a2a_epilogue(ctx, dp, ep, q_bytes,
+                                                     eff, a2a_load,
+                                                     a2a_hops)
+
         # ------------- per-token latency / throughput ----------------------
-        t_layer = t_coll + np.maximum(t_comp, t_ring) + t_sched
+        t_layer = t_coll + np.maximum(t_comp, t_ring) + t_sched \
+            + t_moe + t_a2a
         head_read = BYTES_W * cfg.d_model * cfg.vocab_size / (tp * ta)
         t_head = np.maximum(ctx.dec_head_flops * tok / (tp * ta)
                             / (spec.flops * DECODE_GEMV_EFF),
@@ -2593,6 +2767,7 @@ def simulate_decode_batch(ctx: StepCostContext,
                               + q_bytes * (ta - 1) * ta_hops
                               + np.where(tp > 1, 4 * q_bytes * (tp - 1),
                                          0.0)) * dp
+        d2d_step = d2d_step + d2d_a2a
         energy = flops_step * spec.e_flop + hbm_step * spec.e_hbm \
             + d2d_step * spec.e_d2d + 450.0 * n_dies * lat
         power = energy / lat
@@ -2606,6 +2781,8 @@ def simulate_decode_batch(ctx: StepCostContext,
                 reason = "tp exceeds heads"
             elif dp[i] > B or B % dp[i]:
                 reason = "dp does not divide batch"
+            elif not ep_ok[i]:
+                reason = "ep illegal for config"
             else:
                 reason = "degree exceeds dies"
             out.append(SimResult(math.inf, 0.0, math.inf, True, 0.0, 0.0,
@@ -2633,11 +2810,170 @@ def simulate_decode_batch(ctx: StepCostContext,
                 "kv_read_per_iter": float(kv_read[i]),
                 "ta_hops": int(ta_hops[i]),
                 "sp_hops": int(sp_hops[i]),
+                "ep": int(ep[i]),
+                "t_a2a_layer": float(t_a2a[i]),
+                "a2a_load": int(a2a_load[i]),
+                "a2a_hops": int(a2a_hops[i]),
+                "expert_read_frac": float(eff[i]),
+                "t_moe_disp_layer": float(t_moe[i]),
             },
             degrees=deg,
             engine=ctx.engine,
         ))
     return out
+
+
+def _decode_reference_ctx(ctx: StepCostContext,
+                          deg: ParallelDegrees) -> SimResult:
+    """Scalar replay of one :func:`simulate_decode_batch` candidate —
+    plain Python floats, one value at a time, in the exact operation
+    order of the vectorized numpy tier.  IEEE-754 scalar arithmetic is
+    bitwise-identical to numpy's float64 elementwise kernels, so this is
+    the decode objective's permanent anchor the same way
+    :func:`simulate_step_reference` anchors the training objective
+    (tests assert equality against both Tier-B backends)."""
+    cfg, spec = ctx.cfg, ctx.spec
+    n_dies = ctx.n_dies
+    dp, tp, sp, ta, ep = deg.dp, deg.tp, deg.sp, deg.tatp, deg.ep
+    B, S = ctx.batch, ctx.seq
+    ep_legal = ep == 1 or (cfg.is_moe and cfg.n_experts % ep == 0
+                           and dp % ep == 0)
+    feasible = (dp * tp * sp * ta <= n_dies
+                and tp <= max(cfg.n_heads, 1)
+                and dp <= B and B % dp == 0 and ep_legal)
+    if not feasible:
+        if tp > max(cfg.n_heads, 1):
+            reason = "tp exceeds heads"
+        elif dp > B or B % dp:
+            reason = "dp does not divide batch"
+        elif not ep_legal:
+            reason = "ep illegal for config"
+        else:
+            reason = "degree exceeds dies"
+        return SimResult(math.inf, 0.0, math.inf, True, 0.0, 0.0, 0.0,
+                         {"objective": "decode", "reason": reason},
+                         deg, ctx.engine)
+    ta_hops = sp_hops = 1.0
+    if ta > 1 or sp > 1:
+        th, sh = _decode_ring_hops(ctx, deg)
+        ta_hops, sp_hops = float(th), float(sh)
+    a2a_load = a2a_hops = 0.0
+    if ep > 1:
+        pl = _decode_expert_placement(ctx, deg)
+        a2a_load, a2a_hops = float(pl.a2a_load), float(pl.a2a_hops)
+    if cfg.is_moe:
+        eff = (1.0 - max(0.0, 1.0 - ep / cfg.n_experts)
+               ** ((B / dp) * cfg.top_k)) / ep
+    else:
+        eff = 1.0
+
+    tok = B / dp
+    if ep > 1:
+        w_bytes = (BYTES_W * ctx.p_dense_total / min(tp * ta, n_dies)
+                   + BYTES_W * ctx.p_expert_total
+                   / min(tp * ta * ep, n_dies))
+    else:
+        w_bytes = BYTES_W * ctx.p_total / min(tp * ta, n_dies)
+    kv_heads = max(cfg.n_kv_heads, 1)
+    kv_div = dp * sp * ta * min(tp, kv_heads)
+    state_div = dp * ta * tp
+    kv_ctx = ctx.kv_seq_bytes - ctx.state_seq_bytes
+    cache_bytes = B * (kv_ctx / kv_div + ctx.state_seq_bytes / state_div)
+    ws = tok * cfg.d_model * BYTES_ACT * DECODE_WS_COEFF
+    mem = w_bytes + cache_bytes + ws
+    oom = mem > spec.hbm_cap
+    lin_flops = 2 * ctx.p_active * tok / (tp * ta)
+    attn_flops = 4 * S * cfg.d_model * tok / (tp * sp * ta)
+    t_flops = (lin_flops + attn_flops) / (spec.flops * DECODE_GEMV_EFF)
+    if cfg.is_moe:
+        w_read = BYTES_W * ctx.p_active_dense / (tp * ta) \
+            + BYTES_W * ctx.p_expert_total * eff / (tp * ta)
+    else:
+        w_read = BYTES_W * ctx.p_active / (tp * ta)
+    kv_read = tok * (kv_ctx / ctx.n_l) / (kv_div / dp)
+    t_hbm = (w_read + kv_read) / spec.hbm_bw
+    t_comp = max(t_flops, t_hbm)
+    q_bytes = tok * cfg.d_model * BYTES_ACT
+    t_ring = (sp - 1) * (q_bytes / spec.link_bw
+                         + sp_hops * spec.hop_latency) \
+        + (ta - 1) * (q_bytes / spec.link_bw
+                      + ta_hops * spec.hop_latency)
+    ar_bytes = 2 * q_bytes / max(tp, 1)
+    t_coll = 2 * 2 * (tp - 1) * (ar_bytes / spec.link_bw
+                                 + spec.hop_latency) if tp > 1 else 0.0
+    t_sched = ((ta + 1) // 2 * T_DISPATCH if ta > 1 else 0.0) \
+        + (T_DISPATCH if sp > 1 else 0.0)
+    pair_bytes = q_bytes * cfg.top_k / ep
+    t_a2a = 2 * (pair_bytes * a2a_load / spec.link_bw
+                 + a2a_hops * spec.hop_latency) if ep > 1 else 0.0
+    t_moe = eff * (cfg.n_experts * T_EXPERT_DISPATCH) if cfg.is_moe \
+        else 0.0
+    t_layer = t_coll + max(t_comp, t_ring) + t_sched + t_moe + t_a2a
+    head_read = BYTES_W * cfg.d_model * cfg.vocab_size / (tp * ta)
+    t_head = max(ctx.dec_head_flops * tok / (tp * ta)
+                 / (spec.flops * DECODE_GEMV_EFF),
+                 head_read / spec.hbm_bw)
+    lat = ctx.n_l * t_layer + t_head
+    thr = B / lat
+    flops_step = (ctx.dec_layer_flops * ctx.n_l + ctx.dec_head_flops) * B
+    hbm_step = (w_read + kv_read) * ctx.n_l * dp * min(tp * ta, n_dies)
+    d2d_step = ctx.n_l * (q_bytes * (sp - 1) * sp_hops
+                          + q_bytes * (ta - 1) * ta_hops
+                          + (4 * q_bytes * (tp - 1) if tp > 1 else 0.0)) \
+        * dp
+    d2d_a2a = ctx.n_l * (2 * pair_bytes * (ep - 1) * a2a_hops) * dp \
+        if ep > 1 else 0.0
+    d2d_step = d2d_step + d2d_a2a
+    energy = flops_step * spec.e_flop + hbm_step * spec.e_hbm \
+        + d2d_step * spec.e_d2d + 450.0 * n_dies * lat
+    power = energy / lat
+    bw_cap = n_dies * 4 * spec.link_bw
+    bw_util = min(1.0, d2d_step / lat / bw_cap)
+    return SimResult(
+        step_time=float(lat),
+        throughput=float(thr),
+        mem_per_die=float(mem),
+        oom=bool(oom),
+        power=float(power),
+        power_eff=float(thr / power) if power > 0 else 0.0,
+        bw_util=float(bw_util),
+        breakdown={
+            "objective": "decode",
+            "t_comp_layer": float(t_comp),
+            "t_hbm_layer": float(t_hbm),
+            "t_ring_layer": float(t_ring),
+            "t_coll_layer": float(t_coll),
+            "t_head": float(t_head),
+            "w_bytes": float(w_bytes),
+            "cache_bytes": float(cache_bytes),
+            "kv_read_per_iter": float(kv_read),
+            "ta_hops": int(ta_hops),
+            "sp_hops": int(sp_hops),
+            "ep": int(ep),
+            "t_a2a_layer": float(t_a2a),
+            "a2a_load": int(a2a_load),
+            "a2a_hops": int(a2a_hops),
+            "expert_read_frac": float(eff),
+            "t_moe_disp_layer": float(t_moe),
+        },
+        degrees=deg,
+        engine=ctx.engine,
+    )
+
+
+def simulate_decode_reference(wafer: Wafer, cfg: ModelConfig, batch: int,
+                              seq: int, deg: ParallelDegrees,
+                              engine: str = "tcme", *,
+                              tatp_bidirectional: bool = True,
+                              dies: Optional[Sequence[int]] = None
+                              ) -> SimResult:
+    """Public scalar decode anchor (fresh context, one candidate) —
+    the decode twin of :func:`simulate_step_reference`."""
+    ctx = StepCostContext(wafer, cfg, batch, seq, engine,
+                          tatp_bidirectional=tatp_bidirectional,
+                          dies=dies, objective="decode",
+                          evaluator="reference")
+    return _decode_reference_ctx(ctx, deg)
 
 
 # ---------------------------------------------------------------------------

@@ -141,9 +141,19 @@ def dp_refine(ctx: StepCostContext, start: ParallelDegrees,
     """Pairwise coordinate-descent DP: optimise two parallel dimensions
     jointly (holding the rest fixed) so moves can trade degree between
     dimensions while the die count stays full — one batch-scored candidate
-    grid per dimension pair, iterated to a fixed point."""
+    grid per dimension pair, iterated to a fixed point.
+
+    ``dims`` may include ``"ep"`` (decode + MoE): expert parallelism
+    subdivides the dp replicas rather than consuming dies, so its
+    candidate values are the divisors of ``cfg.n_experts`` and it is
+    excluded from the die-budget product (the evaluator rejects
+    ``ep ∤ dp`` combinations as infeasible)."""
     n = ctx.n_dies
     vals = refine_values(n)
+    ep_vals = divisors(ctx.cfg.n_experts) if "ep" in dims else (1,)
+
+    def dim_vals(d):
+        return ep_vals if d == "ep" else vals
 
     cur = start
     cur_s = _score(ctx.evaluate(cur))
@@ -154,19 +164,21 @@ def dp_refine(ctx: StepCostContext, start: ParallelDegrees,
             for db in dims[i + 1:]:
                 rest = 1
                 for d in dims:
-                    if d not in (da, db):
+                    if d not in (da, db) and d != "ep":
                         rest *= getattr(cur, d)
                 # whole (va, vb) grid scored in one batch; subset totals are
                 # allowed (spare dies idle) — essential for degraded wafers
                 # with awkward alive counts
                 gkey = (n, da, db,
-                        tuple(getattr(cur, d) for d in _ALL_DIMS
-                              if d not in (da, db)), cur.seq_par)
+                        tuple(getattr(cur, d) for d in _ALL_DIMS + ("ep",)
+                              if d not in (da, db)), cur.seq_par,
+                        ctx.cfg.n_experts if "ep" in dims else 0)
                 cands = _GRID_CACHE.get(gkey)
                 if cands is None:
                     cands = [replace(cur, **{da: va, db: vb})
-                             for va in vals for vb in vals
-                             if rest * va * vb <= n]
+                             for va in dim_vals(da) for vb in dim_vals(db)
+                             if rest * (1 if da == "ep" else va)
+                             * (1 if db == "ep" else vb) <= n]
                     _GRID_CACHE[gkey] = cands
                 # the running-max scan equals the grid argmax (first tie
                 # wins in both), so the vectorized form picks the same cur
@@ -187,10 +199,17 @@ def dp_refine(ctx: StepCostContext, start: ParallelDegrees,
 
 def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
               pop: int = 12, gens: int = 6,
-              rng: Optional[random.Random] = None) -> ParallelDegrees:
+              rng: Optional[random.Random] = None,
+              dims: tuple = ("dp", "tp", "sp", "tatp")) -> ParallelDegrees:
     rng = rng or random.Random(0)
     n = ctx.n_dies
-    genome_dims = ("dp", "tp", "sp", "tatp")
+    # die-consuming genome dims; "ep" (decode + MoE) rides along with its
+    # own move set since it subdivides dp instead of consuming dies.  All
+    # extra rng draws are gated on has_ep so train trajectories (and the
+    # recorded baselines pinned to them) are untouched.
+    genome_dims = tuple(d for d in dims if d != "ep")
+    has_ep = "ep" in dims
+    ep_vals = divisors(ctx.cfg.n_experts) if has_ep else (1,)
 
     def fitness_of(res: SimResult) -> float:
         return res.throughput if res.ok else -1.0
@@ -201,7 +220,8 @@ def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
         # ``n % deg.total == 0`` froze the GA on degraded wafers with
         # awkward alive counts (e.g. 47 dies): every mutation/crossover
         # from a subset-total parent collapsed back to the parent.
-        return deg.total <= n
+        # Each expert group hosts whole replicas, so ep must divide dp.
+        return deg.total <= n and deg.dp % deg.ep == 0
 
     def remake(deg, **kw):
         # direct construction: dataclasses.replace went through asdict
@@ -209,11 +229,16 @@ def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
         return ParallelDegrees(kw.get("dp", deg.dp), kw.get("tp", deg.tp),
                                kw.get("sp", deg.sp),
                                kw.get("tatp", deg.tatp),
-                               seq_par=deg.seq_par)
+                               seq_par=deg.seq_par,
+                               ep=kw.get("ep", deg.ep))
 
     def mutate(deg):
         # swap move: trade a factor of 2 between two dimensions so the die
-        # count is preserved (plus occasional single-dim jitter)
+        # count is preserved (plus occasional single-dim jitter); EP moves
+        # resample the expert-group count from the divisor ladder
+        if has_ep and rng.random() < 0.3:
+            cand = remake(deg, ep=rng.choice(ep_vals))
+            return cand if legal(cand) else deg
         a, b = rng.sample(genome_dims, 2)
         va, vb = getattr(deg, a), getattr(deg, b)
         if va > 1 and rng.random() < 0.8:
@@ -225,7 +250,9 @@ def ga_refine(ctx: StepCostContext, seeds: list[ParallelDegrees], *,
     def crossover(a, b):
         cand = ParallelDegrees(rng.choice((a, b)).dp, rng.choice((a, b)).tp,
                                rng.choice((a, b)).sp,
-                               rng.choice((a, b)).tatp, seq_par=a.seq_par)
+                               rng.choice((a, b)).tatp, seq_par=a.seq_par,
+                               ep=rng.choice((a, b)).ep if has_ep
+                               else a.ep)
         return cand if legal(cand) else a
 
     popl = list(seeds)
@@ -259,7 +286,8 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                evaluator: str = "batch",
                stage1: Optional[str] = None,
                tierb: Optional[str] = None,
-               objective: str = "train") -> SolveResult:
+               objective: str = "train",
+               allow_ep: bool = True) -> SolveResult:
     """Dual-level solve.  ``evaluator="reference"`` routes every score
     through the seed scalar path (same trajectory — results are bitwise
     identical — used by benchmarks to measure the engine speedup);
@@ -283,7 +311,12 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
     sequences, ``seq`` = per-sequence KV budget): the same DP/GA search
     runs against :func:`repro.wafer.simulator.simulate_decode_batch`, so
     serving solves inherit every search-level optimization while trading
-    ring-KV stream latency and cache capacity instead of step time."""
+    ring-KV stream latency and cache capacity instead of step time.
+
+    For MoE configs the decode search additionally sweeps an ``ep``
+    expert-parallel axis (expert weights sharded ``n_experts/ep`` per
+    group, dispatch/combine all-to-alls priced by the traffic engine);
+    ``allow_ep=False`` pins ``ep=1`` for A/B sweeps of the EP win."""
     from repro.wafer.simulator import STRATEGY_SPACES
     spec = STRATEGY_SPACES[space]
     t0 = time.time()
@@ -292,6 +325,9 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
                                    evaluator=evaluator, stage1=stage1,
                                    tierb=tierb, objective=objective)
     ev0 = ctx.evaluated
+    use_ep = (objective == "decode" and allow_ep and cfg.is_moe
+              and cfg.n_experts > 1)
+    dims = _ALL_DIMS + ("ep",) if use_ep else _ALL_DIMS
     subs = partition_graph(cfg)  # level 0 (scopes the DP passes)
     start = ParallelDegrees(dp=ctx.n_dies, seq_par=spec["seq_par"])
     if objective == "decode" and ctx.n_dies > 1:
@@ -301,12 +337,20 @@ def dlws_solve(wafer: Wafer, cfg: ModelConfig, batch: int, seq: int, *,
         start2 = ParallelDegrees(dp=ctx.n_dies // r, tatp=r,
                                  seq_par=spec["seq_par"])
         seeds = [start, start2]
+        if use_ep:
+            # widest expert split the balanced seed admits — gives both
+            # DP and GA an in-basin EP starting point
+            ep0 = max((e for e in divisors(cfg.n_experts)
+                       if start2.dp % e == 0), default=1)
+            if ep0 > 1:
+                seeds.append(replace(start2, ep=ep0))
     else:
         seeds = [start]
     cur = seeds[-1]
     for _ in subs:  # one DP pass per residual-free sub-graph
-        cur = dp_refine(ctx, cur)
-    best = ga_refine(ctx, [cur] + seeds, rng=random.Random(seed))
+        cur = dp_refine(ctx, cur, dims)
+    best = ga_refine(ctx, [cur] + seeds, rng=random.Random(seed),
+                     dims=dims)
     res = ctx.evaluate(best, final=True)
     return SolveResult(res, best, engine, time.time() - t0,
                        ctx.evaluated - ev0,

@@ -93,16 +93,26 @@ def link_template(kind: str, group: tuple[int, ...],
     the uncached loop, so accumulating loads over it — one element at a
     time, or via ``np.bincount`` (also sequential) — is bitwise identical
     to recomputing every path.
+
+    ``kind="a2a"`` is the expert-dispatch structure: every *ordered* pair
+    of the group carries traffic (token activations routed to remote
+    expert shards and combined back), unlike the ring kinds where only
+    consecutive pairs do.
     """
-    struct = kind if kind in ("p2p", "p2p_chain") else "ring"
+    struct = kind if kind in ("p2p", "p2p_chain", "a2a") else "ring"
     key = (struct, group)
     cached = wafer._tmpl_cache.get(key)
     if cached is not None:
         return cached
-    probe = CommOp(struct if struct != "ring" else "p2p_ring", group, 0.0)
+    if struct == "a2a":
+        pairs = [(a, b) for a in group for b in group if a != b]
+    else:
+        probe = CommOp(struct if struct != "ring" else "p2p_ring",
+                       group, 0.0)
+        pairs = probe.pairs()
     links: list[Link] = []
     max_len = 0
-    for a, b in probe.pairs():
+    for a, b in pairs:
         path = wafer.xy_path(a, b)
         if path is None:
             path = wafer.detour_path(a, b)
@@ -156,6 +166,36 @@ def pair_hop_bytes(kind: str, glen: int, nbytes: float) -> float:
     if kind == "alltoall":
         return nbytes * (glen - 1) / glen
     raise ValueError(kind)
+
+
+def a2a_group_stats(sets: list[tuple[int, ...]],
+                    wafer: Wafer) -> tuple[int, int, float]:
+    """``(bottleneck multiplicity, max pair hops, mean pair hops)`` over
+    concurrently executing all-to-all sets.
+
+    Every ordered pair of every set routes XY (detour fallback on degraded
+    wafers); the bottleneck multiplicity is how many pair paths cross the
+    busiest directed link.  All pairs of an EP dispatch carry the same
+    per-pair volume, so ``bottleneck_bytes = multiplicity × pair_bytes``
+    exactly — the multiplicity stays an int and the one float multiply
+    happens in the (bitwise-pinned) decode cost path, not here.
+    """
+    ids_parts: list[np.ndarray] = []
+    max_len = 0
+    total_len = 0
+    n_pairs = 0
+    for g in sets:
+        tmpl = link_template("a2a", tuple(g), wafer)
+        if len(tmpl.ids):
+            ids_parts.append(tmpl.ids)
+        max_len = max(max_len, tmpl.max_len)
+        total_len += len(tmpl.ids)
+        n_pairs += len(g) * (len(g) - 1)
+    if not ids_parts or not n_pairs:
+        return 0, 0, 0.0
+    idx = np.concatenate(ids_parts) if len(ids_parts) > 1 else ids_parts[0]
+    loads = np.bincount(idx)
+    return int(loads.max()), int(max_len), total_len / n_pairs
 
 
 def max_load_entries(entries: list[tuple[np.ndarray, float]]

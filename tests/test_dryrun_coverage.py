@@ -1,5 +1,5 @@
-"""Assert the 40-cell × 2-mesh dry-run artifact set is complete and healthy
-(runs against results/dryrun; skipped if the sweep hasn't been run)."""
+"""Assert the full arch×shape×mesh dry-run artifact set is complete and
+healthy (runs against results/dryrun; skipped if the sweep hasn't run)."""
 
 import glob
 import json
@@ -42,8 +42,11 @@ def test_all_cells_present_and_ok():
                     n_skip += 1
     assert not missing, missing[:5]
     assert not bad, bad[:5]
-    assert n_ok == 64  # 32 runnable cells × 2 meshes
-    assert n_skip == 16  # 8 long_500k skips × 2 meshes
+    n_cells = len(ARCHITECTURES) * len(SHAPES)
+    n_runnable = sum(1 for a in ARCHITECTURES for s in SHAPES.values()
+                     if shape_applicable(get_config(a), s))
+    assert n_ok == 2 * n_runnable  # runnable cells × 2 meshes
+    assert n_skip == 2 * (n_cells - n_runnable)  # long_500k skips
 
 
 @pytest.mark.skipif(not glob.glob(os.path.join(DRYRUN, "*.json")),

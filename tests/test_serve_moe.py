@@ -1,0 +1,286 @@
+"""Expert-parallel MoE decode serving: three-tier bitwise parity of the
+EP cost path, plan-IR verification of the EP fields, router-drop
+accounting purity, and the EP-wins acceptance claim."""
+
+import dataclasses
+import math
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.wafer.simulator import (ParallelDegrees, SimResult,
+                                   StepCostContext, divisors,
+                                   simulate_decode_batch,
+                                   simulate_decode_reference)
+from repro.wafer.topology import Wafer, WaferSpec
+
+WAFER = Wafer(WaferSpec())
+CFG = get_config("olmoe-1b-7b")
+
+_FIELDS = ("step_time", "throughput", "mem_per_die", "oom", "power",
+           "power_eff", "bw_util")
+
+
+def _assert_bitwise_equal(a: SimResult, b: SimResult, label):
+    for f in _FIELDS:
+        assert getattr(a, f) == getattr(b, f), (label, f, getattr(a, f),
+                                                getattr(b, f))
+    assert a.breakdown == b.breakdown, (label, a.breakdown, b.breakdown)
+
+
+def _ep_candidates(n_dies: int) -> list[ParallelDegrees]:
+    """A decode candidate grid crossing (dp, tp, tatp) layouts with every
+    ep divisor of the expert pool — including combinations the legality
+    mask must reject (ep not dividing dp)."""
+    eps = [e for e in divisors(CFG.n_experts) if e <= 16] + \
+        [CFG.n_experts]
+    cands = []
+    for dp in divisors(n_dies):
+        for tp in divisors(n_dies // dp):
+            ta = n_dies // (dp * tp)
+            if dp * tp * ta != n_dies:
+                continue
+            for ep in eps:
+                cands.append(ParallelDegrees(dp, tp, 1, ta, ep=ep))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# (a) three-tier bitwise parity of the EP decode cost path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bidir", (True, False))
+@pytest.mark.parametrize("faulty", (False, True))
+def test_ep_decode_parity_scalar_numpy_jax(faulty, bidir):
+    """Property: over the full EP candidate grid — legal and illegal ep,
+    pristine and degraded wafers, both tatp ring directions — the numpy
+    Tier B, the jitted jax twin and the scalar reference agree bitwise,
+    breakdown dicts included."""
+    pytest.importorskip("jax")
+    from repro.wafer.simulator import _JAX_MIN_BATCH
+    wafer = WAFER.with_faults(dies=[5, 11], links=[(2, 3)]) if faulty \
+        else WAFER
+    dies = wafer.alive_dies()[:16] if faulty else None
+    n = 16 if faulty else WAFER.spec.n_dies
+    cands = _ep_candidates(n)
+    assert len(cands) >= _JAX_MIN_BATCH
+    kw = dict(objective="decode", tatp_bidirectional=bidir, dies=dies)
+    ctx_np = StepCostContext(wafer, CFG, 64, 2048, "tcme", **kw)
+    ctx_jx = StepCostContext(wafer.uncached(), CFG, 64, 2048, "tcme",
+                             tierb="jax", **kw)
+    np_res = simulate_decode_batch(ctx_np, cands)
+    jx_res = simulate_decode_batch(ctx_jx, cands)
+    n_ep_feasible = 0
+    for deg, ra, rb in zip(cands, np_res, jx_res):
+        label = ("decode-ep", deg.key, faulty, bidir)
+        _assert_bitwise_equal(ra, rb, label)
+        ref = simulate_decode_reference(wafer.uncached(), CFG, 64, 2048,
+                                        deg, "tcme",
+                                        tatp_bidirectional=bidir,
+                                        dies=dies)
+        _assert_bitwise_equal(ra, ref, label + ("reference",))
+        if deg.ep > 1 and ra.ok:
+            n_ep_feasible += 1
+            assert ra.breakdown["t_a2a_layer"] > 0.0
+            assert ra.breakdown["ep"] == deg.ep
+    assert n_ep_feasible > 0  # the grid must actually exercise EP
+
+
+def test_ep_illegal_candidates_infeasible():
+    """ep must divide both n_experts and dp; dense models admit ep==1
+    only."""
+    dense = get_config("deepseek-7b")
+    ctx = StepCostContext(WAFER, dense, 64, 2048, "tcme",
+                          objective="decode")
+    bad = [ParallelDegrees(8, 4, 1, 1, ep=2),
+           ParallelDegrees(8, 4, 1, 1, ep=8)]
+    for res in simulate_decode_batch(ctx, bad):
+        assert math.isinf(res.step_time)
+        assert res.breakdown.get("reason") == "ep illegal for config"
+    ctx_moe = StepCostContext(WAFER, CFG, 64, 2048, "tcme",
+                              objective="decode")
+    # ep=3 does not divide n_experts=64; ep=8 does not divide dp=4
+    bad_moe = [ParallelDegrees(8, 4, 1, 1, ep=3),
+               ParallelDegrees(4, 8, 1, 1, ep=8)]
+    for res in simulate_decode_batch(ctx_moe, bad_moe):
+        assert math.isinf(res.step_time)
+        assert res.breakdown.get("reason") == "ep illegal for config"
+
+
+# ---------------------------------------------------------------------------
+# (b) the EP-wins acceptance claim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ("olmoe-1b-7b", "deepseek-v3-moe"))
+def test_ep_solve_strictly_beats_ep1(arch):
+    """The decode solver must grow an ep>1 degree for the MoE archs and
+    its plan must have strictly better predicted TPOT than the best
+    ep=1 plan, at equal memory feasibility."""
+    from repro.wafer.solver import dlws_solve
+    cfg = get_config(arch)
+    s_ep = dlws_solve(WAFER, cfg, 64, 2048, objective="decode")
+    s_no = dlws_solve(WAFER, cfg, 64, 2048, objective="decode",
+                      allow_ep=False)
+    assert s_ep.config.ep > 1
+    assert s_no.config.ep == 1
+    assert s_ep.best.step_time < s_no.best.step_time
+    assert not s_ep.best.oom and not s_no.best.oom
+
+
+def test_dense_solve_never_grows_ep():
+    from repro.wafer.solver import dlws_solve
+    cfg = get_config("deepseek-7b")
+    s = dlws_solve(WAFER, cfg, 64, 2048, objective="decode")
+    assert s.config.ep == 1
+
+
+# ---------------------------------------------------------------------------
+# (c) plan IR: EP fields survive the disk cache and corruptions are
+#     rejected by the static verifier
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ep_plan(tmp_path_factory):
+    from repro.core.plan import compile_serve_plan
+    cache = str(tmp_path_factory.mktemp("splans"))
+    plan = compile_serve_plan(WAFER, CFG, max_batch=32, max_seq=512,
+                              cache_dir=cache)
+    return plan, cache
+
+
+def test_ep_plan_roundtrips_disk_cache(ep_plan):
+    from repro.core.plan import ServePlan, cached_serve_plan
+    plan, cache = ep_plan
+    assert plan.ep > 1
+    assert len(plan.expert_placement) == plan.ep
+    assert plan.a2a_bytes_per_token > 0
+    # in-memory dict roundtrip
+    rt = ServePlan.from_dict(plan.to_dict())
+    assert rt.plan_hash == plan.plan_hash
+    assert rt.expert_placement == plan.expert_placement
+    assert rt.decode_degrees().ep == plan.ep
+    # disk roundtrip through the replan governor's revert probe
+    hit = cached_serve_plan(plan, CFG, WAFER, cache_dir=cache)
+    assert hit is not None
+    assert hit.plan_hash == plan.plan_hash
+    assert hit.expert_placement == plan.expert_placement
+    # the on-disk file passes schema + hash + plan verification
+    from repro.analysis.verify import verify_plan_file
+    from repro.analysis.violations import errors
+    files = [f for f in os.listdir(cache) if f.startswith("splan_")]
+    assert files
+    _, vs = verify_plan_file(os.path.join(cache, files[0]), WAFER, CFG)
+    assert not errors(vs), vs
+
+
+def test_verifier_rejects_corrupted_ep_plans(ep_plan):
+    from repro.analysis.verify import verify_plan
+    from repro.analysis.violations import errors
+    plan, _ = ep_plan
+    assert not errors(verify_plan(plan, WAFER, CFG))
+
+    def codes(p):
+        return [v.code for v in errors(verify_plan(p, WAFER, CFG))]
+
+    # non-bijective placement: one die hosted by two expert groups
+    dup = plan.expert_placement[:-1] + (plan.expert_placement[0],)
+    assert "serve/ep-placement-invalid" in codes(
+        dataclasses.replace(plan, expert_placement=dup))
+    # wrong group count
+    assert "serve/ep-placement-invalid" in codes(
+        dataclasses.replace(plan, expert_placement=plan.expert_placement[:1]))
+    # placement referencing dies outside the alive set
+    stray = ((10_000,),) + plan.expert_placement[1:]
+    assert "serve/ep-placement-invalid" in codes(
+        dataclasses.replace(plan, expert_placement=stray))
+    # ep that divides neither n_experts nor dp
+    assert "serve/ep-invalid" in codes(dataclasses.replace(plan, ep=3))
+    # ep=1 plans must not carry a placement
+    assert "serve/ep-placement-invalid" in codes(
+        dataclasses.replace(plan, ep=1))
+
+
+def test_verifier_catches_expert_memory_over_hbm():
+    """A plan whose recorded mesh cannot hold its (EP-sharded) expert
+    weights per die must be flagged unless it honestly reports OOM."""
+    from repro.analysis.verify import verify_plan
+    from repro.analysis.violations import errors
+    from repro.core.plan import compile_serve_plan
+    cfg = get_config("qwen3-moe-235b-a22b")  # 128 experts, wafer-filling
+    plan = compile_serve_plan(WAFER, cfg, max_batch=16, max_seq=256,
+                              use_cache=False)
+    assert not errors(verify_plan(plan, WAFER, cfg))
+    # corrupt the mesh to a pure-dp layout: every die must then hold a
+    # full weight copy, far over HBM, while predicted still claims fit
+    inner = dataclasses.replace(plan.plan, dp=plan.plan.total_degree,
+                                tp=1, sp=1, tatp=1)
+    bad = dataclasses.replace(
+        plan, plan=inner, ep=1, expert_placement=(),
+        a2a_bytes_per_token=0.0,
+        kv_layout=(("dp", inner.dp), ("sp", 1), ("tp", 1), ("tatp", 1)))
+    codes = [v.code for v in errors(verify_plan(bad, WAFER, cfg))]
+    assert "serve/kv-over-hbm" in codes, codes
+
+
+# ---------------------------------------------------------------------------
+# (d) router accounting: drops surfaced, scheduling untouched
+# ---------------------------------------------------------------------------
+
+
+def test_router_sim_capacity_accounting():
+    from repro.serve.engine import ExpertRouterSim
+    r = ExpertRouterSim(CFG, ep=8, seed=0)
+    r.observe(32)
+    r.observe(32)
+    assert r.routed == 2 * 32 * CFG.top_k
+    assert r.routed == sum(r.load) + r.dropped
+    assert r.dropped > 0  # cap = round(32·8/64·1.25) = 5 must overflow
+    assert sum(r.ep_group_load()) == sum(r.load)
+    assert len(r.ep_group_load()) == 8
+    # deterministic under the seed
+    r2 = ExpertRouterSim(CFG, ep=8, seed=0)
+    r2.observe(32)
+    r2.observe(32)
+    assert r2.load == r.load and r2.dropped == r.dropped
+
+
+def test_router_sim_grouped_routing_stays_in_groups():
+    cfg = get_config("deepseek-v3-moe")
+    from repro.serve.engine import ExpertRouterSim
+    r = ExpertRouterSim(cfg, ep=1, seed=3)
+    gsz = cfg.n_experts // cfg.n_expert_groups
+    for _ in range(200):
+        picked = r._route_one()
+        assert len(picked) == cfg.top_k
+        groups = {e // gsz for e in picked}
+        assert len(groups) <= cfg.top_k_groups
+    r.observe(16)
+    assert r.routed == 16 * cfg.top_k
+
+
+def test_router_accounting_is_pure(ep_plan):
+    """A run with MoE accounting must produce the identical admission
+    trace and timeline as one without (the router reads no engine state
+    and advances no clock)."""
+    from repro.serve.engine import (CostModelExecutor, ServeEngine,
+                                    poisson_arrivals)
+    plan, _ = ep_plan
+    reqs = poisson_arrivals(20, rate=100.0, seed=5, prompt_len=32,
+                            max_new_tokens=16)
+    rep_moe = ServeEngine(plan, CostModelExecutor(plan, CFG, WAFER),
+                          cfg=CFG).run(reqs)
+    rep_off = ServeEngine(plan, CostModelExecutor(plan, CFG, WAFER),
+                          cfg=None).run(reqs)
+    assert rep_moe.trace_hash == rep_off.trace_hash
+    assert rep_moe.makespan == rep_off.makespan
+    assert rep_moe.moe_routed_tokens > 0
+    assert rep_moe.moe_dropped_tokens > 0  # overflow surfaced, not silent
+    assert rep_moe.moe_drop_rate == pytest.approx(
+        rep_moe.moe_dropped_tokens / rep_moe.moe_routed_tokens)
+    assert len(rep_moe.expert_load) == CFG.n_experts
+    assert len(rep_moe.ep_group_load) == plan.ep
+    assert rep_off.moe_routed_tokens == 0 and rep_off.expert_load == ()
